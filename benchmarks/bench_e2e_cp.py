@@ -1,0 +1,62 @@
+"""Paper Fig. 5 — end-to-end CP training/inference step comparison.
+
+Datasets {WLB-LLM, Pile, RedPajama} x heads {16, 32} x CP {4, 8}, context
+window 128K, head dim 128 (the paper's grid).  Per method, per sampled
+packed sequence: build the plan, evaluate the v5e cost model, report mean
+step time and the speedup of FlashCP normalized to Llama3 CP (the paper's
+normalization).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.baselines import BASELINE_PLANNERS
+from repro.data.distributions import make_rng
+from repro.data.packing import pack_sequence
+
+from .cost_model import ModelDims, step_breakdown
+
+METHODS = ["llama3", "per_doc", "ring_zigzag", "flashcp"]
+DATASETS = ["wlb_llm", "pile", "redpajama"]
+
+
+def evaluate(dataset: str, cp: int, heads: int, *, context=131072,
+             n_seqs=12, train=True, seed=0) -> dict[str, float]:
+    rng = make_rng(seed)
+    dims = ModelDims(num_heads=heads, kv_heads=8, head_dim=128)
+    totals = {m: [] for m in METHODS}
+    for _ in range(n_seqs):
+        lens = pack_sequence(dataset, context, rng)
+        for m in METHODS:
+            plan = BASELINE_PLANNERS[m](lens, cp)
+            totals[m].append(
+                step_breakdown(plan, dims, train=train)["total_s"])
+    return {m: float(np.mean(v)) for m, v in totals.items()}
+
+
+def run() -> list[str]:
+    rows = []
+    speedups_pd, speedups_l3, speedups_ring = [], [], []
+    for dataset in DATASETS:
+        for heads in (16, 32):
+            for cp in (4, 8):
+                for train in (True, False):
+                    t = evaluate(dataset, cp, heads, train=train)
+                    mode = "train" if train else "infer"
+                    rows.append(
+                        f"fig5_{dataset}_H{heads}_CP{cp}_{mode},"
+                        f"{t['flashcp']*1e6:.0f},"
+                        + ";".join(
+                            f"speedup_vs_{m}={t[m]/t['flashcp']:.2f}"
+                            for m in METHODS if m != "flashcp"))
+                    speedups_l3.append(t["llama3"] / t["flashcp"])
+                    speedups_pd.append(t["per_doc"] / t["flashcp"])
+                    speedups_ring.append(t["ring_zigzag"] / t["flashcp"])
+    rows.append(f"fig5_mean_speedup_vs_llama3,,"
+                f"{np.mean(speedups_l3):.2f}x_paper_1.38x")
+    rows.append(f"fig5_mean_speedup_vs_perdoc,,"
+                f"{np.mean(speedups_pd):.2f}x_paper_up_to_1.63x")
+    rows.append(f"fig5_mean_speedup_vs_ring_zigzag,,"
+                f"{np.mean(speedups_ring):.2f}x_paper_2.14x")
+    return rows

@@ -1,0 +1,26 @@
+"""Planner throughput: Algorithm 1 must be negligible next to a training
+step (it runs on host per packed sequence inside the input pipeline)."""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core.heuristic import flashcp_plan
+from repro.data.distributions import make_rng
+from repro.data.packing import pack_sequence
+
+
+def run() -> list[str]:
+    rows = []
+    for dataset in ("wlb_llm", "pile"):
+        rng = make_rng(0)
+        seqs = [pack_sequence(dataset, 131072, rng) for _ in range(10)]
+        t0 = time.perf_counter()
+        for lens in seqs:
+            flashcp_plan(lens, 16)
+        dt = (time.perf_counter() - t0) / len(seqs)
+        rows.append(f"planner_runtime_{dataset}_cp16,{dt*1e6:.0f},"
+                    f"docs_mean={np.mean([len(s) for s in seqs]):.0f}")
+    return rows

@@ -1,0 +1,46 @@
+"""Benchmark harness: one suite per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV lines (us_per_call empty where the
+row is a ratio/summary).  Suites:
+
+  fig3   kernel efficiency vs sharding granularity
+  fig5   e2e CP comparison (3 datasets x heads x CP size, train+infer)
+  fig6   latency breakdown (comm/attn/other) + comm-reduction headline
+  fig7   context-window sweep
+  table2 exact (B&B) vs heuristic optimality
+  extra  planner runtime
+
+Usage: PYTHONPATH=src python -m benchmarks.run [suite ...]
+"""
+
+from __future__ import annotations
+
+import sys
+import time
+
+
+def main() -> None:
+    from . import (bench_breakdown, bench_context_window, bench_e2e_cp,
+                   bench_ilp_vs_heuristic, bench_kernel_efficiency,
+                   bench_planner_runtime)
+
+    suites = {
+        "fig3": bench_kernel_efficiency.run,
+        "fig5": bench_e2e_cp.run,
+        "fig6": bench_breakdown.run,
+        "fig7": bench_context_window.run,
+        "table2": bench_ilp_vs_heuristic.run,
+        "planner": bench_planner_runtime.run,
+    }
+    want = sys.argv[1:] or list(suites)
+    print("name,us_per_call,derived")
+    for name in want:
+        t0 = time.time()
+        for row in suites[name]():
+            print(row, flush=True)
+        print(f"suite_{name}_wallclock,{(time.time()-t0)*1e6:.0f},",
+              flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,31 @@
+"""Serving example: batched prefill + token-by-token decode with KV cache.
+
+    PYTHONPATH=src python examples/serve_decode.py --requests 4 --gen 16
+"""
+
+import argparse
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import types
+
+from repro.launch.serve import serve
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="starcoder2_3b")
+    ap.add_argument("--requests", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=64)
+    ap.add_argument("--gen", type=int, default=16)
+    args = ap.parse_args()
+    out = serve(types.SimpleNamespace(
+        arch=args.arch, smoke=True, mesh="1x1", requests=args.requests,
+        prompt_len=args.prompt_len, gen=args.gen))
+    print("generated token matrix shape:", out["tokens"].shape)
+
+
+if __name__ == "__main__":
+    main()

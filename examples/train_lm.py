@@ -1,0 +1,71 @@
+"""End-to-end driver: train a ~160M-parameter LM with FlashCP packing.
+
+The model (12L, d=768, 12H, vocab 50304 — GPT-2-small scale; 162M params
+with untied head)
+trains on packed multi-document sequences with document-masked attention,
+through the identical framework path used by the production configs
+(planner -> plan encoding -> CP-capable attention -> AdamW -> checkpoints).
+
+A few hundred steps on CPU:
+
+    PYTHONPATH=src python examples/train_lm.py --steps 300
+
+(~2-4 s/step at seq 256 x batch 1 on one CPU core; checkpoints land in
+/tmp/repro_lm100m.  Use --steps 20 for a quick look.)
+"""
+
+import argparse
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import dataclasses
+import types
+
+import repro.configs as configs
+from repro.configs.base import ModelConfig
+
+LM_100M = ModelConfig(
+    name="lm_124m",
+    family="dense",
+    num_layers=12,
+    d_model=768,
+    num_heads=12,
+    num_kv_heads=12,
+    d_ff=3072,
+    vocab_size=50304,
+    head_dim=64,
+    mlp="gelu",
+    dtype="float32",
+)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--seq-len", type=int, default=256)
+    ap.add_argument("--batch", type=int, default=1)
+    ap.add_argument("--lr", type=float, default=6e-4)
+    ap.add_argument("--dataset", default="pile")
+    args = ap.parse_args()
+
+    # register the example config and drive the standard trainer
+    configs.ARCHS[LM_100M.name] = LM_100M
+    print(f"training {LM_100M.name}: "
+          f"{LM_100M.param_count()/1e6:.0f}M params, "
+          f"seq {args.seq_len}, batch {args.batch}, {args.steps} steps")
+
+    from repro.launch.train import train
+    out = train(types.SimpleNamespace(
+        arch=LM_100M.name, smoke=False, mesh="1x1", strategy="flashcp",
+        attention_impl="xla", dataset=args.dataset, seq_len=args.seq_len,
+        batch=args.batch, steps=args.steps, lr=args.lr, q_chunk=128,
+        grad_compression="none", checkpoint_dir="/tmp/repro_lm100m",
+        ckpt_every=100, log_every=10, resume=True, prefetch=True,
+        no_remat=False, fail_at=-1))
+    print(f"done: loss {out['losses'][0]:.3f} -> {out['losses'][-1]:.3f}")
+
+
+if __name__ == "__main__":
+    main()

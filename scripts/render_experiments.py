@@ -1,0 +1,61 @@
+"""Render EXPERIMENTS.md sections (§Dry-run, §Roofline) from
+dryrun_results.json.  Re-run after each dry-run sweep; §Perf is maintained
+by hand (it is the hypothesis->change->measure log)."""
+
+import json
+import os
+import sys
+
+ROOT = os.path.join(os.path.dirname(__file__), "..")
+
+
+def fmt_table(recs, mesh):
+    rows = [r for r in recs if r["mesh"] == mesh]
+    rows.sort(key=lambda r: (r["arch"], r["shape"]))
+    out = [
+        "| arch | shape | strategy | peak GiB/dev | compute (s) | "
+        "memory (s) | collective (s) | dominant | useful FLOPs | "
+        "CP all-gather GiB |",
+        "|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in rows:
+        if r["status"] == "skip":
+            out.append(f"| {r['arch']} | {r['shape']} | — | — | — | — | — | "
+                       f"skipped (sub-quadratic required) | — | — |")
+            continue
+        if r["status"] != "ok":
+            out.append(f"| {r['arch']} | {r['shape']} | — | ERROR | | | | "
+                       f"{r.get('error','')[:40]} | | |")
+            continue
+        rf = r["roofline"]
+        mem = r["memory"]["peak_bytes_per_device"] / 2 ** 30
+        uf = r.get("useful_flops_frac")
+        ag = r["collectives"]["by_kind"].get("all-gather", 0) / 2 ** 30
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r.get('strategy','')} | "
+            f"{mem:.2f} | {rf['compute_s']:.3f} | {rf['memory_s']:.3f} | "
+            f"{rf['collective_s']:.3f} | {rf['dominant']} | "
+            f"{uf:.2f} | {ag:.2f} |" if uf else
+            f"| {r['arch']} | {r['shape']} | {r.get('strategy','')} | "
+            f"{mem:.2f} | {rf['compute_s']:.3f} | {rf['memory_s']:.3f} | "
+            f"{rf['collective_s']:.3f} | {rf['dominant']} | — | {ag:.2f} |")
+    return "\n".join(out)
+
+
+def main():
+    path = sys.argv[1] if len(sys.argv) > 1 else \
+        os.path.join(ROOT, "dryrun_results.json")
+    recs = json.load(open(path))
+    ok = [r for r in recs if r["status"] == "ok"]
+    skip = [r for r in recs if r["status"] == "skip"]
+    err = [r for r in recs if r["status"] not in ("ok", "skip")]
+    print(f"## Matrix status: {len(ok)} compiled, {len(skip)} documented "
+          f"skips, {len(err)} errors\n")
+    print("### Single-pod 16x16 (256 chips) — baseline roofline table\n")
+    print(fmt_table(recs, "16x16"))
+    print("\n### Multi-pod 2x16x16 (512 chips)\n")
+    print(fmt_table(recs, "2x16x16"))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,17 @@
+"""repro: FlashCP — load-balanced, communication-efficient context
+parallelism for LLM training, as a production-grade JAX framework.
+
+Subpackages:
+  core       — the paper's contribution (planner, sharding-aware comm, CP
+               attention islands)
+  kernels    — Pallas TPU doc-masked flash attention (+ ref oracle)
+  models     — dense/MoE/hybrid/SSM/audio/VLM decoder zoo
+  data       — packing + dataset length distributions + pipeline
+  optim      — AdamW, schedules, clipping, gradient compression
+  checkpoint — atomic async resharding checkpoints
+  runtime    — sharding rules, fault tolerance, elastic, straggler
+  configs    — the 10 assigned architectures
+  launch     — mesh, dry-run, train, serve
+"""
+
+__version__ = "1.0.0"

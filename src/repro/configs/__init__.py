@@ -1,0 +1,42 @@
+"""Architecture registry: ``--arch <id>`` resolution.
+
+All ten assigned architectures (plus aliases with dashes).  Each module
+defines ``CONFIG: ModelConfig`` with the exact published dimensions.
+"""
+
+from __future__ import annotations
+
+from .base import ModelConfig, RunConfig, ShapeConfig, SHAPES, reduce_for_smoke
+
+from . import (
+    dbrx_132b,
+    granite_34b,
+    internvl2_1b,
+    jamba_v0_1_52b,
+    musicgen_medium,
+    olmoe_1b_7b,
+    qwen3_32b,
+    starcoder2_3b,
+    starcoder2_7b,
+    xlstm_350m,
+)
+
+ARCHS: dict[str, ModelConfig] = {
+    m.CONFIG.name: m.CONFIG
+    for m in (
+        musicgen_medium, qwen3_32b, granite_34b, starcoder2_7b,
+        starcoder2_3b, olmoe_1b_7b, dbrx_132b, internvl2_1b,
+        jamba_v0_1_52b, xlstm_350m,
+    )
+}
+
+
+def get_config(name: str) -> ModelConfig:
+    key = name.replace("-", "_").replace(".", "_")
+    if key not in ARCHS:
+        raise KeyError(f"unknown arch {name!r}; available: {sorted(ARCHS)}")
+    return ARCHS[key]
+
+
+__all__ = ["ModelConfig", "RunConfig", "ShapeConfig", "SHAPES", "ARCHS",
+           "get_config", "reduce_for_smoke"]

@@ -1,0 +1,189 @@
+"""Config system: model architecture, input shapes, mesh, and run options.
+
+Plain frozen dataclasses (no external deps).  Every assigned architecture
+gets one module in this package defining ``CONFIG``; the registry in
+``repro.configs`` resolves ``--arch`` names.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Literal
+
+__all__ = ["ModelConfig", "ShapeConfig", "RunConfig", "SHAPES", "reduce_for_smoke"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: Literal["dense", "moe", "hybrid", "ssm", "audio", "vlm"]
+    num_layers: int
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 0                 # 0 -> d_model // num_heads
+    qk_norm: bool = False
+    rope_theta: float = 10_000.0
+    mlp: Literal["glu", "gelu"] = "glu"   # silu-GLU (llama) vs plain gelu MLP
+    # --- MoE ----------------------------------------------------------- #
+    num_experts: int = 0
+    top_k: int = 0
+    moe_every: int = 1                # apply MoE FFN every k-th layer
+    capacity_factor: float = 1.25
+    # --- hybrid (jamba): 1 attention layer per `attn_every` layers ----- #
+    attn_every: int = 0               # 0 -> attention everywhere
+    attn_offset: int = 4              # which layer inside the period is attn
+    mamba_d_state: int = 16
+    mamba_d_conv: int = 4
+    mamba_expand: int = 2
+    # --- xLSTM --------------------------------------------------------- #
+    slstm_every: int = 0              # 1 sLSTM block per k blocks (rest mLSTM)
+    # --- modality frontend (stubbed per spec) -------------------------- #
+    frontend: Literal["none", "audio_frames", "vit_patches"] = "none"
+    num_patch_tokens: int = 256       # vlm: image tokens at sequence start
+    # --- numerics ------------------------------------------------------ #
+    norm_eps: float = 1e-5
+    dtype: str = "bfloat16"
+    tie_embeddings: bool = False
+
+    @property
+    def resolved_head_dim(self) -> int:
+        return self.head_dim or self.d_model // self.num_heads
+
+    @property
+    def uses_attention(self) -> bool:
+        return self.family != "ssm"
+
+    @property
+    def sub_quadratic(self) -> bool:
+        """Can this arch run 500K-token decode (SSM/hybrid families)?"""
+        return self.family in ("ssm", "hybrid")
+
+    def param_count(self) -> int:
+        """Analytic parameter count (embeddings included)."""
+        d, dff, L = self.d_model, self.d_ff, self.num_layers
+        hd = self.resolved_head_dim
+        q = d * self.num_heads * hd
+        kv = 2 * d * self.num_kv_heads * hd
+        o = self.num_heads * hd * d
+        attn = q + kv + o
+
+        if self.mlp == "glu":
+            ffn_dense = 3 * d * dff
+        else:
+            ffn_dense = 2 * d * dff
+
+        di = d * self.mamba_expand
+        dt_rank = max(1, d // 16)
+        mamba = (2 * d * di                         # in_proj
+                 + self.mamba_d_conv * di + di      # conv
+                 + di * (dt_rank + 2 * self.mamba_d_state)   # x_proj
+                 + dt_rank * di + di                # dt_proj
+                 + di * self.mamba_d_state + di     # A_log, D
+                 + di * d)                          # out_proj
+        mlstm = 2 * d * di + 3 * di * di \
+            + 2 * di * self.num_heads + di * d
+        slstm = 5 * d * d
+
+        total = 0
+        for layer in range(L):
+            is_attn = self.attn_every == 0 or \
+                (layer % self.attn_every == self.attn_offset)
+            if self.family == "ssm":
+                is_slstm = self.slstm_every and \
+                    layer % self.slstm_every == self.slstm_every - 1
+                total += slstm if is_slstm else mlstm
+            elif is_attn:
+                total += attn
+            else:  # mamba mixer
+                total += mamba
+            is_moe = self.num_experts > 0 and (layer % self.moe_every == self.moe_every - 1)
+            if dff > 0:
+                if is_moe:
+                    total += self.num_experts * ffn_dense + d * self.num_experts
+                else:
+                    total += ffn_dense
+            total += 2 * d  # norms
+        total += self.vocab_size * d  # embed
+        if not self.tie_embeddings:
+            total += self.vocab_size * d  # head
+        return total
+
+    def active_param_count(self) -> int:
+        """Parameters touched per token (MoE: top_k of num_experts)."""
+        if self.num_experts == 0:
+            return self.param_count()
+        full = self.param_count()
+        d, dff = self.d_model, self.d_ff
+        ffn_dense = (3 if self.mlp == "glu" else 2) * d * dff
+        n_moe_layers = sum(
+            1 for layer in range(self.num_layers)
+            if layer % self.moe_every == self.moe_every - 1)
+        inactive = n_moe_layers * (self.num_experts - self.top_k) * ffn_dense
+        return full - inactive
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeConfig:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: Literal["train", "prefill", "decode"]
+
+
+#: the assigned input-shape set (applies to every architecture)
+SHAPES: dict[str, ShapeConfig] = {
+    "train_4k": ShapeConfig("train_4k", 4_096, 256, "train"),
+    "prefill_32k": ShapeConfig("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": ShapeConfig("decode_32k", 32_768, 128, "decode"),
+    "long_500k": ShapeConfig("long_500k", 524_288, 1, "decode"),
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class RunConfig:
+    """Everything the launcher needs besides the model itself."""
+    arch: str = "starcoder2_3b"
+    shape: str = "train_4k"
+    dataset: str = "wlb_llm"
+    cp_strategy: Literal["flashcp", "llama3", "per_doc", "ring", "contiguous"] = "flashcp"
+    attention_impl: Literal["xla", "pallas"] = "xla"
+    target_imbalance: float = 1.05
+    # optimizer
+    lr: float = 3e-4
+    weight_decay: float = 0.1
+    warmup_steps: int = 100
+    total_steps: int = 1000
+    grad_clip: float = 1.0
+    # distributed-training options
+    grad_compression: Literal["none", "topk", "int8"] = "none"
+    kv_comm_dtype: Literal["native", "int8"] = "native"
+    remat: bool = True
+    checkpoint_every: int = 200
+    checkpoint_dir: str = "/tmp/repro_ckpt"
+    seed: int = 0
+
+
+def reduce_for_smoke(cfg: ModelConfig) -> ModelConfig:
+    """Shrink a config to smoke-test size, preserving its family topology
+    (GQA ratio, MoE top-k, hybrid interleave, frontend)."""
+    kv = max(1, min(cfg.num_kv_heads, 2))
+    heads = max(kv, min(cfg.num_heads, 4))
+    heads = (heads // kv) * kv or kv
+    return dataclasses.replace(
+        cfg,
+        num_layers=min(cfg.num_layers, 4 if cfg.attn_every == 0 else cfg.attn_every),
+        d_model=64,
+        num_heads=heads,
+        num_kv_heads=kv,
+        head_dim=16,
+        d_ff=128 if cfg.d_ff > 0 else 0,
+        vocab_size=min(cfg.vocab_size, 512),
+        num_experts=min(cfg.num_experts, 4),
+        top_k=min(cfg.top_k, 2),
+        num_patch_tokens=min(cfg.num_patch_tokens, 16),
+        mamba_d_state=8,
+        dtype="float32",
+    )

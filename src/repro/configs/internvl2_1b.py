@@ -1,0 +1,25 @@
+"""internvl2-1b [vlm] — 24L d_model=896 14H (GQA kv=2) d_ff=4864
+vocab=151655 — InternViT + InternLM2 [arXiv:2404.16821; hf].
+
+Per the assignment spec only the LM backbone is modeled; the InternViT
+frontend is a stub whose ``input_specs()`` provides precomputed patch
+embeddings (256 image tokens forming the leading document of the packed
+sequence).
+"""
+
+from .base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="internvl2_1b",
+    family="vlm",
+    num_layers=24,
+    d_model=896,
+    num_heads=14,
+    num_kv_heads=2,
+    d_ff=4864,
+    vocab_size=151655,
+    head_dim=64,
+    mlp="glu",
+    frontend="vit_patches",
+    num_patch_tokens=256,
+)

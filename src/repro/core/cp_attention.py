@@ -1,0 +1,429 @@
+"""Device-side context parallelism: shard_map islands over the CP axis.
+
+Four communication strategies, all on identical substrate (so the paper's
+comparisons are apples-to-apples):
+
+* ``flashcp`` / ``contiguous`` — **sharding-aware communication** (§3.2):
+  each rank gathers only the compacted non-last-shard KV buffer (Eq. 5
+  volume).  The backward pass is the JAX transpose of the gather — a
+  reduce-scatter of dKV with the same reduced volume (the paper's 4x
+  factor).
+* ``allgather`` — full-KV exchange (Eq. 4): Llama3 CP and Per-Doc CP.
+* ``ring`` — Ring-Attention (Zigzag): N-1 ``ppermute`` hops of full local
+  KV with blockwise attention + online LSE merge (compute/comm overlap via
+  the XLA latency-hiding scheduler on the ppermute chain).
+
+A self-ownership subtlety of the compact buffer: the all-gather includes
+this rank's own contribution, which is *also* present as local KV.  The
+island marks its own gathered segment invisible (doc id -2) so no KV pair
+is double-counted.
+
+The SSM island implements cross-rank recurrence for Mamba/xLSTM: local
+chunked scans + an all-gather of per-rank (decay, state) summaries with an
+associative prefix combine — O(state) communication, no serialization
+across ranks.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models.context import ExecContext, local_ssm_scan
+
+__all__ = ["make_cp_context", "CP_AXIS"]
+
+CP_AXIS = "model"
+NEG = -1e30
+
+
+# ===================================================================== #
+# helpers
+# ===================================================================== #
+def _take_tokens(x, idx):
+    """x (b, H, T, D); idx (b, S) with -1 padding -> (b, H, S, D), zeroed
+    at padding."""
+    safe = jnp.maximum(idx, 0)[:, None, :, None]
+    out = jnp.take_along_axis(x, safe, axis=2)
+    return out * (idx >= 0)[:, None, :, None].astype(x.dtype)
+
+
+def _partial_attention(q, k, v, q_doc, q_pos, kv_doc, kv_pos, scale,
+                       q_chunk: int):
+    """Unnormalized blockwise attention: returns (o, m, l) for LSE merging.
+
+    o (b,Hq,T,D) f32 = sum_s exp(s - m) v;  m rowmax;  l rowsum.
+    """
+    b, Hq, T, D = q.shape
+    _, Hkv, S, _ = k.shape
+    G = Hq // Hkv
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+
+    if T % q_chunk != 0:
+        q_chunk = T
+    nq = T // q_chunk
+
+    def one(args):
+        qc, qd, qp = args
+        qc = qc.astype(jnp.float32).reshape(b, Hkv, G, q_chunk, D)
+        s = jnp.einsum("bhgqd,bhkd->bhgqk", qc, kf) * scale
+        vis = (qd[:, :, None] == kv_doc[:, None, :]) \
+            & (qp[:, :, None] >= kv_pos[:, None, :]) \
+            & (qd[:, :, None] >= 0) & (kv_doc[:, None, :] >= 0)
+        s = jnp.where(vis[:, None, None], s, NEG)
+        m = jnp.max(s, axis=-1)                                  # (b,Hkv,G,qc)
+        p = jnp.where(vis[:, None, None], jnp.exp(s - m[..., None]), 0.0)
+        l = jnp.sum(p, axis=-1)
+        o = jnp.einsum("bhgqk,bhkd->bhgqd", p, vf)
+        return (o.reshape(b, Hq, q_chunk, D), m.reshape(b, Hq, q_chunk),
+                l.reshape(b, Hq, q_chunk))
+
+    if nq == 1:
+        return one((q, q_doc, q_pos))
+    qs = q.reshape(b, Hq, nq, q_chunk, D).transpose(2, 0, 1, 3, 4)
+    qds = q_doc.reshape(b, nq, q_chunk).transpose(1, 0, 2)
+    qps = q_pos.reshape(b, nq, q_chunk).transpose(1, 0, 2)
+    os, ms, ls = jax.lax.map(one, (qs, qds, qps))
+    return (os.transpose(1, 2, 0, 3, 4).reshape(b, Hq, T, D),
+            ms.transpose(1, 2, 0, 3).reshape(b, Hq, T),
+            ls.transpose(1, 2, 0, 3).reshape(b, Hq, T))
+
+
+def _masked_attention(q, k, v, q_doc, q_pos, kv_doc, kv_pos, *, impl,
+                      q_chunk, interpret, tables=None, block_q=128,
+                      block_k=128):
+    from repro.kernels import ops as kops
+
+    if impl == "pallas":
+        assert tables is not None, "pallas CP attention needs host tables"
+        return kops.doc_flash_attention(q, k, v, q_doc, q_pos, kv_doc,
+                                        kv_pos, tables, interpret=interpret,
+                                        block_q=block_q, block_k=block_k)
+    return kops.doc_attention_xla(q, k, v, q_doc, q_pos, kv_doc, kv_pos,
+                                  q_chunk=q_chunk)
+
+
+# ===================================================================== #
+# islands
+# ===================================================================== #
+@functools.partial(jax.custom_vjp, nondiff_argnums=(1,))
+def _quantized_gather(x, axis_name):
+    """int8 all-gather with per-(batch, head, token) scales — beyond-paper
+    comm compression of the Eq. 5 KV exchange (EXPERIMENTS.md §Perf #6).
+
+    Straight-through backward: ``round`` has zero gradient, so the VJP is
+    defined explicitly as the transpose of a plain gather — a full-precision
+    reduce-scatter of dKV (gradients stay exact; only the forward KV wire
+    is quantized)."""
+    scale = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1,
+                    keepdims=True) / 127.0
+    scale = jnp.maximum(scale, 1e-8)
+    q8 = jnp.clip(jnp.round(x.astype(jnp.float32) / scale), -127,
+                  127).astype(jnp.int8)
+    g8 = jax.lax.all_gather(q8, axis_name, axis=2, tiled=True)
+    gs = jax.lax.all_gather(scale.astype(jnp.float32), axis_name, axis=2,
+                            tiled=True)
+    return (g8.astype(jnp.float32) * gs).astype(x.dtype)
+
+
+def _quantized_gather_fwd(x, axis_name):
+    return _quantized_gather(x, axis_name), None
+
+
+def _quantized_gather_bwd(axis_name, _, g):
+    return (jax.lax.psum_scatter(g, axis_name, scatter_dimension=2,
+                                 tiled=True),)
+
+
+_quantized_gather.defvjp(_quantized_gather_fwd, _quantized_gather_bwd)
+
+
+def _flashcp_island(q, k, v, doc, pos, send_idx, gath_doc, gath_pos,
+                    *, impl, q_chunk, interpret, tables=None, block_q=128,
+                    block_k=128, kv_comm_dtype="native"):
+    b = q.shape[0]
+    N = jax.lax.axis_size(CP_AXIS)
+    me = jax.lax.axis_index(CP_AXIS)
+    buf = send_idx.shape[-1]
+
+    sidx = send_idx[:, 0]                       # (b, buf)
+    ksel = _take_tokens(k, sidx)
+    vsel = _take_tokens(v, sidx)
+    if kv_comm_dtype == "int8":
+        kg = _quantized_gather(ksel, CP_AXIS)
+        vg = _quantized_gather(vsel, CP_AXIS)
+    else:
+        kg = jax.lax.all_gather(ksel, CP_AXIS, axis=2, tiled=True)
+        vg = jax.lax.all_gather(vsel, CP_AXIS, axis=2, tiled=True)
+
+    # hide my own gathered segment (those tokens are already local KV)
+    seg = jnp.arange(N * buf, dtype=jnp.int32) // buf
+    gdoc = jnp.where((seg == me)[None, :], -2, gath_doc)
+
+    kv_k = jnp.concatenate([k, kg], axis=2)
+    kv_v = jnp.concatenate([v, vg], axis=2)
+    kv_doc = jnp.concatenate([doc, gdoc], axis=1)
+    kv_pos = jnp.concatenate([pos, gath_pos], axis=1)
+
+    tabs = None
+    if tables is not None:
+        tabs = tuple(t[:, 0] if t.ndim > 2 and t.shape[1] == 1 else t
+                     for t in tables)
+    return _masked_attention(q, kv_k, kv_v, doc, pos, kv_doc, kv_pos,
+                             impl=impl, q_chunk=q_chunk, interpret=interpret,
+                             tables=tabs, block_q=block_q, block_k=block_k)
+
+
+def _allgather_island(q, k, v, doc, pos, *, impl, q_chunk, interpret):
+    kg = jax.lax.all_gather(k, CP_AXIS, axis=2, tiled=True)
+    vg = jax.lax.all_gather(v, CP_AXIS, axis=2, tiled=True)
+    gdoc = jax.lax.all_gather(doc, CP_AXIS, axis=1, tiled=True)
+    gpos = jax.lax.all_gather(pos, CP_AXIS, axis=1, tiled=True)
+    return _masked_attention(q, kg, vg, doc, pos, gdoc, gpos, impl=impl,
+                             q_chunk=q_chunk, interpret=interpret)
+
+
+def _ring_island(q, k, v, doc, pos, *, q_chunk, scale):
+    b, Hq, T, D = q.shape
+    N = jax.lax.axis_size(CP_AXIS)
+    perm = [(i, (i + 1) % N) for i in range(N)]
+
+    acc = jnp.zeros((b, Hq, T, D), jnp.float32)
+    m = jnp.full((b, Hq, T), NEG, jnp.float32)
+    l = jnp.zeros((b, Hq, T), jnp.float32)
+
+    def step(carry, _):
+        kc, vc, dc, pc, acc, m, l = carry
+        o_i, m_i, l_i = _partial_attention(q, kc, vc, doc, pos, dc, pc,
+                                           scale, q_chunk)
+        m_new = jnp.maximum(m, m_i)
+        c1 = jnp.exp(m - m_new)
+        c2 = jnp.exp(m_i - m_new)
+        acc = acc * c1[..., None] + o_i * c2[..., None]
+        l = l * c1 + l_i * c2
+        kc = jax.lax.ppermute(kc, CP_AXIS, perm)
+        vc = jax.lax.ppermute(vc, CP_AXIS, perm)
+        dc = jax.lax.ppermute(dc, CP_AXIS, perm)
+        pc = jax.lax.ppermute(pc, CP_AXIS, perm)
+        return (kc, vc, dc, pc, acc, m_new, l), None
+
+    (kc, vc, dc, pc, acc, m, l), _ = jax.lax.scan(
+        step, (k, v, doc, pos, acc, m, l), None, length=N)
+    out = jnp.where(l[..., None] > 0, acc / jnp.maximum(l[..., None], 1e-30),
+                    0.0)
+    return out.astype(q.dtype)
+
+
+def _moe_island(x, topi, gates, wi, wg, wo, *, kind, capacity_factor,
+                top_k):
+    """Expert-parallel dispatch: local capacity-clipped routing buffers
+    exchanged with all-to-all over the ``model`` axis (experts are sharded
+    over that axis), expert FFN on owned experts, all-to-all back, local
+    weighted combine."""
+    from repro.models.moe import (capacity, combine_local, dispatch_local,
+                                  expert_ffn)
+
+    b, t, d = x.shape
+    N = jax.lax.axis_size(CP_AXIS)
+    E_local = wi.shape[0]
+    E = E_local * N
+    n = b * t
+    cap = capacity(n, E, top_k, capacity_factor)
+
+    buf, slot, tok_s, gat_s, keep = dispatch_local(
+        x.reshape(n, d), topi.reshape(n, -1), gates.reshape(n, -1), E, cap)
+    # (E, cap, d) -> exchange: rank r receives all ranks' slices for its
+    # E/N experts -> (E/N, N*cap, d)
+    buf = jax.lax.all_to_all(buf, CP_AXIS, split_axis=0, concat_axis=1,
+                             tiled=True)
+    y = expert_ffn(buf, wi, wg, wo, kind)
+    y = jax.lax.all_to_all(y, CP_AXIS, split_axis=1, concat_axis=0,
+                           tiled=True)                     # (E, cap, d)
+    out = combine_local(y, slot, tok_s, gat_s, keep, n)
+    return out.reshape(b, t, d)
+
+
+def _selective_scan_island(dt, A, Bm, Cm, xf, reset):
+    """Fused chunkwise selective scan with CP rank hand-off.
+
+    Pass 1 computes each rank's (decay, state) summary; an all-gather +
+    associative prefix combine yields each rank's initial state; pass 2
+    produces y with chunk-local memory (models/context.py).
+    """
+    from repro.models.context import local_selective_scan
+
+    N = jax.lax.axis_size(CP_AXIS)
+    me = jax.lax.axis_index(CP_AXIS)
+
+    A_rank, S_rank = local_selective_scan(dt, A, Bm, Cm, xf, reset,
+                                          summary_only=True)
+    gA = jax.lax.all_gather(A_rank, CP_AXIS, axis=0)
+    gS = jax.lax.all_gather(S_rank, CP_AXIS, axis=0)
+
+    def comb(carry, j):
+        A_c, S_c = carry
+        take = j < me
+        A_n = jnp.where(take, gA[j] * A_c, A_c)
+        S_n = jnp.where(take, gS[j] + gA[j] * S_c, S_c)
+        return (A_n, S_n), None
+
+    init = (jnp.ones_like(A_rank), jnp.zeros_like(S_rank))
+    (_, S0), _ = jax.lax.scan(comb, init, jnp.arange(N))
+    return local_selective_scan(dt, A, Bm, Cm, xf, reset, init_state=S0)
+
+
+def _ssm_island(a, x):
+    """Cross-rank recurrence: local scan + associative prefix combine."""
+    N = jax.lax.axis_size(CP_AXIS)
+    me = jax.lax.axis_index(CP_AXIS)
+
+    h_loc = local_ssm_scan(a, x)
+    # decay track kept at a's (possibly broadcast/singleton) shape
+    cum_a = local_ssm_scan(a, jnp.zeros_like(a), init=jnp.ones_like(a[:, 0]))
+
+    A_tot = cum_a[:, -1]                        # (b, ...)
+    h_last = h_loc[:, -1]
+    gA = jax.lax.all_gather(A_tot, CP_AXIS, axis=0)     # (N, b, ...)
+    gH = jax.lax.all_gather(h_last, CP_AXIS, axis=0)
+
+    def comb(carry, j):
+        A_c, H_c = carry
+        take = j < me
+        A_n = jnp.where(take, gA[j] * A_c, A_c)
+        H_n = jnp.where(take, gH[j] + gA[j] * H_c, H_c)
+        return (A_n, H_n), None
+
+    init = (jnp.ones_like(A_tot), jnp.zeros_like(h_last))
+    (_, H_prev), _ = jax.lax.scan(comb, init, jnp.arange(N))
+    return h_loc + cum_a * jnp.expand_dims(H_prev, 1)
+
+
+# ===================================================================== #
+# context factory
+# ===================================================================== #
+def make_cp_context(
+    mesh,
+    plan_arrays: dict[str, Any],
+    *,
+    strategy: str = "flashcp",
+    impl: str = "xla",
+    batch_axes=("data",),
+    head_dim: int,
+    q_chunk: int = 512,
+    interpret: bool = False,
+    tables: tuple | None = None,
+    block_q: int = 128,
+    block_k: int = 128,
+    kv_comm_dtype: str = "native",
+) -> ExecContext:
+    """Build the ExecContext driving a CP training/prefill step.
+
+    ``plan_arrays`` are the (jnp) outputs of
+    :func:`repro.core.plan_exec.encode_plan_batch`, in global (B, ·) view.
+    """
+    doc = plan_arrays["doc"]
+    pos = plan_arrays["pos"]
+    b = tuple(batch_axes) if isinstance(batch_axes, (tuple, list)) \
+        else (batch_axes,)
+    B = b[0] if len(b) == 1 else b      # P dim entry: name or tuple of names
+    scale = head_dim ** -0.5
+
+    qkv_spec = P(B, None, CP_AXIS, None)
+    tok_spec = P(B, CP_AXIS)
+
+    if strategy in ("flashcp", "contiguous"):
+        island = functools.partial(_flashcp_island, impl=impl,
+                                   q_chunk=q_chunk, interpret=interpret,
+                                   kv_comm_dtype=kv_comm_dtype)
+        in_specs = [qkv_spec, qkv_spec, qkv_spec, tok_spec, tok_spec,
+                    P(B, CP_AXIS, None), P(B, None), P(B, None)]
+        args = (plan_arrays["send_idx"], plan_arrays["gath_doc"],
+                plan_arrays["gath_pos"])
+        if impl == "pallas":
+            assert tables is not None
+
+            def island(q, k, v, d_, p_, si, gd, gp, *tabs):  # noqa: F811
+                return _flashcp_island(q, k, v, d_, p_, si, gd, gp,
+                                       impl=impl, q_chunk=q_chunk,
+                                       interpret=interpret, tables=tabs,
+                                       block_q=block_q, block_k=block_k,
+                                       kv_comm_dtype=kv_comm_dtype)
+
+            in_specs = in_specs + [P(B, CP_AXIS, None, None),
+                                   P(B, CP_AXIS, None),
+                                   P(B, CP_AXIS, None, None),
+                                   P(B, CP_AXIS, None)]
+            args = args + tuple(tables)
+
+        def attn(q, k, v):
+            f = jax.shard_map(island, mesh=mesh, in_specs=tuple(in_specs),
+                              out_specs=qkv_spec, check_vma=False)
+            return f(q, k, v, doc, pos, *args)
+
+    elif strategy in ("allgather", "llama3", "per_doc"):
+        island = functools.partial(_allgather_island, impl=impl,
+                                   q_chunk=q_chunk, interpret=interpret)
+
+        def attn(q, k, v):
+            f = jax.shard_map(
+                island, mesh=mesh,
+                in_specs=(qkv_spec, qkv_spec, qkv_spec, tok_spec, tok_spec),
+                out_specs=qkv_spec, check_vma=False)
+            return f(q, k, v, doc, pos)
+
+    elif strategy in ("ring", "ring_zigzag"):
+        island = functools.partial(_ring_island, q_chunk=q_chunk, scale=scale)
+
+        def attn(q, k, v):
+            f = jax.shard_map(
+                island, mesh=mesh,
+                in_specs=(qkv_spec, qkv_spec, qkv_spec, tok_spec, tok_spec),
+                out_specs=qkv_spec, check_vma=False)
+            return f(q, k, v, doc, pos)
+
+    else:
+        raise ValueError(f"unknown CP strategy {strategy!r}")
+
+    def ssm_scan(a, x):
+        a_spec = P(B, CP_AXIS, *([None] * (a.ndim - 2)))
+        x_spec = P(B, CP_AXIS, *([None] * (x.ndim - 2)))
+        f = jax.shard_map(_ssm_island, mesh=mesh,
+                          in_specs=(a_spec, x_spec), out_specs=x_spec,
+                          check_vma=False)
+        return f(a, x)
+
+    def selective_scan(dt, A, Bm, Cm, xf, reset):
+        tok = P(B, CP_AXIS)
+        tok3 = P(B, CP_AXIS, None)
+        f = jax.shard_map(
+            _selective_scan_island, mesh=mesh,
+            in_specs=(tok3, P(None, None), tok3, tok3, tok3, tok),
+            out_specs=tok3, check_vma=False)
+        return f(dt, A, Bm, Cm, xf, reset)
+
+    def ep_dispatch(x, topi, gates, params, *, kind, capacity_factor):
+        tok3 = P(B, CP_AXIS, None)
+        expert = P("model", None, None)
+        island = functools.partial(_moe_island, kind=kind,
+                                   capacity_factor=capacity_factor,
+                                   top_k=topi.shape[-1])
+        wg = params.get("wg")
+        if wg is None:
+            wg = params["wi"]      # unused by gelu path; keeps arity static
+        f = jax.shard_map(
+            island, mesh=mesh,
+            in_specs=(tok3, tok3, tok3, expert, expert, expert),
+            out_specs=tok3, check_vma=False)
+        return f(x, topi, gates, params["wi"], wg, params["wo"])
+
+    from jax.sharding import NamedSharding
+
+    return ExecContext(doc=doc, pos=pos, attn=attn, ssm_scan=ssm_scan,
+                       selective_scan=selective_scan,
+                       act_sharding=NamedSharding(mesh, P(B, CP_AXIS, None)),
+                       extras={"ep_dispatch": ep_dispatch})

@@ -1,0 +1,53 @@
+"""Input packing (paper §2.1): concatenate documents into one context window.
+
+Documents are drawn from a length distribution until the window is full; the
+last document is truncated to fit (paper §4.1: "If the total length of the
+input documents exceeds the context window size, the last document is
+truncated to fit within the limit").
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from .distributions import sample_doc_length
+
+__all__ = ["pack_sequence", "doc_ids_and_positions"]
+
+
+def pack_sequence(
+    dataset: str,
+    context_len: int,
+    rng: np.random.Generator,
+    *,
+    min_doc_len: int = 16,
+) -> np.ndarray:
+    """Return an int64 array of document lengths summing exactly to
+    ``context_len``."""
+    lens: list[int] = []
+    total = 0
+    while total < context_len:
+        d = sample_doc_length(dataset, rng)
+        d = min(d, context_len - total)
+        if d < min_doc_len and total + d < context_len:
+            # merge ultra-short scraps into the previous document rather
+            # than emitting degenerate docs (packing implementations do the
+            # same to avoid 1-token documents).
+            if lens:
+                lens[-1] += d
+            else:
+                lens.append(d)
+        else:
+            lens.append(d)
+        total += d
+    out = np.asarray(lens, dtype=np.int64)
+    assert out.sum() == context_len
+    return out
+
+
+def doc_ids_and_positions(doc_lens: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
+    """Per-token document ids and intra-document positions for one packed
+    sequence — the host-side ingredients of the document mask."""
+    doc_ids = np.repeat(np.arange(len(doc_lens), dtype=np.int32), doc_lens)
+    positions = np.concatenate([np.arange(d, dtype=np.int32) for d in doc_lens])
+    return doc_ids, positions

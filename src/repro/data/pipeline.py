@@ -1,0 +1,150 @@
+"""Deterministic, host-sharded training data pipeline.
+
+Per batch, per packed sequence:
+  1. draw document lengths from the dataset distribution (seeded);
+  2. run the configured CP planner (FlashCP / baseline);
+  3. encode the plan (permutation + comm metadata, §plan_exec);
+  4. synthesize tokens and next-token labels (label masking at document
+     finals and padding), all in *plan order*.
+
+Determinism & elasticity: the stream for (seed, dp_rank, step) is a pure
+function — after a failure the restarted pipeline replays exactly by
+seeking ``start_step`` (used by the fault-tolerant training driver), and a
+re-sharded (elastic) job re-splits ranks without touching earlier history.
+
+A background thread prefetches ``prefetch`` batches ahead of the consumer.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import queue
+import threading
+from typing import Any, Iterator
+
+import numpy as np
+
+from repro.core.baselines import BASELINE_PLANNERS
+from repro.core.plan_exec import PlanEncoding, encode_plan_batch
+from .distributions import make_rng
+from .packing import pack_sequence
+
+__all__ = ["PipelineConfig", "make_batch", "data_iterator", "Prefetcher"]
+
+
+@dataclasses.dataclass(frozen=True)
+class PipelineConfig:
+    dataset: str = "wlb_llm"
+    context_len: int = 131072
+    batch_per_host: int = 1
+    cp_size: int = 8
+    strategy: str = "flashcp"
+    vocab_size: int = 50304
+    seed: int = 0
+    buf_len: int | None = None   # fixed Eq.5 bucket (None -> per-batch)
+    align: int = 128             # T_loc alignment (Pallas block size)
+    target_imbalance: float = 1.05
+
+
+def _plan(cfg: PipelineConfig, doc_lens):
+    if cfg.strategy == "flashcp":
+        from repro.core.heuristic import flashcp_plan
+        plan, _ = flashcp_plan(doc_lens, cfg.cp_size,
+                               target_ratio=cfg.target_imbalance)
+        return plan
+    return BASELINE_PLANNERS[cfg.strategy](doc_lens, cfg.cp_size)
+
+
+def make_batch(cfg: PipelineConfig, step: int, dp_rank: int = 0,
+               dp_size: int = 1) -> dict[str, Any]:
+    """Build one host-local batch for (step, dp_rank)."""
+    rng = make_rng(hash((cfg.seed, dp_rank, step)) % (2 ** 63))
+    plans, doc_lens_list = [], []
+    for _ in range(cfg.batch_per_host):
+        lens = pack_sequence(cfg.dataset, cfg.context_len, rng)
+        doc_lens_list.append(lens)
+        plans.append(_plan(cfg, lens))
+
+    stack, encs = encode_plan_batch(plans, buf_len=cfg.buf_len,
+                                    align=cfg.align)
+    B, C_pad = stack["perm"].shape
+
+    # synthesize tokens in packed order, then permute to plan order.
+    # Zipfian unigrams + repetition bigrams give the stream learnable
+    # structure (uniform tokens would pin the loss at ln(vocab)).
+    tokens = np.full((B, C_pad), -1, np.int32)
+    labels = np.full((B, C_pad), -1, np.int32)
+    for b, lens in enumerate(doc_lens_list):
+        n_tok = int(lens.sum())
+        packed = ((rng.zipf(1.3, n_tok) - 1) % cfg.vocab_size
+                  ).astype(np.int32)
+        rep = rng.random(n_tok) < 0.25
+        rep[0] = False
+        idx = np.arange(n_tok)
+        prev = np.maximum(idx - 1, 0)
+        packed = np.where(rep, packed[prev], packed)
+        perm = stack["perm"][b]
+        valid = perm >= 0
+        tokens[b, valid] = packed[perm[valid]]
+        # next-token labels: valid unless last token of its document
+        doc = stack["doc"][b]
+        pos = stack["pos"][b]
+        nxt = perm + 1
+        is_final = np.zeros_like(valid)
+        ends = np.cumsum(lens) - 1
+        is_final[valid] = np.isin(perm[valid], ends)
+        lab_ok = valid & ~is_final
+        labels[b, lab_ok] = packed[np.minimum(nxt[lab_ok],
+                                              len(packed) - 1)]
+
+    batch = {k: v for k, v in stack.items()}
+    batch["tokens"] = tokens
+    batch["labels"] = labels
+    batch["stats"] = {
+        "comm_tokens": max(e.comm_tokens for e in encs),
+        "buf_len": encs[0].buf_len,
+        "t_loc": encs[0].t_loc,
+        "imbalance": float(np.mean([e.imbalance for e in encs])),
+        "num_docs": float(np.mean([len(l) for l in doc_lens_list])),
+    }
+    return batch
+
+
+def data_iterator(cfg: PipelineConfig, start_step: int = 0, dp_rank: int = 0,
+                  dp_size: int = 1) -> Iterator[dict[str, Any]]:
+    step = start_step
+    while True:
+        yield make_batch(cfg, step, dp_rank, dp_size)
+        step += 1
+
+
+class Prefetcher:
+    """Background-thread prefetch with bounded queue (skip-ahead capable)."""
+
+    def __init__(self, cfg: PipelineConfig, start_step: int = 0,
+                 dp_rank: int = 0, prefetch: int = 2):
+        self._q: queue.Queue = queue.Queue(maxsize=prefetch)
+        self._stop = threading.Event()
+        self._thread = threading.Thread(
+            target=self._run, args=(cfg, start_step, dp_rank), daemon=True)
+        self._thread.start()
+
+    def _run(self, cfg, start_step, dp_rank):
+        it = data_iterator(cfg, start_step, dp_rank)
+        for batch in it:
+            if self._stop.is_set():
+                return
+            self._q.put(batch)
+
+    def __next__(self):
+        return self._q.get()
+
+    def __iter__(self):
+        return self
+
+    def close(self):
+        self._stop.set()
+        try:
+            self._q.get_nowait()
+        except queue.Empty:
+            pass

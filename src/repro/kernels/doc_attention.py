@@ -1,0 +1,481 @@
+"""Pallas TPU kernels: document-masked causal flash attention with
+block-level sparsity (the compute hot-spot of FlashCP training).
+
+TPU adaptation of the paper's kernel-efficiency insight (§2.3, Fig. 3):
+instead of CUDA varlen batching, we exploit the *structure* FlashCP's
+planner creates — whole documents laid out contiguously — with
+splash-attention-style **visit tables**:
+
+* the host enumerates, per query block, exactly the KV blocks that contain
+  any visible (same-document, causal) key;
+* the kernel's grid iterates only those visits; the KV ``index_map`` reads
+  the visit table via scalar prefetch, so *skipped blocks are never fetched
+  from HBM, let alone computed*;
+* padded visit slots repeat the previous block index, which Pallas's
+  revisiting pipeline turns into a no-op fetch.
+
+Whole-doc placement ⇒ long contiguous visible ranges ⇒ few partial blocks
+and maximal MXU occupancy — exactly the paper's "kernel efficiency" axis,
+re-expressed for the TPU memory hierarchy (HBM→VMEM streaming + 128×128
+MXU tiles).
+
+Layout (GQA): q (B, Hq, Tq, D); k, v (B, Hkv, Tk, D); per-token metadata
+``q_doc/q_pos`` (B, Tq) and ``kv_doc/kv_pos`` (B, Tk) int32; doc id < 0 is
+padding.  Visibility: same doc AND q_pos >= kv_pos.
+
+The pure-jnp oracle lives in ``ref.py``; jit'd wrappers + custom VJP in
+``ops.py``.  All kernels are validated against the oracle with
+``interpret=True`` sweeps in tests/test_kernels.py.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = [
+    "BlockTables",
+    "build_block_tables",
+    "flash_fwd",
+    "flash_bwd_dq",
+    "flash_bwd_dkv",
+    "DEFAULT_BLOCK_Q",
+    "DEFAULT_BLOCK_K",
+]
+
+DEFAULT_BLOCK_Q = 128
+DEFAULT_BLOCK_K = 128
+NEG = -1e30  # finite -inf stand-in inside kernels (no nan from inf-inf)
+
+KIND_SKIP, KIND_PARTIAL, KIND_FULL = 0, 1, 2
+
+
+# ===================================================================== #
+# host-side visit tables
+# ===================================================================== #
+@dataclasses.dataclass
+class BlockTables:
+    """Scalar-prefetch tables driving the sparse grid.
+
+    fwd:  for each (b, q-block): the KV blocks to visit.
+    bwd:  for each (b, kv-block): the Q blocks that visit it (reverse map).
+    Padded slots repeat the last valid index (cheap revisits) and are gated
+    by the ``*_nvis`` counts.
+    """
+
+    kv_idx: np.ndarray    # (B, nq, Vk) int32
+    kv_nvis: np.ndarray   # (B, nq)     int32
+    q_idx: np.ndarray     # (B, nk, Vq) int32
+    q_nvis: np.ndarray    # (B, nk)     int32
+    block_q: int
+    block_k: int
+    # occupancy stats — the kernel-efficiency metric used by benchmarks
+    visited_frac: float   # visited blocks / all blocks
+    full_frac: float      # fully-visible blocks / visited blocks
+
+    def as_jax(self):
+        return (jnp.asarray(self.kv_idx), jnp.asarray(self.kv_nvis),
+                jnp.asarray(self.q_idx), jnp.asarray(self.q_nvis))
+
+
+def _pad_lists(lists: list[list[int]], width: int) -> np.ndarray:
+    out = np.zeros((len(lists), width), dtype=np.int32)
+    for i, l in enumerate(lists):
+        if l:
+            out[i, : len(l)] = l
+            out[i, len(l):] = l[-1]  # repeat-last padding => no-op refetch
+    return out
+
+
+def build_block_tables(
+    q_doc: np.ndarray,
+    q_pos: np.ndarray,
+    kv_doc: np.ndarray,
+    kv_pos: np.ndarray,
+    *,
+    block_q: int = DEFAULT_BLOCK_Q,
+    block_k: int = DEFAULT_BLOCK_K,
+) -> BlockTables:
+    """Classify every (q-block, kv-block) pair as skip / partial / full.
+
+    Sound conservatism: a pair is *skipped* only when provably no element
+    is visible; *full* only when provably all elements are visible (the
+    kernel then pays no masking).  Anything uncertain is partial.
+    Within a block, FlashCP's executor lays tokens out sorted by
+    (doc, pos), which makes the min/max summaries tight.
+    """
+    q_doc = np.asarray(q_doc); q_pos = np.asarray(q_pos)
+    kv_doc = np.asarray(kv_doc); kv_pos = np.asarray(kv_pos)
+    B, Tq = q_doc.shape
+    _, Tk = kv_doc.shape
+    assert Tq % block_q == 0 and Tk % block_k == 0, (Tq, block_q, Tk, block_k)
+    nq, nk = Tq // block_q, Tk // block_k
+
+    def summarize(doc, pos, blk):
+        d = doc.reshape(B, -1, blk)
+        p = pos.reshape(B, -1, blk)
+        valid = d >= 0
+        big = np.int64(1 << 40)
+        dmin = np.where(valid, d, big).min(-1)
+        dmax = np.where(valid, d, -1).max(-1)
+        pmin = np.where(valid, p, big).min(-1)
+        pmax = np.where(valid, p, -1).max(-1)
+        any_valid = valid.any(-1)
+        all_valid = valid.all(-1)
+        return dmin, dmax, pmin, pmax, any_valid, all_valid
+
+    qdmin, qdmax, qpmin, qpmax, q_any, q_all = summarize(q_doc, q_pos, block_q)
+    kdmin, kdmax, kpmin, kpmax, k_any, k_all = summarize(kv_doc, kv_pos, block_k)
+
+    # broadcast to (B, nq, nk)
+    def bq_(x):
+        return x[:, :, None]
+
+    def bk_(x):
+        return x[:, None, :]
+
+    overlap = (bq_(qdmax) >= bk_(kdmin)) & (bk_(kdmax) >= bq_(qdmin))
+    single_doc = (bq_(qdmin) == bq_(qdmax)) & (bk_(kdmin) == bk_(kdmax)) \
+        & (bq_(qdmin) == bk_(kdmin))
+    # single shared doc and strictly anti-causal -> nothing visible
+    anti = single_doc & (bq_(qpmax) < bk_(kpmin))
+    visited = overlap & ~anti & bq_(q_any) & bk_(k_any)
+    full = single_doc & (bq_(qpmin) >= bk_(kpmax)) & bq_(q_all) & bk_(k_all)
+    full &= visited
+
+    kinds = np.where(visited, np.where(full, KIND_FULL, KIND_PARTIAL),
+                     KIND_SKIP).astype(np.int32)
+
+    kv_lists = [[int(k) for k in np.nonzero(kinds[b, qi])[0]]
+                for b in range(B) for qi in range(nq)]
+    q_lists = [[int(q) for q in np.nonzero(kinds[b, :, ki])[0]]
+               for b in range(B) for ki in range(nk)]
+    Vk = max(1, max((len(l) for l in kv_lists), default=0))
+    Vq = max(1, max((len(l) for l in q_lists), default=0))
+
+    kv_idx = _pad_lists(kv_lists, Vk).reshape(B, nq, Vk)
+    kv_nvis = np.array([len(l) for l in kv_lists], np.int32).reshape(B, nq)
+    q_idx = _pad_lists(q_lists, Vq).reshape(B, nk, Vq)
+    q_nvis = np.array([len(l) for l in q_lists], np.int32).reshape(B, nk)
+
+    n_visited = int((kinds != KIND_SKIP).sum())
+    n_full = int((kinds == KIND_FULL).sum())
+    return BlockTables(
+        kv_idx=kv_idx, kv_nvis=kv_nvis, q_idx=q_idx, q_nvis=q_nvis,
+        block_q=block_q, block_k=block_k,
+        visited_frac=n_visited / max(kinds.size, 1),
+        full_frac=n_full / max(n_visited, 1),
+    )
+
+
+# ===================================================================== #
+# shared kernel helpers
+# ===================================================================== #
+def _visible(qd_ref, qp_ref, kd_ref, kp_ref):
+    qd = qd_ref[0, :][:, None]
+    qp = qp_ref[0, :][:, None]
+    kd = kd_ref[0, :][None, :]
+    kp = kp_ref[0, :][None, :]
+    return (qd == kd) & (qp >= kp) & (qd >= 0) & (kd >= 0)
+
+
+def _dot_f32(a, b):
+    return jax.lax.dot_general(
+        a, b, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+
+
+# ===================================================================== #
+# forward kernel
+# ===================================================================== #
+def _fwd_kernel(kv_idx_ref, kv_nvis_ref,           # scalar prefetch
+                q_ref, k_ref, v_ref,
+                qd_ref, qp_ref, kd_ref, kp_ref,    # metadata tiles
+                out_ref, lse_ref,                  # outputs
+                acc_ref, m_ref, l_ref,             # VMEM scratch
+                *, scale: float, num_visits: int):
+    b, _, qi, vi = (pl.program_id(i) for i in range(4))
+
+    @pl.when(vi == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    @pl.when(vi < kv_nvis_ref[b, qi])
+    def _visit():
+        q = q_ref[0, 0].astype(jnp.float32)
+        k = k_ref[0, 0]
+        s = _dot_f32(q, k.T.astype(jnp.float32)) * scale      # (bq, bk) f32
+        vis = _visible(qd_ref, qp_ref, kd_ref, kp_ref)
+        s = jnp.where(vis, s, NEG)
+
+        m_prev = m_ref[:, :1]
+        l_prev = l_ref[:, :1]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+        alpha = jnp.exp(m_prev - m_new)                        # NEG-NEG -> 1
+        p = jnp.where(vis, jnp.exp(s - m_new), 0.0)
+        l_new = l_prev * alpha + jnp.sum(p, axis=1, keepdims=True)
+        vv = v_ref[0, 0]
+        pv = _dot_f32(p.astype(vv.dtype), vv)
+        acc_ref[...] = acc_ref[...] * alpha + pv
+        m_ref[...] = jnp.broadcast_to(m_new, m_ref.shape)
+        l_ref[...] = jnp.broadcast_to(l_new, l_ref.shape)
+
+    @pl.when(vi == num_visits - 1)
+    def _finalize():
+        l = l_ref[:, :1]
+        m = m_ref[:, :1]
+        out = jnp.where(l > 0, acc_ref[...] / jnp.maximum(l, 1e-30), 0.0)
+        out_ref[0, 0] = out.astype(out_ref.dtype)
+        lse = jnp.where(l[:, 0] > 0,
+                        m[:, 0] + jnp.log(jnp.maximum(l[:, 0], 1e-30)),
+                        -jnp.inf)
+        lse_ref[0, 0] = lse
+
+
+def flash_fwd(q, k, v, q_doc, q_pos, kv_doc, kv_pos,
+              kv_idx, kv_nvis, *,
+              scale: float, block_q: int = DEFAULT_BLOCK_Q,
+              block_k: int = DEFAULT_BLOCK_K, interpret: bool = False):
+    B, Hq, Tq, D = q.shape
+    _, Hkv, Tk, _ = k.shape
+    group = Hq // Hkv
+    nq = Tq // block_q
+    V = kv_idx.shape[-1]
+
+    def kv_block(b, h, qi, vi, kv_idx, kv_nvis):
+        return (b, h // group, kv_idx[b, qi, vi], 0)
+
+    def kv_meta(b, h, qi, vi, kv_idx, kv_nvis):
+        return (b, kv_idx[b, qi, vi])
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(B, Hq, nq, V),
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, D), lambda b, h, qi, vi, *s: (b, h, qi, 0)),
+            pl.BlockSpec((1, 1, block_k, D), kv_block),
+            pl.BlockSpec((1, 1, block_k, D), kv_block),
+            pl.BlockSpec((1, block_q), lambda b, h, qi, vi, *s: (b, qi)),
+            pl.BlockSpec((1, block_q), lambda b, h, qi, vi, *s: (b, qi)),
+            pl.BlockSpec((1, block_k), kv_meta),
+            pl.BlockSpec((1, block_k), kv_meta),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, block_q, D), lambda b, h, qi, vi, *s: (b, h, qi, 0)),
+            pl.BlockSpec((1, 1, block_q), lambda b, h, qi, vi, *s: (b, h, qi)),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((block_q, D), jnp.float32),
+            pltpu.VMEM((block_q, 128), jnp.float32),
+            pltpu.VMEM((block_q, 128), jnp.float32),
+        ],
+    )
+    kernel = functools.partial(_fwd_kernel, scale=scale, num_visits=V)
+    out, lse = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((B, Hq, Tq, D), q.dtype),
+            jax.ShapeDtypeStruct((B, Hq, Tq), jnp.float32),
+        ],
+        interpret=interpret,
+    )(kv_idx, kv_nvis, q, k, v, q_doc, q_pos, kv_doc, kv_pos)
+    return out, lse
+
+
+# ===================================================================== #
+# backward: dQ  (grid over q blocks x visits)
+# ===================================================================== #
+def _dq_kernel(kv_idx_ref, kv_nvis_ref,
+               q_ref, k_ref, v_ref, do_ref, lse_ref, dl_ref,
+               qd_ref, qp_ref, kd_ref, kp_ref,
+               dq_ref,
+               dq_acc,
+               *, scale: float, num_visits: int):
+    b, _, qi, vi = (pl.program_id(i) for i in range(4))
+
+    @pl.when(vi == 0)
+    def _init():
+        dq_acc[...] = jnp.zeros_like(dq_acc)
+
+    @pl.when(vi < kv_nvis_ref[b, qi])
+    def _visit():
+        q = q_ref[0, 0].astype(jnp.float32)
+        k = k_ref[0, 0]
+        v = v_ref[0, 0]
+        do = do_ref[0, 0].astype(jnp.float32)
+        lse = lse_ref[0, 0][:, None]                      # (bq, 1)
+        lse_safe = jnp.where(jnp.isfinite(lse), lse, 0.0)
+        delta = dl_ref[0, 0][:, None]
+
+        s = _dot_f32(q, k.T.astype(jnp.float32)) * scale
+        vis = _visible(qd_ref, qp_ref, kd_ref, kp_ref)
+        p = jnp.where(vis, jnp.exp(s - lse_safe), 0.0)
+        dp = _dot_f32(do, v.T.astype(jnp.float32))
+        ds = p * (dp - delta) * scale
+        dq_acc[...] += _dot_f32(ds.astype(k.dtype), k)
+
+    @pl.when(vi == num_visits - 1)
+    def _finalize():
+        dq_ref[0, 0] = dq_acc[...].astype(dq_ref.dtype)
+
+
+def flash_bwd_dq(q, k, v, do, lse, delta, q_doc, q_pos, kv_doc, kv_pos,
+                 kv_idx, kv_nvis, *, scale: float,
+                 block_q: int = DEFAULT_BLOCK_Q,
+                 block_k: int = DEFAULT_BLOCK_K, interpret: bool = False):
+    B, Hq, Tq, D = q.shape
+    _, Hkv, Tk, _ = k.shape
+    group = Hq // Hkv
+    nq = Tq // block_q
+    V = kv_idx.shape[-1]
+
+    def kv_block(b, h, qi, vi, kv_idx, kv_nvis):
+        return (b, h // group, kv_idx[b, qi, vi], 0)
+
+    def kv_meta(b, h, qi, vi, kv_idx, kv_nvis):
+        return (b, kv_idx[b, qi, vi])
+
+    def q_block(b, h, qi, vi, *s):
+        return (b, h, qi, 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(B, Hq, nq, V),
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, D), q_block),
+            pl.BlockSpec((1, 1, block_k, D), kv_block),
+            pl.BlockSpec((1, 1, block_k, D), kv_block),
+            pl.BlockSpec((1, 1, block_q, D), q_block),
+            pl.BlockSpec((1, 1, block_q), lambda b, h, qi, vi, *s: (b, h, qi)),
+            pl.BlockSpec((1, 1, block_q), lambda b, h, qi, vi, *s: (b, h, qi)),
+            pl.BlockSpec((1, block_q), lambda b, h, qi, vi, *s: (b, qi)),
+            pl.BlockSpec((1, block_q), lambda b, h, qi, vi, *s: (b, qi)),
+            pl.BlockSpec((1, block_k), kv_meta),
+            pl.BlockSpec((1, block_k), kv_meta),
+        ],
+        out_specs=[pl.BlockSpec((1, 1, block_q, D), q_block)],
+        scratch_shapes=[pltpu.VMEM((block_q, D), jnp.float32)],
+    )
+    kernel = functools.partial(_dq_kernel, scale=scale, num_visits=V)
+    (dq,) = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=[jax.ShapeDtypeStruct((B, Hq, Tq, D), q.dtype)],
+        interpret=interpret,
+    )(kv_idx, kv_nvis, q, k, v, do, lse, delta, q_doc, q_pos, kv_doc, kv_pos)
+    return dq
+
+
+# ===================================================================== #
+# backward: dK, dV  (grid over kv blocks x reverse visits x GQA group)
+# ===================================================================== #
+def _dkv_kernel(q_idx_ref, q_nvis_ref,
+                q_ref, k_ref, v_ref, do_ref, lse_ref, dl_ref,
+                qd_ref, qp_ref, kd_ref, kp_ref,
+                dk_ref, dv_ref,
+                dk_acc, dv_acc,
+                *, scale: float, num_visits: int, group: int):
+    b, _, ki, vqi, gi = (pl.program_id(i) for i in range(5))
+
+    @pl.when((vqi == 0) & (gi == 0))
+    def _init():
+        dk_acc[...] = jnp.zeros_like(dk_acc)
+        dv_acc[...] = jnp.zeros_like(dv_acc)
+
+    @pl.when(vqi < q_nvis_ref[b, ki])
+    def _visit():
+        q = q_ref[0, 0].astype(jnp.float32)
+        k = k_ref[0, 0]
+        v = v_ref[0, 0]
+        do = do_ref[0, 0].astype(jnp.float32)
+        lse = lse_ref[0, 0][:, None]
+        lse_safe = jnp.where(jnp.isfinite(lse), lse, 0.0)
+        delta = dl_ref[0, 0][:, None]
+
+        s = _dot_f32(q, k.T.astype(jnp.float32)) * scale    # (bq, bk)
+        vis = _visible(qd_ref, qp_ref, kd_ref, kp_ref)
+        p = jnp.where(vis, jnp.exp(s - lse_safe), 0.0)
+        dv_acc[...] += _dot_f32(p.T.astype(do.dtype), do)
+        dp = _dot_f32(do, v.T.astype(jnp.float32))
+        ds = p * (dp - delta) * scale
+        dk_acc[...] += _dot_f32(ds.T.astype(q.dtype), q)
+
+    @pl.when((vqi == num_visits - 1) & (gi == group - 1))
+    def _finalize():
+        dk_ref[0, 0] = dk_acc[...].astype(dk_ref.dtype)
+        dv_ref[0, 0] = dv_acc[...].astype(dv_ref.dtype)
+
+
+def flash_bwd_dkv(q, k, v, do, lse, delta, q_doc, q_pos, kv_doc, kv_pos,
+                  q_idx, q_nvis, *, scale: float,
+                  block_q: int = DEFAULT_BLOCK_Q,
+                  block_k: int = DEFAULT_BLOCK_K, interpret: bool = False):
+    B, Hq, Tq, D = q.shape
+    _, Hkv, Tk, _ = k.shape
+    group = Hq // Hkv
+    nk = Tk // block_k
+    Vq = q_idx.shape[-1]
+
+    def head(gi):
+        return gi  # helper for clarity below
+
+    def q_block(b, hkv, ki, vqi, gi, q_idx, q_nvis):
+        return (b, hkv * group + gi, q_idx[b, ki, vqi], 0)
+
+    def q_vec(b, hkv, ki, vqi, gi, q_idx, q_nvis):
+        return (b, hkv * group + gi, q_idx[b, ki, vqi])
+
+    def q_meta(b, hkv, ki, vqi, gi, q_idx, q_nvis):
+        return (b, q_idx[b, ki, vqi])
+
+    def kv_block(b, hkv, ki, vqi, gi, *s):
+        return (b, hkv, ki, 0)
+
+    def kv_meta(b, hkv, ki, vqi, gi, *s):
+        return (b, ki)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(B, Hkv, nk, Vq, group),
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, D), q_block),
+            pl.BlockSpec((1, 1, block_k, D), kv_block),
+            pl.BlockSpec((1, 1, block_k, D), kv_block),
+            pl.BlockSpec((1, 1, block_q, D), q_block),
+            pl.BlockSpec((1, 1, block_q), q_vec),
+            pl.BlockSpec((1, 1, block_q), q_vec),
+            pl.BlockSpec((1, block_q), q_meta),
+            pl.BlockSpec((1, block_q), q_meta),
+            pl.BlockSpec((1, block_k), kv_meta),
+            pl.BlockSpec((1, block_k), kv_meta),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, block_k, D), kv_block),
+            pl.BlockSpec((1, 1, block_k, D), kv_block),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((block_k, D), jnp.float32),
+            pltpu.VMEM((block_k, D), jnp.float32),
+        ],
+    )
+    kernel = functools.partial(_dkv_kernel, scale=scale, num_visits=Vq,
+                               group=group)
+    dk, dv = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((B, Hkv, Tk, D), k.dtype),
+            jax.ShapeDtypeStruct((B, Hkv, Tk, D), v.dtype),
+        ],
+        interpret=interpret,
+    )(q_idx, q_nvis, q, k, v, do, lse, delta, q_doc, q_pos, kv_doc, kv_pos)
+    return dk, dv

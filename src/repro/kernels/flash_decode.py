@@ -1,0 +1,142 @@
+"""Pallas TPU flash-decode kernel: one query token vs a long KV cache.
+
+The decode shapes (decode_32k, long_500k) are HBM-bound on the cache read
+(§Roofline) — the fused kernel streams K/V blocks through VMEM once,
+keeping the online-softmax state in registers/VMEM, and *clamps* the
+block index map at the request length so blocks past the end of a shorter
+request are never fetched (ragged batches pay only for what they use).
+
+Layout: q (B, Hq, D); k, v (B, Hkv, S, D); lengths (B,) — position t
+attends to cache[0..t] inclusive (the current token's KV must already be
+written at position lengths[b]).  GQA: the kernel processes one KV head's
+whole query group per grid cell, so each cache block is read exactly once
+per KV head.
+
+Forward-only (inference); validated against ``ref.decode_reference`` in
+interpret mode (tests/test_kernels.py).  Under CP serving the cache is
+sequence-sharded: each rank runs this kernel on its shard and ranks merge
+with the standard LSE combine (the kernel returns (out, m, l) partials).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["flash_decode", "decode_reference"]
+
+NEG = -1e30
+DEFAULT_BLOCK_K = 256
+
+
+def decode_reference(q, k, v, lengths, *, scale=None):
+    """Dense jnp oracle.  q (B,Hq,D); k,v (B,Hkv,S,D); lengths (B,)."""
+    B, Hq, D = q.shape
+    _, Hkv, S, _ = k.shape
+    G = Hq // Hkv
+    if scale is None:
+        scale = D ** -0.5
+    qf = q.astype(jnp.float32).reshape(B, Hkv, G, D) * scale
+    s = jnp.einsum("bhgd,bhsd->bhgs", qf, k.astype(jnp.float32))
+    mask = (jnp.arange(S)[None, :] <= lengths[:, None])[:, None, None, :]
+    s = jnp.where(mask, s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhgs,bhsd->bhgd", p, v.astype(jnp.float32))
+    return out.reshape(B, Hq, D).astype(q.dtype)
+
+
+def _decode_kernel(len_ref,                      # scalar prefetch
+                   q_ref, k_ref, v_ref,
+                   o_ref,
+                   acc_ref, m_ref, l_ref,
+                   *, scale: float, block_k: int, num_blocks: int):
+    b, h, kb = (pl.program_id(i) for i in range(3))
+
+    @pl.when(kb == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    length = len_ref[b]
+
+    @pl.when(kb * block_k <= length)
+    def _visit():
+        q = q_ref[0, 0].astype(jnp.float32)          # (G, D)
+        k = k_ref[0, 0]                               # (bk, D)
+        s = jax.lax.dot_general(
+            q, k.T.astype(jnp.float32), (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale   # (G, bk)
+        pos = kb * block_k + jax.lax.broadcasted_iota(
+            jnp.int32, (1, block_k), 1)
+        valid = pos <= length                         # (1, bk)
+        s = jnp.where(valid, s, NEG)
+
+        m_prev = m_ref[:, :1]
+        l_prev = l_ref[:, :1]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.where(valid, jnp.exp(s - m_new), 0.0)
+        l_new = l_prev * alpha + jnp.sum(p, axis=1, keepdims=True)
+        vv = v_ref[0, 0]
+        pv = jax.lax.dot_general(
+            p.astype(vv.dtype), vv, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        acc_ref[...] = acc_ref[...] * alpha + pv
+        m_ref[...] = jnp.broadcast_to(m_new, m_ref.shape)
+        l_ref[...] = jnp.broadcast_to(l_new, l_ref.shape)
+
+    @pl.when(kb == num_blocks - 1)
+    def _finalize():
+        l = l_ref[:, :1]
+        out = jnp.where(l > 0, acc_ref[...] / jnp.maximum(l, 1e-30), 0.0)
+        o_ref[0, 0] = out.astype(o_ref.dtype)
+
+
+def flash_decode(q, k, v, lengths, *, scale=None,
+                 block_k: int = DEFAULT_BLOCK_K, interpret: bool = False):
+    """q (B, Hq, D); k, v (B, Hkv, S, D); lengths (B,) -> (B, Hq, D)."""
+    B, Hq, D = q.shape
+    _, Hkv, S, _ = k.shape
+    G = Hq // Hkv
+    if scale is None:
+        scale = D ** -0.5
+    while S % block_k:
+        block_k //= 2
+    nk = S // block_k
+
+    def kv_block(b, h, kb, len_ref):
+        # clamp past-the-end blocks to the last needed block: Pallas's
+        # revisiting pipeline turns the repeat into a no-op fetch
+        last_needed = len_ref[b] // block_k
+        return (b, h, jnp.minimum(kb, last_needed), 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(B, Hkv, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1, G, D), lambda b, h, kb, s_: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, block_k, D), kv_block),
+            pl.BlockSpec((1, 1, block_k, D), kv_block),
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, D),
+                               lambda b, h, kb, s_: (b, h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((G, D), jnp.float32),
+            pltpu.VMEM((G, 128), jnp.float32),
+            pltpu.VMEM((G, 128), jnp.float32),
+        ],
+    )
+    kernel = functools.partial(_decode_kernel, scale=float(scale),
+                               block_k=block_k, num_blocks=nk)
+    q4 = q.reshape(B, Hkv, G, D)
+    out = pl.pallas_call(
+        kernel, grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, Hkv, G, D), q.dtype),
+        interpret=interpret,
+    )(lengths, q4, k, v)
+    return out.reshape(B, Hq, D)

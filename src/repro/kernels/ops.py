@@ -1,0 +1,155 @@
+"""Jit-ready attention ops.
+
+* ``doc_flash_attention`` — the Pallas kernel pair (fwd + custom-VJP bwd)
+  from :mod:`repro.kernels.doc_attention`.  TPU is the target; pass
+  ``interpret=True`` to validate on CPU.
+* ``doc_attention_xla``  — chunked pure-XLA implementation with identical
+  semantics.  Used for CPU training runs and for the multi-pod dry-run
+  (Pallas TPU kernels cannot lower on the CPU backend); differentiable by
+  ordinary JAX AD.
+
+Both implement the doc-mask visibility rule defined in ``ref.py``.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import doc_attention as da
+from .ref import doc_mask
+
+__all__ = ["doc_flash_attention", "doc_attention_xla"]
+
+
+def _float0_zero(x):
+    return np.zeros(x.shape, dtype=jax.dtypes.float0)
+
+
+# ===================================================================== #
+# Pallas path
+# ===================================================================== #
+@functools.partial(jax.custom_vjp, nondiff_argnums=(11, 12, 13, 14))
+def _attn(q, k, v, q_doc, q_pos, kv_doc, kv_pos, kv_idx, kv_nvis, q_idx,
+          q_nvis, scale, block_q, block_k, interpret):
+    out, _ = da.flash_fwd(
+        q, k, v, q_doc, q_pos, kv_doc, kv_pos, kv_idx, kv_nvis,
+        scale=scale, block_q=block_q, block_k=block_k, interpret=interpret)
+    return out
+
+
+def _attn_fwd(q, k, v, q_doc, q_pos, kv_doc, kv_pos, kv_idx, kv_nvis, q_idx,
+              q_nvis, scale, block_q, block_k, interpret):
+    out, lse = da.flash_fwd(
+        q, k, v, q_doc, q_pos, kv_doc, kv_pos, kv_idx, kv_nvis,
+        scale=scale, block_q=block_q, block_k=block_k, interpret=interpret)
+    res = (q, k, v, out, lse, q_doc, q_pos, kv_doc, kv_pos,
+           kv_idx, kv_nvis, q_idx, q_nvis)
+    return out, res
+
+
+def _attn_bwd(scale, block_q, block_k, interpret, res, do):
+    (q, k, v, out, lse, q_doc, q_pos, kv_doc, kv_pos,
+     kv_idx, kv_nvis, q_idx, q_nvis) = res
+    delta = jnp.sum(do.astype(jnp.float32) * out.astype(jnp.float32), axis=-1)
+    dq = da.flash_bwd_dq(
+        q, k, v, do, lse, delta, q_doc, q_pos, kv_doc, kv_pos,
+        kv_idx, kv_nvis, scale=scale, block_q=block_q, block_k=block_k,
+        interpret=interpret)
+    dk, dv = da.flash_bwd_dkv(
+        q, k, v, do, lse, delta, q_doc, q_pos, kv_doc, kv_pos,
+        q_idx, q_nvis, scale=scale, block_q=block_q, block_k=block_k,
+        interpret=interpret)
+    zeros = tuple(_float0_zero(x) for x in
+                  (q_doc, q_pos, kv_doc, kv_pos, kv_idx, kv_nvis, q_idx, q_nvis))
+    return (dq, dk, dv) + zeros
+
+
+_attn.defvjp(_attn_fwd, _attn_bwd)
+
+
+def doc_flash_attention(
+    q: jax.Array, k: jax.Array, v: jax.Array,
+    q_doc: jax.Array, q_pos: jax.Array,
+    kv_doc: jax.Array, kv_pos: jax.Array,
+    tables: Any,
+    *,
+    scale: float | None = None,
+    block_q: int = da.DEFAULT_BLOCK_Q,
+    block_k: int = da.DEFAULT_BLOCK_K,
+    interpret: bool = False,
+) -> jax.Array:
+    """Document-masked causal flash attention (Pallas TPU kernel).
+
+    ``tables`` is a :class:`~repro.kernels.doc_attention.BlockTables` or the
+    4-tuple of its arrays (kv_idx, kv_nvis, q_idx, q_nvis).
+    """
+    if scale is None:
+        scale = q.shape[-1] ** -0.5
+    if isinstance(tables, da.BlockTables):
+        kv_idx, kv_nvis, q_idx, q_nvis = tables.as_jax()
+        block_q, block_k = tables.block_q, tables.block_k
+    else:
+        kv_idx, kv_nvis, q_idx, q_nvis = tables
+    return _attn(q, k, v, q_doc, q_pos, kv_doc, kv_pos,
+                 kv_idx, kv_nvis, q_idx, q_nvis,
+                 float(scale), block_q, block_k, interpret)
+
+
+# ===================================================================== #
+# XLA fallback path (CPU training + dry-run lowering)
+# ===================================================================== #
+def doc_attention_xla(
+    q: jax.Array, k: jax.Array, v: jax.Array,
+    q_doc: jax.Array, q_pos: jax.Array,
+    kv_doc: jax.Array, kv_pos: jax.Array,
+    *,
+    scale: float | None = None,
+    q_chunk: int = 512,
+) -> jax.Array:
+    """Chunked dense attention with the doc-mask semantics of ``ref.py``.
+
+    Chunking over the query axis bounds the live logits tensor to
+    ``(B, Hq, q_chunk, Tk)`` — the XLA analogue of flash attention's
+    working-set control (full flash semantics are only needed on TPU where
+    the Pallas kernel takes over).
+    """
+    B, Hq, Tq, D = q.shape
+    _, Hkv, Tk, _ = k.shape
+    G = Hq // Hkv
+    if scale is None:
+        scale = D ** -0.5
+    if Tq % q_chunk != 0:
+        q_chunk = Tq
+    nq = Tq // q_chunk
+
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+
+    def one_chunk(args):
+        qc, qdc, qpc = args
+        qc = qc.astype(jnp.float32).reshape(B, Hkv, G, q_chunk, D)
+        s = jnp.einsum("bhgqd,bhkd->bhgqk", qc, kf) * scale
+        mask = doc_mask(qdc, qpc, kv_doc, kv_pos)
+        s = jnp.where(mask[:, None, None], s, -jnp.inf)
+        m = jnp.max(s, axis=-1, keepdims=True)
+        m_safe = jnp.where(jnp.isfinite(m), m, 0.0)
+        p = jnp.where(jnp.isfinite(s), jnp.exp(s - m_safe), 0.0)
+        l = jnp.sum(p, axis=-1, keepdims=True)
+        o = jnp.einsum("bhgqk,bhkd->bhgqd", p, vf)
+        o = jnp.where(l > 0, o / jnp.maximum(l, 1e-30), 0.0)
+        return o.reshape(B, Hq, q_chunk, D)
+
+    if nq == 1:
+        out = one_chunk((q, q_doc, q_pos))
+    else:
+        qs = q.reshape(B, Hq, nq, q_chunk, D).transpose(2, 0, 1, 3, 4)
+        qds = q_doc.reshape(B, nq, q_chunk).transpose(1, 0, 2)
+        qps = q_pos.reshape(B, nq, q_chunk).transpose(1, 0, 2)
+        outs = jax.lax.map(one_chunk, (qs, qds, qps))   # (nq, B, Hq, qc, D)
+        out = outs.transpose(1, 2, 0, 3, 4).reshape(B, Hq, Tq, D)
+    return out.astype(q.dtype)

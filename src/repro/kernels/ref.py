@@ -1,0 +1,81 @@
+"""Pure-jnp oracle for document-masked causal flash attention.
+
+This is the correctness reference for the Pallas kernels in
+``doc_attention.py`` (validated with ``assert_allclose`` across shape/dtype
+sweeps in tests/test_kernels.py) and the semantic definition of attention
+throughout the framework:
+
+    token q may attend to token k   iff   doc(q) == doc(k)
+                                      and pos(q) >= pos(k)
+                                      and doc(q) >= 0 and doc(k) >= 0
+
+``doc``/``pos`` are *document ids* and *intra-document positions* — under
+context parallelism the Q rows live on one CP worker while the KV columns
+are the concatenation of local KV and the gathered remote prefix buffer, so
+Q and KV carry independent metadata arrays.  Negative doc ids mark padding.
+
+Shapes (GQA): q (B, Hq, Tq, D); k, v (B, Hkv, Tk, D) with Hq % Hkv == 0.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["doc_mask", "mha_reference"]
+
+
+def doc_mask(q_doc, q_pos, kv_doc, kv_pos) -> jax.Array:
+    """Boolean visibility mask of shape (..., Tq, Tk)."""
+    same_doc = q_doc[..., :, None] == kv_doc[..., None, :]
+    causal = q_pos[..., :, None] >= kv_pos[..., None, :]
+    valid = (q_doc[..., :, None] >= 0) & (kv_doc[..., None, :] >= 0)
+    return same_doc & causal & valid
+
+
+def mha_reference(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    q_doc: jax.Array,
+    q_pos: jax.Array,
+    kv_doc: jax.Array,
+    kv_pos: jax.Array,
+    *,
+    scale: float | None = None,
+    return_lse: bool = False,
+):
+    """Dense reference attention.  fp32 softmax; output in q.dtype.
+
+    Rows with no visible key (e.g. padding queries) output zeros and
+    ``lse = -inf`` — the same convention the kernels implement.
+    """
+    B, Hq, Tq, D = q.shape
+    _, Hkv, Tk, _ = k.shape
+    assert Hq % Hkv == 0, (Hq, Hkv)
+    G = Hq // Hkv
+    if scale is None:
+        scale = D ** -0.5
+
+    qf = q.astype(jnp.float32).reshape(B, Hkv, G, Tq, D)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+
+    s = jnp.einsum("bhgqd,bhkd->bhgqk", qf, kf) * scale
+    mask = doc_mask(q_doc, q_pos, kv_doc, kv_pos)  # (B, Tq, Tk)
+    s = jnp.where(mask[:, None, None], s, -jnp.inf)
+
+    m = jnp.max(s, axis=-1, keepdims=True)
+    m_safe = jnp.where(jnp.isfinite(m), m, 0.0)
+    p = jnp.exp(s - m_safe)
+    p = jnp.where(jnp.isfinite(s), p, 0.0)
+    l = jnp.sum(p, axis=-1, keepdims=True)
+    out = jnp.einsum("bhgqk,bhkd->bhgqd", p, vf)
+    out = jnp.where(l > 0, out / jnp.maximum(l, 1e-30), 0.0)
+    out = out.reshape(B, Hq, Tq, D).astype(q.dtype)
+
+    if not return_lse:
+        return out
+    lse = (m_safe + jnp.log(jnp.maximum(l, 1e-30)))[..., 0]
+    lse = jnp.where(l[..., 0] > 0, lse, -jnp.inf).reshape(B, Hq, Tq)
+    return out, lse

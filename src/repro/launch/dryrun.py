@@ -1,0 +1,242 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: prove the distribution config is coherent.
+
+For every (architecture x input shape) cell, on the single-pod 16x16 mesh
+AND the 2x16x16 multi-pod mesh:
+
+    lowered  = jax.jit(step, in_shardings, out_shardings).lower(**specs)
+    compiled = lowered.compile()
+    print(compiled.memory_analysis())      # proves it fits
+    print(compiled.cost_analysis())        # FLOPs/bytes for the roofline
+
+Failures here (sharding mismatch, OOM at compile, unsupported collective)
+are bugs in the framework.  Results stream to ``dryrun_results.json``
+(incremental, resumable with --skip-done) and feed EXPERIMENTS.md §Dry-run
+and §Roofline.
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun                # everything
+    PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3_32b \
+        --shape train_4k --multi-pod both --strategy flashcp
+"""
+
+import argparse
+import json
+import time
+import traceback
+
+import jax
+
+from repro.configs import ARCHS, SHAPES, RunConfig, get_config
+from repro.launch.hlo_analysis import analyze_hlo
+from repro.launch.mesh import make_production_mesh
+from repro.launch.roofline import model_flops, roofline_terms
+from repro.launch.steps import (build_decode_step, build_prefill_step,
+                                build_train_step, effective_strategy)
+
+
+def _logits_sized(cfg, shape, mesh) -> set[int]:
+    """Result-byte sizes of attention-logits intermediates — what the
+    Pallas kernel keeps in VMEM (kernel-adjusted memory term)."""
+    if not cfg.uses_attention or shape.kind == "decode":
+        return set()
+    from repro.launch.steps import default_buf_len
+    data = mesh.size // mesh.shape["model"]
+    cp = mesh.shape["model"]
+    b_loc = max(shape.global_batch // data, 1)
+    tq = shape.seq_len // cp
+    tk = tq + cp * default_buf_len(shape.seq_len, cp)
+    hq, hkv = cfg.num_heads, cfg.num_kv_heads
+    n = b_loc * hq * tq
+    sizes = set()
+    for tk_ in (tk, shape.seq_len):          # flashcp buffer or full gather
+        for dt in (4, 2, 1):                 # f32 / bf16 / pred masks
+            sizes.add(n * tk_ * dt)
+            sizes.add(b_loc * tq * tk_ * dt)  # doc-mask tensors
+    return sizes
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                       "dryrun_results.json")
+
+
+def cell_skip_reason(cfg, shape) -> str | None:
+    if shape.name == "long_500k" and not cfg.sub_quadratic:
+        return ("long_500k needs sub-quadratic attention; skipped for pure "
+                "full-attention arch (DESIGN.md §Arch-applicability)")
+    return None
+
+
+def run_cell(arch: str, shape_name: str, *, multi_pod: bool,
+             strategy: str = "flashcp", q_chunk: int = 512,
+             remat: bool = True, kv_comm_dtype: str = "native") -> dict:
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    t0 = time.time()
+
+    reason = cell_skip_reason(cfg, shape)
+    if reason:
+        return {"arch": arch, "shape": shape_name,
+                "mesh": "2x16x16" if multi_pod else "16x16",
+                "strategy": strategy, "status": "skip", "reason": reason}
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    run = RunConfig(arch=arch, shape=shape_name, cp_strategy=strategy,
+                    attention_impl="xla", remat=remat,
+                    kv_comm_dtype=kv_comm_dtype)
+
+    if shape.kind == "train":
+        bundle = build_train_step(cfg, mesh, run, shape, q_chunk=q_chunk)
+    elif shape.kind == "prefill":
+        bundle = build_prefill_step(cfg, mesh, run, shape, q_chunk=q_chunk)
+    else:
+        bundle = build_decode_step(cfg, mesh, run, shape)
+
+    with jax.set_mesh(mesh):
+        lowered = bundle.lower()
+        compiled = lowered.compile()
+
+    ma = compiled.memory_analysis()
+    ca = compiled.cost_analysis() or {}
+    hlo = analyze_hlo(compiled.as_text(),
+                      exclude_result_bytes=_logits_sized(cfg, shape, mesh))
+
+    n_dev = mesh.size
+    flops = hlo.flops                      # trip-count-aware, per device
+    bytes_acc = hlo.bytes
+    bytes_kernel_adj = hlo.bytes - hlo.vmem_resident_bytes
+    terms = roofline_terms(flops, bytes_kernel_adj,
+                           hlo.collective_wire_bytes_tpu)
+    terms["memory_s_xla_attention"] = bytes_acc / 819e9
+    terms["collective_s_raw_cpu_hlo"] = hlo.collective_wire_bytes / 50e9
+    mf = model_flops(cfg, shape, num_devices=n_dev)
+
+    rec = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "strategy": effective_strategy(cfg, strategy),
+        "status": "ok",
+        "seconds": round(time.time() - t0, 1),
+        "devices": n_dev,
+        "memory": {
+            "argument_bytes": ma.argument_size_in_bytes,
+            "output_bytes": ma.output_size_in_bytes,
+            "temp_bytes": ma.temp_size_in_bytes,
+            "alias_bytes": ma.alias_size_in_bytes,
+            "peak_bytes_per_device": ma.argument_size_in_bytes
+            + ma.output_size_in_bytes + ma.temp_size_in_bytes
+            - ma.alias_size_in_bytes,
+        },
+        "cost": {"flops_per_device": flops,
+                 "bytes_per_device": bytes_acc,
+                 "bytes_kernel_adjusted": bytes_kernel_adj,
+                 "xla_cost_analysis_flops_loopbody_once":
+                     float(ca.get("flops", 0.0))},
+        "collectives": {
+            "wire_bytes_per_device": hlo.collective_wire_bytes,
+            "wire_bytes_tpu_adjusted": hlo.collective_wire_bytes_tpu,
+            "count": hlo.collective_count,
+            "by_kind": {k: round(v) for k, v in
+                        hlo.collective_by_kind.items()}},
+        "roofline": terms,
+        "model_flops_per_device": mf,
+        "useful_flops_frac": (mf / flops) if flops else None,
+    }
+    return rec
+
+
+def load_results(path: str) -> list[dict]:
+    if os.path.exists(path):
+        with open(path) as f:
+            return json.load(f)
+    return []
+
+
+def save_results(path: str, recs: list[dict]) -> None:
+    tmp = path + ".tmp"
+    with open(tmp, "w") as f:
+        json.dump(recs, f, indent=1)
+    os.replace(tmp, path)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--multi-pod", default="both",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--strategy", default="flashcp")
+    ap.add_argument("--q-chunk", type=int, default=512)
+    ap.add_argument("--kv-comm-dtype", default="native",
+                    choices=["native", "int8"])
+    ap.add_argument("--no-remat", action="store_true")
+    ap.add_argument("--results", default=RESULTS)
+    ap.add_argument("--skip-done", action="store_true")
+    ap.add_argument("--fail-fast", action="store_true")
+    args = ap.parse_args()
+
+    archs = sorted(ARCHS) if args.arch == "all" else [args.arch]
+    shapes = list(SHAPES) if args.shape == "all" else [args.shape]
+    pods = {"single": [False], "multi": [True],
+            "both": [False, True]}[args.multi_pod]
+
+    recs = load_results(args.results)
+    done = {(r["arch"], r["shape"], r["mesh"], r.get("strategy", ""))
+            for r in recs if r.get("status") in ("ok", "skip")}
+
+    failures = 0
+    for arch in archs:
+        for shape in shapes:
+            for mp in pods:
+                mesh_name = "2x16x16" if mp else "16x16"
+                strat = effective_strategy(get_config(arch), args.strategy)
+                key = (arch, shape, mesh_name, strat)
+                if args.skip_done and key in done:
+                    continue
+                print(f"--- {arch} x {shape} x {mesh_name} [{strat}]",
+                      flush=True)
+                try:
+                    rec = run_cell(arch, shape, multi_pod=mp,
+                                   strategy=args.strategy,
+                                   q_chunk=args.q_chunk,
+                                   remat=not args.no_remat,
+                                   kv_comm_dtype=args.kv_comm_dtype)
+                except Exception as e:  # noqa: BLE001
+                    failures += 1
+                    rec = {"arch": arch, "shape": shape, "mesh": mesh_name,
+                           "strategy": args.strategy, "status": "error",
+                           "error": f"{type(e).__name__}: {e}",
+                           "trace": traceback.format_exc()[-2000:]}
+                    print(rec["error"], flush=True)
+                    if args.fail_fast:
+                        recs = [r for r in recs if
+                                (r["arch"], r["shape"], r["mesh"],
+                                 r.get("strategy", "")) != key]
+                        recs.append(rec)
+                        save_results(args.results, recs)
+                        raise
+                else:
+                    if rec["status"] == "ok":
+                        mem = rec["memory"]["peak_bytes_per_device"] / 2**30
+                        rf = rec["roofline"]
+                        print(f"    ok in {rec['seconds']}s | "
+                              f"peak {mem:.2f} GiB/dev | "
+                              f"compute {rf['compute_s']*1e3:.1f}ms "
+                              f"mem {rf['memory_s']*1e3:.1f}ms "
+                              f"coll {rf['collective_s']*1e3:.1f}ms "
+                              f"-> {rf['dominant']}", flush=True)
+                    else:
+                        print(f"    skip: {rec['reason']}", flush=True)
+                recs = [r for r in recs if
+                        (r["arch"], r["shape"], r["mesh"],
+                         r.get("strategy", "")) != key]
+                recs.append(rec)
+                save_results(args.results, recs)
+
+    print(f"\n{len(recs)} records; {failures} failures")
+    return 0 if failures == 0 else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,293 @@
+"""Trip-count-aware HLO cost analysis.
+
+``compiled.cost_analysis()`` counts while-loop bodies ONCE — useless for
+scan-over-layers models where ~all work lives inside loops.  This module
+parses the partitioned HLO text and rolls costs up through the call graph,
+multiplying loop bodies by their ``known_trip_count``:
+
+  * flops   — 2 * prod(result dims) * prod(contracted dims) per dot;
+  * bytes   — operand + result bytes per top-level op (post-fusion, so a
+              fusion counts once — matching XLA's bytes-accessed notion);
+  * collectives — wire bytes per kind (all-gather, all-reduce,
+              reduce-scatter, all-to-all, collective-permute), with
+              replica-group-aware factors.
+
+All quantities are per-device (the module text is the partitioned module).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+
+__all__ = ["analyze_hlo", "HloCost"]
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s4": 1, "u4": 1, "s16": 2, "u16": 2,
+    "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+    "f64": 8, "c64": 8, "c128": 16, "token": 0, "opaque": 0,
+}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([\d,]*)\]")
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?(%[\w.\-]+)\s*=\s*(.*)$")
+_OPCODE_RE = re.compile(r"^\s*((?:\([^)]*\)|[^ (]+))\s*([\w\-]+)\(")
+_CALLED_RE = re.compile(
+    r"(?:calls|to_apply|condition|body|select|scatter)=(%[\w.\-]+)")
+_TRIP_RE = re.compile(r'known_trip_count[\\"={:]+n[\\"]*:[\\"]*(\d+)')
+_GROUPS_SET_RE = re.compile(r"replica_groups=\{\{([\d,]+)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_OPERAND_RE = re.compile(r"\((%[\w.\-]+(?:,\s*%[\w.\-]+)*)?\)")
+
+_SKIP_BYTES_OPS = {
+    "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+    "after-all", "iota", "while", "conditional", "call",
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+
+def _type_bytes(typestr: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(typestr):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _shape_dims(typestr: str) -> list[int]:
+    m = _SHAPE_RE.search(typestr)
+    if not m:
+        return []
+    return [int(x) for x in m.group(2).split(",") if x]
+
+
+@dataclasses.dataclass
+class _Comp:
+    name: str
+    flops: float = 0.0
+    bytes: float = 0.0
+    excluded_bytes: float = 0.0        # ops matched by exclude filter
+    coll: dict | None = None
+    calls: list | None = None          # [(comp_name, trip_mult)]
+    fused_calls: list | None = None    # flops-only (fusion subcomps)
+
+
+@dataclasses.dataclass
+class HloCost:
+    flops: float
+    bytes: float
+    collective_wire_bytes: float
+    collective_by_kind: dict[str, float]
+    collective_count: float
+    # bytes attributable to ops whose results a fused attention kernel
+    # keeps in VMEM (logits-sized intermediates) — subtract for the
+    # kernel-adjusted memory term
+    vmem_resident_bytes: float = 0.0
+    # collective wire bytes with the CPU-backend bf16-upcast artifact
+    # removed: CPU XLA has no native bf16 dot, so it converts weights to
+    # f32 *before* the FSDP all-gather; TPU gathers the bf16 original.
+    # Gathers whose operand is a convert fusion are counted at half size.
+    collective_wire_bytes_tpu: float = 0.0
+
+
+def _group_size(line: str) -> int:
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        return int(m.group(2))
+    m = _GROUPS_SET_RE.search(line)
+    if m:
+        return len(m.group(1).split(","))
+    return 1
+
+
+def _collective_wire(kind: str, result_bytes: int, g: int) -> float:
+    g = max(g, 1)
+    if kind == "all-gather":
+        return result_bytes * (g - 1) / g
+    if kind == "reduce-scatter":
+        return result_bytes * (g - 1)
+    if kind == "all-reduce":
+        return result_bytes * 2 * (g - 1) / g
+    if kind == "all-to-all":
+        return result_bytes * (g - 1) / g
+    return float(result_bytes)  # collective-permute: one hop
+
+
+def _parse_computations(text: str, exclude_result_bytes=frozenset()
+                        ) -> tuple[dict[str, _Comp], str | None]:
+    comps: dict[str, _Comp] = {}
+    cur: _Comp | None = None
+    symbols: dict[str, str] = {}
+    entry: str | None = None
+
+    for raw in text.splitlines():
+        if raw.startswith("%") or raw.startswith("ENTRY"):
+            header = raw
+            name = header.split(" ", 1)[0]
+            if name == "ENTRY":
+                name = header.split(" ", 2)[1]
+            name = name.rstrip("(").strip()
+            cur = _Comp(name=name, coll={}, calls=[], fused_calls=[])
+            comps[cur.name] = cur
+            if header.startswith("ENTRY"):
+                entry = cur.name
+            symbols = {}
+            # parameter types from the signature
+            for pm in re.finditer(r"(%?[\w.\-]+):\s*([a-z0-9]+\[[\d,]*\])",
+                                  header):
+                symbols["%" + pm.group(1).lstrip("%")] = pm.group(2)
+            continue
+        if cur is None:
+            continue
+        line = raw.strip()
+        if not line or line == "}":
+            continue
+        m = _DEF_RE.match(raw)
+        if not m:
+            continue
+        var, rest = m.group(1), m.group(2)
+        # result type = leading type expression
+        tm = re.match(r"((?:\([^)]*\)|[a-z0-9]+\[[\d,]*\][^\s]*))\s+"
+                      r"([\w\-]+)", rest)
+        if not tm:
+            continue
+        typestr, opcode = tm.group(1), tm.group(2)
+        symbols[var] = typestr
+        result_bytes = _type_bytes(typestr)
+
+        # operands (types looked up in the symbol table)
+        operand_bytes = 0
+        max_operand = 0
+        args = ""
+        paren = rest.find("(", rest.find(opcode))
+        j = paren
+        if paren != -1:
+            depth, j = 0, paren
+            for j in range(paren, len(rest)):
+                if rest[j] == "(":
+                    depth += 1
+                elif rest[j] == ")":
+                    depth -= 1
+                    if depth == 0:
+                        break
+            args = rest[paren + 1: j]
+            excluded_operand_bytes = 0
+            for ref in re.findall(r"%[\w.\-]+", args):
+                b = _type_bytes(symbols.get(ref, ""))
+                operand_bytes += b
+                max_operand = max(max_operand, b)
+                if b in exclude_result_bytes:
+                    excluded_operand_bytes += b
+
+        # called computations
+        trip = 1
+        tmt = _TRIP_RE.search(rest)
+        if tmt:
+            trip = int(tmt.group(1))
+        for cm in _CALLED_RE.finditer(rest):
+            target = cm.group(1)
+            if opcode == "fusion":
+                cur.fused_calls.append(target)
+            elif opcode == "while":
+                cur.calls.append((target, trip))
+            else:
+                cur.fused_calls.append(target)
+
+        # flops: dot ops (works inside fusion subcomputations too)
+        if opcode == "dot":
+            dims = _shape_dims(typestr)
+            out = 1
+            for d in dims:
+                out *= d
+            contract = 1
+            lc = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", rest)
+            refs = re.findall(r"%[\w.\-]+", args)
+            if lc and refs:
+                lhs_dims = _shape_dims(symbols.get(refs[0], ""))
+                for idx in lc.group(1).split(","):
+                    if idx and int(idx) < len(lhs_dims):
+                        contract *= lhs_dims[int(idx)]
+            cur.flops += 2.0 * out * contract
+
+        # bytes + collectives (top-level, post-fusion).  Slicing/update ops
+        # touch only the slice, not the whole operand (matching XLA's
+        # cost-analysis special cases).
+        if opcode not in _SKIP_BYTES_OPS:
+            if opcode in ("dynamic-slice", "slice", "gather", "broadcast",
+                          "reverse", "pad"):
+                op_bytes = 2.0 * result_bytes
+                excl = op_bytes if result_bytes in exclude_result_bytes \
+                    else 0.0
+            elif opcode in ("dynamic-update-slice", "scatter"):
+                # touches the update region twice; base is aliased
+                op_bytes = 2.0 * max(operand_bytes - max_operand, 0)
+                excl = 0.0
+            else:
+                op_bytes = result_bytes + operand_bytes
+                excl = excluded_operand_bytes + (
+                    result_bytes if result_bytes in exclude_result_bytes
+                    else 0)
+            cur.bytes += op_bytes
+            cur.excluded_bytes += min(excl, op_bytes)
+        base = opcode.replace("-start", "").replace("-done", "")
+        if base in _COLLECTIVES and not opcode.endswith("-done"):
+            wire = _collective_wire(base, result_bytes, _group_size(rest))
+            cur.coll[base] = cur.coll.get(base, 0.0) + wire
+            cur.coll["_count"] = cur.coll.get("_count", 0.0) + 1
+            # TPU-adjusted: f32-upcast-then-gather is a CPU lowering of a
+            # bf16 dot; the TPU wire carries bf16.
+            tpu_wire = wire / 2 if ("convert" in args and "f32" in typestr
+                                    ) else wire
+            cur.coll["_tpu"] = cur.coll.get("_tpu", 0.0) + tpu_wire
+
+    return comps, entry
+
+
+def analyze_hlo(text: str, entry: str | None = None,
+                exclude_result_bytes=frozenset()) -> HloCost:
+    comps, found_entry = _parse_computations(
+        text, exclude_result_bytes=frozenset(exclude_result_bytes))
+    if entry is None:
+        entry = found_entry
+    if entry is None:  # pragma: no cover
+        entry = next(iter(comps))
+
+    memo: dict[str, tuple] = {}
+
+    def roll(name: str) -> tuple:
+        """(flops, bytes, excluded, coll) incl. callees x multiplicity."""
+        if name in memo:
+            return memo[name]
+        c = comps.get(name)
+        if c is None:
+            return 0.0, 0.0, 0.0, {}
+        fl, by, ex = c.flops, c.bytes, c.excluded_bytes
+        coll = dict(c.coll or {})
+        for target, trip in c.calls or []:
+            f2, b2, e2, c2 = roll(target)
+            fl += trip * f2
+            by += trip * b2
+            ex += trip * e2
+            for k, v in c2.items():
+                coll[k] = coll.get(k, 0.0) + trip * v
+        for target in c.fused_calls or []:
+            f2, _, _, c2 = roll(target)  # fused: flops only, bytes counted
+            fl += f2                     # at the fusion op itself
+            for k, v in c2.items():
+                coll[k] = coll.get(k, 0.0) + v
+        memo[name] = (fl, by, ex, coll)
+        return memo[name]
+
+    fl, by, ex, coll = roll(entry)
+    count = coll.pop("_count", 0.0)
+    tpu = coll.pop("_tpu", 0.0)
+    return HloCost(flops=fl, bytes=by,
+                   collective_wire_bytes=sum(coll.values()),
+                   collective_by_kind=coll, collective_count=count,
+                   vmem_resident_bytes=ex, collective_wire_bytes_tpu=tpu)

@@ -1,0 +1,145 @@
+"""Roofline analysis from compiled dry-run artifacts (no hardware needed).
+
+Per (arch x shape x mesh) the dry-run records, from the *partitioned*
+module (all quantities per-device):
+
+  compute term    = HLO_FLOPs / peak_FLOP/s        (197 TFLOP/s bf16, v5e)
+  memory term     = HLO_bytes / HBM_bw             (819 GB/s)
+  collective term = collective_wire_bytes / ICI_bw (~50 GB/s/link)
+
+``cost_analysis()`` provides FLOPs and bytes-accessed; collective bytes are
+NOT in cost_analysis, so we parse the compiled HLO text and sum, per
+collective kind, the bytes each device actually puts on the wire:
+
+  all-gather       result x (g-1)/g      (receives g-1 remote shards)
+  reduce-scatter   operand x (g-1)/g
+  all-reduce       result x 2(g-1)/g     (ring: reduce-scatter + all-gather)
+  all-to-all       result x (g-1)/g
+  collective-permute  result             (one hop)
+
+The dominant term identifies the bottleneck the §Perf loop iterates on.
+MODEL_FLOPS (6·N_active·D for training; 2·N_active·D for inference) over
+HLO_FLOPs exposes remat/redundancy waste.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+
+import numpy as np
+
+__all__ = ["HW", "CollectiveStats", "collective_stats", "roofline_terms",
+           "model_flops"]
+
+HW = {
+    "peak_flops": 197e12,   # bf16 / chip (TPU v5e)
+    "hbm_bw": 819e9,        # B/s
+    "ici_bw": 50e9,         # B/s per link
+}
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+}
+
+_COLL_RE = re.compile(
+    r"=\s*(?:\()?\s*((?:[a-z0-9]+\[[\d,]*\][^ ]*(?:,\s*)?)+)\)?\s*"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(", )
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([\d,]*)\]")
+_GROUPS_SET_RE = re.compile(r"replica_groups=\{\{([\d,]+)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _shape_bytes(typestr: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(typestr):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    wire_bytes: int                   # per-device bytes on the wire
+    by_kind: dict[str, int]
+    count: int
+
+
+def collective_stats(hlo_text: str) -> CollectiveStats:
+    by_kind: dict[str, int] = {}
+    count = 0
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        if "-done(" in line:
+            continue  # started ops are counted once at -start/plain form
+        typestr, kind = m.group(1), m.group(2)
+        result = _shape_bytes(typestr)
+        g = _group_size(line)
+        if kind == "all-gather":
+            wire = result * (g - 1) // max(g, 1)
+        elif kind == "reduce-scatter":
+            wire = result * (g - 1)          # operand = result*g
+        elif kind == "all-reduce":
+            wire = result * 2 * (g - 1) // max(g, 1)
+        elif kind == "all-to-all":
+            wire = result * (g - 1) // max(g, 1)
+        else:  # collective-permute
+            wire = result
+        by_kind[kind] = by_kind.get(kind, 0) + wire
+        count += 1
+    return CollectiveStats(wire_bytes=sum(by_kind.values()),
+                           by_kind=by_kind, count=count)
+
+
+def _group_size(line: str) -> int:
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        return int(m.group(2))
+    m = _GROUPS_SET_RE.search(line)
+    if m:
+        return len(m.group(1).split(","))
+    return 1
+
+
+# --------------------------------------------------------------------- #
+def roofline_terms(flops_per_dev: float, bytes_per_dev: float,
+                   coll_bytes_per_dev: float, hw: dict = HW) -> dict:
+    t_c = flops_per_dev / hw["peak_flops"]
+    t_m = bytes_per_dev / hw["hbm_bw"]
+    t_n = coll_bytes_per_dev / hw["ici_bw"]
+    dominant = max((("compute", t_c), ("memory", t_m), ("collective", t_n)),
+                   key=lambda kv: kv[1])[0]
+    bound = max(t_c, t_m, t_n)
+    return {
+        "compute_s": t_c, "memory_s": t_m, "collective_s": t_n,
+        "dominant": dominant,
+        # fraction of the step the compute roofline would occupy if the
+        # dominant term were fully overlapped with compute
+        "roofline_fraction": (t_c / bound) if bound > 0 else 0.0,
+    }
+
+
+def model_flops(cfg, shape, *, per_device_tokens: int | None = None,
+                num_devices: int = 256) -> float:
+    """MODEL_FLOPS = 6·N_active·D (train) or 2·N_active·D (inference),
+    per device."""
+    n_active = cfg.active_param_count()
+    if shape.kind == "train":
+        tokens = shape.seq_len * shape.global_batch
+        mult = 6.0
+    elif shape.kind == "prefill":
+        tokens = shape.seq_len * shape.global_batch
+        mult = 2.0
+    else:  # decode: one token per sequence
+        tokens = shape.global_batch
+        mult = 2.0
+    return mult * n_active * tokens / num_devices

@@ -1,0 +1,182 @@
+"""End-to-end fault-tolerant training driver.
+
+Wires together: data pipeline (FlashCP planning per batch) -> pjit'd
+train step (CP attention islands, FSDP params) -> AdamW -> async
+checkpointing -> fault-tolerance supervision (restart / elastic shrink)
+-> straggler-adaptive planner targets.
+
+CPU-scale example (quickstart-sized model, real training):
+
+    PYTHONPATH=src python -m repro.launch.train --arch starcoder2_3b \
+        --smoke --steps 20 --seq-len 512 --batch 2 --mesh 1x1
+
+Production shapes lower through the same path (see launch/dryrun.py for
+the no-hardware variant).
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.checkpoint import CheckpointManager
+from repro.configs import RunConfig, get_config, reduce_for_smoke
+from repro.configs.base import ShapeConfig
+from repro.data.pipeline import PipelineConfig, Prefetcher, make_batch
+from repro.launch.mesh import make_local_mesh, make_production_mesh
+from repro.launch.steps import build_train_step, effective_strategy
+from repro.models import init_params
+from repro.optim import adamw_init
+from repro.runtime import (FailurePolicy, StragglerMonitor, TrainingFailure,
+                           run_with_recovery)
+from repro.runtime.sharding import batch_axes_of, param_shardings
+
+
+def device_put_batch(batch, shardings):
+    out = {}
+    for k, v in batch.items():
+        if k == "stats" or k == "perm":
+            continue
+        out[k] = jax.device_put(jnp.asarray(v), shardings.get(k))
+    return out
+
+
+def train(args) -> dict:
+    cfg = get_config(args.arch)
+    if args.smoke:
+        cfg = reduce_for_smoke(cfg)
+    if args.mesh == "prod":
+        mesh = make_production_mesh()
+    else:
+        d, m = (int(x) for x in args.mesh.split("x"))
+        mesh = make_local_mesh(d, m)
+    cp = mesh.shape["model"]
+
+    run = RunConfig(arch=args.arch, cp_strategy=args.strategy,
+                    attention_impl=args.attention_impl, lr=args.lr,
+                    total_steps=args.steps, warmup_steps=max(args.steps // 10, 1),
+                    grad_compression=args.grad_compression,
+                    checkpoint_dir=args.checkpoint_dir, remat=not args.no_remat)
+    shape = ShapeConfig("custom", args.seq_len, args.batch, "train")
+    strategy = effective_strategy(cfg, run.cp_strategy)
+
+    pipe_cfg = PipelineConfig(
+        dataset=args.dataset, context_len=args.seq_len,
+        batch_per_host=args.batch, cp_size=cp, strategy=strategy,
+        vocab_size=cfg.vocab_size, seed=run.seed,
+        buf_len=None if cp == 1 else None, align=1 if cp == 1 else 16)
+
+    bundle = build_train_step(cfg, mesh, run, shape, q_chunk=args.q_chunk)
+    p_shard, o_shard, b_shard, _ = bundle.in_shardings
+
+    with jax.set_mesh(mesh):
+        params = init_params(jax.random.PRNGKey(run.seed), cfg)
+        params = jax.device_put(params, p_shard)
+        opt = jax.device_put(adamw_init(params), o_shard)
+        step_fn = jax.jit(bundle.fn, in_shardings=bundle.in_shardings,
+                          out_shardings=bundle.out_shardings,
+                          donate_argnums=bundle.donate_argnums)
+
+        ckpt = CheckpointManager(run.checkpoint_dir, keep=2)
+        straggler = StragglerMonitor()
+        policy = FailurePolicy(min_hosts=1)
+        start = 0
+        if args.resume and ckpt.latest_step() is not None:
+            start, state, _ = ckpt.restore(
+                shardings={"params": p_shard, "opt": o_shard})
+            params, opt = state["params"], state["opt"]
+            print(f"[train] resumed from step {start}")
+
+        state = {"params": params, "opt": opt}
+        losses = []
+        it = Prefetcher(pipe_cfg, start_step=start) if args.prefetch \
+            else None
+
+        def one_step(step: int) -> None:
+            nonlocal state
+            t0 = time.time()
+            if args.fail_at == step and policy.restarts == 0:
+                raise TrainingFailure("injected failure", failed_hosts=[])
+            batch = next(it) if it else make_batch(pipe_cfg, step)
+            db = device_put_batch(batch, b_shard)
+            # tolerate missing optional keys for this strategy
+            db = {k: v for k, v in db.items() if k in
+                  bundle.abstract_inputs[2]}
+            p, o, metrics = step_fn(state["params"], state["opt"], db,
+                                    jnp.asarray(step, jnp.int32))
+            state = {"params": p, "opt": o}
+            loss = float(metrics["loss"])
+            losses.append(loss)
+            straggler.record_step(time.time() - t0)
+            if step % args.log_every == 0:
+                print(f"[train] step {step:5d} loss {loss:.4f} "
+                      f"ce {float(metrics['ce']):.4f} "
+                      f"gnorm {float(metrics['grad_norm']):.2f} "
+                      f"lr {float(metrics['lr']):.2e} "
+                      f"imb {batch['stats']['imbalance']:.3f} "
+                      f"comm_tok {batch['stats']['comm_tokens']} "
+                      f"{time.time()-t0:.2f}s", flush=True)
+            if args.ckpt_every and step and step % args.ckpt_every == 0:
+                ckpt.save(step + 1, state, blocking=False)
+
+        def on_restore(action, failed_hosts):
+            nonlocal state
+            latest = ckpt.latest_step()
+            if latest is None:
+                state = {"params": jax.device_put(
+                    init_params(jax.random.PRNGKey(run.seed), cfg), p_shard)}
+                state["opt"] = jax.device_put(adamw_init(state["params"]),
+                                              o_shard)
+                return 0
+            s, st, _ = ckpt.restore(
+                shardings={"params": p_shard, "opt": o_shard})
+            state = st
+            print(f"[train] restored step {s} after {action.value}")
+            return s
+
+        final = run_with_recovery(one_step, start_step=start,
+                                  total_steps=args.steps, policy=policy,
+                                  on_restore=on_restore)
+        ckpt.save(final, state, blocking=True)
+        if it:
+            it.close()
+    return {"final_step": final, "losses": losses}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="starcoder2_3b")
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced config (CPU-trainable)")
+    ap.add_argument("--mesh", default="1x1", help="DxM or 'prod'")
+    ap.add_argument("--strategy", default="flashcp")
+    ap.add_argument("--attention-impl", default="xla")
+    ap.add_argument("--dataset", default="wlb_llm")
+    ap.add_argument("--seq-len", type=int, default=512)
+    ap.add_argument("--batch", type=int, default=2)
+    ap.add_argument("--steps", type=int, default=20)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--q-chunk", type=int, default=128)
+    ap.add_argument("--grad-compression", default="none")
+    ap.add_argument("--checkpoint-dir", default="/tmp/repro_ckpt")
+    ap.add_argument("--ckpt-every", type=int, default=0)
+    ap.add_argument("--log-every", type=int, default=1)
+    ap.add_argument("--resume", action="store_true")
+    ap.add_argument("--prefetch", action="store_true")
+    ap.add_argument("--no-remat", action="store_true")
+    ap.add_argument("--fail-at", type=int, default=-1,
+                    help="inject a failure at this step (FT test)")
+    args = ap.parse_args()
+    out = train(args)
+    print(f"[train] done at step {out['final_step']}; "
+          f"loss {out['losses'][0]:.3f} -> {out['losses'][-1]:.3f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,9 @@
+from .context import ExecContext, make_local_context, local_ssm_scan
+from .transformer import (block_kinds, decode_step, forward, init_cache,
+                          init_params, loss_fn, period_length)
+
+__all__ = [
+    "ExecContext", "make_local_context", "local_ssm_scan",
+    "block_kinds", "decode_step", "forward", "init_cache", "init_params",
+    "loss_fn", "period_length",
+]

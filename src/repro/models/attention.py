@@ -1,0 +1,102 @@
+"""GQA attention block: projections + RoPE + (CP-aware) masked attention.
+
+The inner attention is ``ctx.attn`` — locally a doc-masked kernel, under CP
+the FlashCP shard_map island.  qk_norm (Qwen3) is per-head RMS norm applied
+before RoPE.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .layers import _he, rope
+
+__all__ = ["attn_init", "attn_apply", "attn_cache_init", "attn_decode"]
+
+
+def attn_init(rng, cfg):
+    d, hd = cfg.d_model, cfg.resolved_head_dim
+    hq, hkv = cfg.num_heads, cfg.num_kv_heads
+    rs = jax.random.split(rng, 4)
+    p = {
+        "wq": _he(rs[0], (d, hq * hd), d),
+        "wk": _he(rs[1], (d, hkv * hd), d),
+        "wv": _he(rs[2], (d, hkv * hd), d),
+        "wo": _he(rs[3], (hq * hd, d), hq * hd),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.ones((hd,), jnp.float32)
+        p["k_norm"] = jnp.ones((hd,), jnp.float32)
+    return p
+
+
+def _head_norm(x, g, eps):
+    xf = x.astype(jnp.float32)
+    y = xf * jax.lax.rsqrt(jnp.mean(xf * xf, -1, keepdims=True) + eps)
+    return (y * g).astype(x.dtype)
+
+
+def _project(p, cfg, x):
+    B, T, _ = x.shape
+    hd = cfg.resolved_head_dim
+    q = (x @ p["wq"].astype(x.dtype)).reshape(B, T, cfg.num_heads, hd)
+    k = (x @ p["wk"].astype(x.dtype)).reshape(B, T, cfg.num_kv_heads, hd)
+    v = (x @ p["wv"].astype(x.dtype)).reshape(B, T, cfg.num_kv_heads, hd)
+    if cfg.qk_norm:
+        q = _head_norm(q, p["q_norm"], cfg.norm_eps)
+        k = _head_norm(k, p["k_norm"], cfg.norm_eps)
+    return (q.swapaxes(1, 2), k.swapaxes(1, 2), v.swapaxes(1, 2))
+
+
+def attn_apply(p, cfg, ctx, x):
+    """x (B, T, d) -> (B, T, d)."""
+    B, T, _ = x.shape
+    q, k, v = _project(p, cfg, x)
+    q = rope(q, ctx.pos, cfg.rope_theta)
+    k = rope(k, ctx.pos, cfg.rope_theta)
+    out = ctx.attn(q, k, v)                       # (B, Hq, T, hd)
+    out = out.swapaxes(1, 2).reshape(B, T, cfg.num_heads * cfg.resolved_head_dim)
+    return out @ p["wo"].astype(x.dtype)
+
+
+# ------------------------------------------------------------------ #
+# decode: one new token against a (sequence-sharded) KV cache
+# ------------------------------------------------------------------ #
+def attn_cache_init(cfg, batch: int, max_len: int, dtype):
+    hd = cfg.resolved_head_dim
+    return {
+        "k": jnp.zeros((batch, cfg.num_kv_heads, max_len, hd), dtype),
+        "v": jnp.zeros((batch, cfg.num_kv_heads, max_len, hd), dtype),
+    }
+
+
+def attn_decode(p, cfg, x_t, pos_t, cache):
+    """x_t (B, d); pos_t (B,) current positions.  Distributed flash-decode:
+    under pjit the cache's sequence axis is sharded over the ``model`` mesh
+    axis, and XLA partitions the fp32 softmax (max/sum all-reduce + psum of
+    the weighted values) — the LSE-merge pattern — automatically."""
+    B, d = x_t.shape
+    hd = cfg.resolved_head_dim
+    q, k, v = _project(p, cfg, x_t[:, None, :])
+    q = rope(q, pos_t[:, None], cfg.rope_theta)            # (B,Hq,1,hd)
+    k = rope(k, pos_t[:, None], cfg.rope_theta)
+
+    S = cache["k"].shape[2]
+    # scatter the new KV at pos_t (per sample) — in-place update, not a
+    # full-cache rewrite (the decode step is HBM-bound on the cache read).
+    bi = jnp.arange(B)[:, None]
+    hi = jnp.arange(cfg.num_kv_heads)[None, :]
+    kc = cache["k"].at[bi, hi, pos_t[:, None]].set(k[:, :, 0, :])
+    vc = cache["v"].at[bi, hi, pos_t[:, None]].set(v[:, :, 0, :])
+
+    G = cfg.num_heads // cfg.num_kv_heads
+    qf = (q.astype(jnp.float32) * hd ** -0.5) \
+        .reshape(B, cfg.num_kv_heads, G, hd)
+    s = jnp.einsum("bhgd,bhsd->bhgs", qf, kc.astype(jnp.float32))
+    mask = (jnp.arange(S)[None, :] <= pos_t[:, None])[:, None, None, :]
+    s = jnp.where(mask, s, -jnp.inf)
+    p_att = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhgs,bhsd->bhgd", p_att, vc.astype(jnp.float32))
+    out = out.reshape(B, cfg.num_heads * hd).astype(x_t.dtype)
+    return out @ p["wo"].astype(x_t.dtype), {"k": kc, "v": vc}

@@ -1,0 +1,137 @@
+"""Shared neural building blocks (pure functions over param dicts).
+
+No flax/haiku offline — a minimal functional module style is used across
+the framework: ``init_*`` builds nested param dicts; apply functions take
+``(params, x, ...)``.  Compute dtype is driven by the input dtype; params
+are stored fp32 (master) and cast at use (mixed precision).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "dense_init", "dense", "rmsnorm_init", "rmsnorm",
+    "embed_init", "embed", "rope", "mlp_init", "mlp_apply",
+    "cross_entropy",
+]
+
+
+def _he(rng, shape, fan_in):
+    return (jax.random.normal(rng, shape, dtype=jnp.float32)
+            * np.sqrt(1.0 / max(fan_in, 1)))
+
+
+def dense_init(rng, d_in: int, d_out: int):
+    return {"w": _he(rng, (d_in, d_out), d_in)}
+
+
+def dense(p, x):
+    w = p["w"].astype(x.dtype)
+    return x @ w
+
+
+def rmsnorm_init(d: int):
+    return {"g": jnp.ones((d,), dtype=jnp.float32)}
+
+
+def rmsnorm(p, x, eps: float = 1e-5):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * p["g"]).astype(x.dtype)
+
+
+def embed_init(rng, vocab: int, d: int):
+    return {"e": jax.random.normal(rng, (vocab, d), dtype=jnp.float32) * 0.02}
+
+
+def embed(p, tokens, dtype):
+    safe = jnp.maximum(tokens, 0)            # padding tokens may be -1
+    out = jnp.take(p["e"], safe, axis=0).astype(dtype)
+    return jnp.where((tokens >= 0)[..., None], out, 0.0)
+
+
+def rope(x: jax.Array, pos: jax.Array, theta: float = 10_000.0) -> jax.Array:
+    """Rotary embedding.  x (B, H, T, D); pos (B, T) *intra-document*
+    positions — with packing each document restarts at 0, which is exactly
+    the document-mask semantics."""
+    B, H, T, D = x.shape
+    half = D // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = pos[:, None, :, None].astype(jnp.float32) * freqs  # (B,1,T,half)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = x[..., :half], x[..., half:]
+    xf1, xf2 = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    return jnp.concatenate(
+        [xf1 * cos - xf2 * sin, xf2 * cos + xf1 * sin], axis=-1
+    ).astype(x.dtype)
+
+
+# --------------------------------------------------------------------- #
+# FFN: silu-GLU (llama family) or plain gelu MLP (starcoder2 / musicgen)
+# --------------------------------------------------------------------- #
+def mlp_init(rng, d: int, d_ff: int, kind: str):
+    r1, r2, r3 = jax.random.split(rng, 3)
+    if kind == "glu":
+        return {"wi": _he(r1, (d, d_ff), d), "wg": _he(r2, (d, d_ff), d),
+                "wo": _he(r3, (d_ff, d), d_ff)}
+    return {"wi": _he(r1, (d, d_ff), d), "wo": _he(r3, (d_ff, d), d_ff)}
+
+
+def mlp_apply(p, x, kind: str):
+    if kind == "glu":
+        h = jax.nn.silu(x @ p["wg"].astype(x.dtype)) * (x @ p["wi"].astype(x.dtype))
+    else:
+        h = jax.nn.gelu(x @ p["wi"].astype(x.dtype))
+    return h @ p["wo"].astype(x.dtype)
+
+
+def cross_entropy(logits: jax.Array, labels: jax.Array) -> jax.Array:
+    """Mean CE over valid positions (labels < 0 are masked).
+
+    logits (B, T, V); labels (B, T).  fp32 log-softmax for stability.
+    """
+    lf = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(lf, axis=-1)
+    safe = jnp.maximum(labels, 0)
+    gold = jnp.take_along_axis(lf, safe[..., None], axis=-1)[..., 0]
+    ce = lse - gold
+    mask = (labels >= 0).astype(jnp.float32)
+    return jnp.sum(ce * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+
+
+def chunked_lm_loss(x: jax.Array, head_w: jax.Array, labels: jax.Array,
+                    *, chunk: int = 128) -> jax.Array:
+    """Fused head-projection + CE over token chunks (§Perf iteration 3).
+
+    Never materializes the full (B, T, V) logits: each token chunk's
+    logits live only inside a rematerialized chunk body.  For vocab ~150K
+    this removes the largest single tensor of the training step (peak and
+    HBM-traffic win); the extra cost is one recompute of the chunk logits
+    in the backward pass.
+    """
+    B, T, d = x.shape
+    if T % chunk != 0:
+        chunk = T
+    nc = T // chunk
+    xc = x.reshape(B, nc, chunk, d).swapaxes(0, 1)
+    lc = labels.reshape(B, nc, chunk).swapaxes(0, 1)
+
+    @jax.checkpoint
+    def body(carry, inp):
+        xcb, lcb = inp
+        logits = xcb @ head_w.astype(xcb.dtype)          # (B, chunk, V)
+        lf = logits.astype(jnp.float32)
+        lse = jax.nn.logsumexp(lf, axis=-1)
+        gold = jnp.take_along_axis(
+            lf, jnp.maximum(lcb, 0)[..., None], axis=-1)[..., 0]
+        mask = (lcb >= 0).astype(jnp.float32)
+        s, n = carry
+        return (s + jnp.sum((lse - gold) * mask), n + jnp.sum(mask)), None
+
+    (s, n), _ = jax.lax.scan(body, (jnp.zeros((), jnp.float32),
+                                    jnp.zeros((), jnp.float32)), (xc, lc))
+    return s / jnp.maximum(n, 1.0)

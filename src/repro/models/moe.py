@@ -1,0 +1,133 @@
+"""Mixture-of-Experts FFN with expert parallelism.
+
+Routing (top-k, gates, aux loss) runs in global view — elementwise over
+tokens, trivially shardable.  Dispatch/combine runs through
+``ctx.ep_dispatch``:
+
+* local context: sort-based capacity-clipped dispatch on the host's tokens
+  (Megablocks-style, XLA gather/scatter);
+* CP context (core/cp_attention.py): the same local dispatch *per rank*
+  followed by a ``jax.lax.all_to_all`` over the ``model`` mesh axis — the
+  canonical EP exchange: tokens travel to the rank owning their expert
+  (experts are sharded over ``model``), expert FFNs run batched, and a
+  second all-to-all brings results home.
+
+Aux load-balancing loss: the standard switch-transformer loss
+``E * Σ_e f_e · p_e`` (f = routed token fraction, p = mean router prob).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .layers import _he
+
+__all__ = ["moe_init", "moe_apply", "dispatch_local", "expert_ffn",
+           "combine_local", "capacity"]
+
+
+def moe_init(rng, d: int, d_ff: int, num_experts: int, kind: str):
+    r0, r1, r2, r3 = jax.random.split(rng, 4)
+    p = {
+        "router": _he(r0, (d, num_experts), d),
+        "wi": _he(r1, (num_experts, d, d_ff), d),
+        "wo": _he(r3, (num_experts, d_ff, d), d_ff),
+    }
+    if kind == "glu":
+        p["wg"] = _he(r2, (num_experts, d, d_ff), d)
+    return p
+
+
+def capacity(n_tokens: int, num_experts: int, top_k: int,
+             capacity_factor: float) -> int:
+    return int(max(1, -(-top_k * n_tokens * capacity_factor //
+                        num_experts)))
+
+
+# --------------------------------------------------------------------- #
+# dispatch / combine primitives (operate on one rank's tokens)
+# --------------------------------------------------------------------- #
+def dispatch_local(xt, topi, gates, num_experts: int, cap: int):
+    """xt (n, d); topi/gates (n, K) -> (buf (E, cap, d), slot, tok_s,
+    gat_s, keep) for combine."""
+    n, d = xt.shape
+    K = topi.shape[-1]
+    E = num_experts
+
+    eid = topi.reshape(-1)
+    tok = jnp.repeat(jnp.arange(n, dtype=jnp.int32), K)
+    gat = gates.reshape(-1)
+
+    order = jnp.argsort(eid, stable=True)
+    eid_s, tok_s, gat_s = eid[order], tok[order], gat[order]
+    counts = jnp.bincount(eid_s, length=E)
+    starts = jnp.cumsum(counts) - counts
+    pos_in_e = jnp.arange(n * K, dtype=jnp.int32) - starts[eid_s]
+    keep = pos_in_e < cap
+    slot = jnp.where(keep, eid_s * cap + pos_in_e, E * cap)
+
+    buf = jnp.zeros((E * cap + 1, d), xt.dtype)
+    buf = buf.at[slot].set(xt[tok_s])
+    return buf[: E * cap].reshape(E, cap, d), slot, tok_s, gat_s, keep
+
+
+def expert_ffn(buf, wi, wg, wo, kind: str):
+    """buf (E_local, C, d) with per-expert weights (E_local, d, f)."""
+    wi = wi.astype(buf.dtype)
+    wo = wo.astype(buf.dtype)
+    if kind == "glu":
+        h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", buf,
+                                   wg.astype(buf.dtype))) * \
+            jnp.einsum("ecd,edf->ecf", buf, wi)
+    else:
+        h = jax.nn.gelu(jnp.einsum("ecd,edf->ecf", buf, wi))
+    return jnp.einsum("ecf,efd->ecd", h, wo)
+
+
+def combine_local(y, slot, tok_s, gat_s, keep, n: int):
+    """y (E, cap, d) -> (n, d) weighted combine."""
+    E, cap, d = y.shape
+    yf = jnp.concatenate([y.reshape(E * cap, d),
+                          jnp.zeros((1, d), y.dtype)], axis=0)
+    contrib = yf[slot] * (gat_s * keep).astype(y.dtype)[:, None]
+    return jnp.zeros((n, d), y.dtype).at[tok_s].add(contrib)
+
+
+def local_ep_dispatch(x, topi, gates, params, *, kind: str,
+                      capacity_factor: float):
+    """Single-rank dispatch (no expert parallelism)."""
+    B, T, d = x.shape
+    E = params["wi"].shape[0]
+    K = topi.shape[-1]
+    n = B * T
+    cap = capacity(n, E, K, capacity_factor)
+    buf, slot, tok_s, gat_s, keep = dispatch_local(
+        x.reshape(n, d), topi.reshape(n, K), gates.reshape(n, K), E, cap)
+    y = expert_ffn(buf, params["wi"], params.get("wg"), params["wo"], kind)
+    return combine_local(y, slot, tok_s, gat_s, keep, n).reshape(B, T, d)
+
+
+# --------------------------------------------------------------------- #
+def moe_apply(p, x, ctx, *, top_k: int, capacity_factor: float, kind: str):
+    """x (B, T, d) -> (out (B, T, d), aux_loss scalar)."""
+    B, T, d = x.shape
+    E = p["router"].shape[-1]
+
+    logits = x.astype(jnp.float32) @ p["router"]             # (B, T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    topv, topi = jax.lax.top_k(probs, top_k)                 # (B, T, K)
+    gates = topv / jnp.maximum(topv.sum(-1, keepdims=True), 1e-9)
+
+    frac = jnp.zeros((E,), jnp.float32).at[topi.reshape(-1)].add(
+        gates.reshape(-1)) / (B * T)
+    aux = E * jnp.sum(frac * probs.mean((0, 1)))
+
+    ep = ctx.extras.get("ep_dispatch") if ctx is not None else None
+    if ep is None:
+        out = local_ep_dispatch(x, topi.astype(jnp.int32), gates, p,
+                                kind=kind, capacity_factor=capacity_factor)
+    else:
+        out = ep(x, topi.astype(jnp.int32), gates, p, kind=kind,
+                 capacity_factor=capacity_factor)
+    return out.astype(x.dtype), aux

@@ -1,0 +1,139 @@
+"""Mamba (selective SSM) mixer — the non-attention layers of Jamba.
+
+Training path: parallel selective scan via ``ctx.ssm_scan`` (chunked
+associative scan locally; the CP context adds cross-rank boundary-state
+exchange).  Document resets: the decay coefficient is zeroed at intra-doc
+position 0, so state never crosses a document boundary — composing cleanly
+with FlashCP's packing semantics (a document kept whole on one CP worker
+never even exchanges SSM state).
+
+Decode path: single-step recurrence with (conv window, SSM state) carried
+in the cache.
+
+The (B, T, d_inner, d_state) scan operands are materialized functionally;
+a fused Pallas selective-scan kernel is a recorded beyond-paper follow-up
+(EXPERIMENTS.md §Perf) if the memory roofline term demands it.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .layers import _he
+
+__all__ = ["mamba_init", "mamba_apply", "mamba_decode", "mamba_cache_init"]
+
+
+def mamba_init(rng, d: int, *, expand: int, d_state: int, d_conv: int):
+    di = expand * d
+    dt_rank = max(1, d // 16)
+    rs = jax.random.split(rng, 6)
+    return {
+        "in_proj": _he(rs[0], (d, 2 * di), d),
+        "conv_w": _he(rs[1], (d_conv, di), d_conv),
+        "conv_b": jnp.zeros((di,), jnp.float32),
+        "x_proj": _he(rs[2], (di, dt_rank + 2 * d_state), di),
+        "dt_proj": _he(rs[3], (dt_rank, di), dt_rank),
+        "dt_bias": jnp.full((di,), -2.0, jnp.float32),  # softplus ~ small dt
+        "A_log": jnp.log(jnp.arange(1, d_state + 1, dtype=jnp.float32)
+                         )[None, :].repeat(di, 0),
+        "D": jnp.ones((di,), jnp.float32),
+        "out_proj": _he(rs[4], (di, d), di),
+    }
+
+
+def _causal_conv(p, x, pos, d_conv: int):
+    """Depthwise causal conv with document resets.
+
+    Contribution of x_{t-k} is masked unless the query token is at least k
+    tokens into its document (pos >= k) — shifts crossing a CP-rank
+    boundary become XLA halo exchanges under pjit.
+    """
+    w = p["conv_w"].astype(x.dtype)
+    out = x * w[-1]
+    for k in range(1, d_conv):
+        shifted = jnp.pad(x, ((0, 0), (k, 0), (0, 0)))[:, :-k]
+        ok = (pos >= k)[..., None].astype(x.dtype)
+        out = out + shifted * ok * w[-1 - k]
+    return out + p["conv_b"].astype(x.dtype)
+
+
+def mamba_apply(p, x, ctx, *, d_state: int, d_conv: int, chunk: int = 64):
+    """x (B, T, d) -> (B, T, d).
+
+    Chunkwise selective scan: the (chunk, d_inner, d_state) scan operands
+    are materialized one chunk at a time and contracted with C immediately,
+    so only per-chunk boundary states (B, nc, di, S) survive — these go
+    through ``ctx.ssm_scan`` (which also carries them across CP ranks).
+    This is the functional analogue of Mamba's fused scan kernel; without
+    it the full-T state tensor dominates the memory roofline.
+    """
+    B, T, d = x.shape
+    di = p["in_proj"].shape[1] // 2
+    dt_rank = p["dt_proj"].shape[0]
+
+    xz = x @ p["in_proj"].astype(x.dtype)
+    x_in, z = jnp.split(xz, 2, axis=-1)
+    x_c = jax.nn.silu(_causal_conv(p, x_in, ctx.pos, d_conv))
+
+    proj = x_c @ p["x_proj"].astype(x.dtype)
+    dt_r = proj[..., :dt_rank]
+    Bm = proj[..., dt_rank:dt_rank + d_state].astype(jnp.float32)
+    Cm = proj[..., dt_rank + d_state:].astype(jnp.float32)
+    dt = jax.nn.softplus(
+        dt_r.astype(jnp.float32) @ p["dt_proj"] + p["dt_bias"])      # (B,T,di)
+
+    A = -jnp.exp(p["A_log"])                                          # (di,S)
+    # document reset: decay zeroed at pos==0 so no state crosses documents
+    reset = (ctx.pos > 0).astype(jnp.float32)
+    xf = x_c.astype(jnp.float32)                                      # (B,T,di)
+
+    y = ctx.selective_scan(dt, A, Bm, Cm, xf, reset).astype(x.dtype)
+
+    y = y + x_c * p["D"].astype(x.dtype)
+    y = y * jax.nn.silu(z)
+    return y @ p["out_proj"].astype(x.dtype)
+
+
+# ------------------------------------------------------------------ #
+# decode
+# ------------------------------------------------------------------ #
+def mamba_cache_init(batch: int, d: int, *, expand: int, d_state: int,
+                     d_conv: int, dtype):
+    di = expand * d
+    return {
+        "conv": jnp.zeros((batch, d_conv - 1, di), dtype),
+        "ssm": jnp.zeros((batch, di, d_state), jnp.float32),
+    }
+
+
+def mamba_decode(p, x_t, cache, *, d_state: int, d_conv: int):
+    """One token step.  x_t (B, d) -> (y (B, d), new cache)."""
+    B, d = x_t.shape
+    di = p["in_proj"].shape[1] // 2
+    dt_rank = p["dt_proj"].shape[0]
+
+    xz = x_t @ p["in_proj"].astype(x_t.dtype)
+    x_in, z = jnp.split(xz, 2, axis=-1)
+
+    w = p["conv_w"].astype(x_t.dtype)                    # (d_conv, di)
+    window = jnp.concatenate([cache["conv"], x_in[:, None]], axis=1)
+    x_c = jax.nn.silu(
+        jnp.einsum("bkd,kd->bd", window, w) + p["conv_b"].astype(x_t.dtype))
+    new_conv = window[:, 1:]
+
+    proj = x_c @ p["x_proj"].astype(x_t.dtype)
+    dt_r = proj[..., :dt_rank]
+    Bm = proj[..., dt_rank:dt_rank + d_state].astype(jnp.float32)
+    Cm = proj[..., dt_rank + d_state:].astype(jnp.float32)
+    dt = jax.nn.softplus(dt_r.astype(jnp.float32) @ p["dt_proj"] + p["dt_bias"])
+
+    A = -jnp.exp(p["A_log"])
+    a = jnp.exp(dt[..., None] * A)                        # (B, di, S)
+    bx = (dt * x_c.astype(jnp.float32))[..., None] * Bm[:, None, :]
+    h = a * cache["ssm"] + bx
+    y = jnp.einsum("bds,bs->bd", h, Cm).astype(x_t.dtype)
+    y = y + x_c * p["D"].astype(x_t.dtype)
+    y = y * jax.nn.silu(z)
+    return y @ p["out_proj"].astype(x_t.dtype), {"conv": new_conv, "ssm": h}

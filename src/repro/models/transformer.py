@@ -1,0 +1,337 @@
+"""Model assembly: decoder stacks for every assigned architecture family.
+
+One parameterized decoder covers dense / MoE / hybrid (Jamba) / SSM (xLSTM)
+/ audio / VLM families.  Layers are grouped into *periods* (the repeating
+block pattern: 1 for homogeneous stacks, 8 for Jamba's 7-Mamba+1-attention,
+4 for xLSTM's 3-mLSTM+1-sLSTM) and the period stack is executed with
+``jax.lax.scan`` over stacked parameters — keeping HLO size (and hence
+dry-run compile time and SPMD partitioning cost) independent of depth —
+with optional rematerialization.
+
+All model code is mesh-agnostic: distribution happens through pjit sharding
+constraints (runtime/sharding.py) plus the ``ExecContext`` islands.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from .attention import attn_apply, attn_cache_init, attn_decode, attn_init
+from .context import ExecContext
+from .layers import (chunked_lm_loss, cross_entropy, dense, dense_init,
+                     embed, embed_init, mlp_apply, mlp_init, rmsnorm,
+                     rmsnorm_init)
+from .moe import moe_apply, moe_init
+from .ssm import mamba_apply, mamba_cache_init, mamba_decode, mamba_init
+from .xlstm import (mlstm_apply, mlstm_cache_init, mlstm_decode, mlstm_init,
+                    slstm_apply, slstm_cache_init, slstm_decode, slstm_init)
+
+__all__ = ["period_length", "block_kinds", "init_params", "forward",
+           "loss_fn", "init_cache", "decode_step"]
+
+AUX_LOSS_WEIGHT = 0.01
+
+
+# --------------------------------------------------------------------- #
+# block pattern
+# --------------------------------------------------------------------- #
+def period_length(cfg: ModelConfig) -> int:
+    if cfg.family == "ssm":
+        return max(cfg.slstm_every, 1)
+    if cfg.attn_every > 0:
+        import math
+        return math.lcm(cfg.attn_every, cfg.moe_every)
+    return cfg.moe_every if cfg.num_experts > 0 else 1
+
+
+def block_kinds(cfg: ModelConfig) -> list[tuple[str, str]]:
+    """Per-layer (mixer, ffn) kinds for one period."""
+    P = period_length(cfg)
+    kinds = []
+    for j in range(P):
+        if cfg.family == "ssm":
+            mixer = "slstm" if j % cfg.slstm_every == cfg.slstm_every - 1 \
+                else "mlstm"
+        elif cfg.attn_every > 0:
+            mixer = "attn" if j % cfg.attn_every == cfg.attn_offset else "mamba"
+        else:
+            mixer = "attn"
+        if cfg.d_ff == 0:
+            ffn = "none"
+        elif cfg.num_experts > 0 and j % cfg.moe_every == cfg.moe_every - 1:
+            ffn = "moe"
+        else:
+            ffn = "dense"
+        kinds.append((mixer, ffn))
+    return kinds
+
+
+# --------------------------------------------------------------------- #
+# init
+# --------------------------------------------------------------------- #
+def _init_sub(rng, cfg: ModelConfig, mixer: str, ffn: str):
+    r1, r2, r3 = jax.random.split(rng, 3)
+    sub: dict[str, Any] = {"norm1": rmsnorm_init(cfg.d_model)}
+    if mixer == "attn":
+        sub["attn"] = attn_init(r1, cfg)
+    elif mixer == "mamba":
+        sub["mamba"] = mamba_init(r1, cfg.d_model, expand=cfg.mamba_expand,
+                                  d_state=cfg.mamba_d_state,
+                                  d_conv=cfg.mamba_d_conv)
+    elif mixer == "mlstm":
+        sub["mlstm"] = mlstm_init(r1, cfg.d_model, cfg.num_heads,
+                                  expand=cfg.mamba_expand)
+    elif mixer == "slstm":
+        sub["slstm"] = slstm_init(r1, cfg.d_model)
+    if ffn != "none":
+        sub["norm2"] = rmsnorm_init(cfg.d_model)
+        if ffn == "moe":
+            sub["moe"] = moe_init(r2, cfg.d_model, cfg.d_ff, cfg.num_experts,
+                                  cfg.mlp)
+        else:
+            sub["mlp"] = mlp_init(r2, cfg.d_model, cfg.d_ff, cfg.mlp)
+    return sub
+
+
+def init_params(rng, cfg: ModelConfig):
+    kinds = block_kinds(cfg)
+    P = period_length(cfg)
+    n_periods = cfg.num_layers // P
+    assert cfg.num_layers % P == 0, (cfg.num_layers, P)
+
+    r_embed, r_layers, r_head = jax.random.split(rng, 3)
+
+    def init_period(r):
+        rs = jax.random.split(r, len(kinds))
+        return {f"sub_{j}": _init_sub(rs[j], cfg, *kinds[j])
+                for j in range(len(kinds))}
+
+    period_rngs = jax.random.split(r_layers, n_periods)
+    layers = jax.vmap(init_period)(period_rngs)
+
+    params: dict[str, Any] = {"layers": layers,
+                              "final_norm": rmsnorm_init(cfg.d_model)}
+    if cfg.family != "audio":
+        params["embed"] = embed_init(r_embed, cfg.vocab_size, cfg.d_model)
+    if not cfg.tie_embeddings or cfg.family == "audio":
+        params["lm_head"] = dense_init(r_head, cfg.d_model, cfg.vocab_size)
+    # params are *stored* in the compute dtype (bf16 in production): the
+    # FSDP all-gather then moves half the bytes (§Perf iteration 1); the
+    # fp32 master lives in the optimizer state (optim/adamw.py).
+    dtype = jnp.dtype(cfg.dtype)
+    if dtype != jnp.float32:
+        params = jax.tree.map(lambda p: p.astype(dtype), params)
+    return params
+
+
+# --------------------------------------------------------------------- #
+# forward
+# --------------------------------------------------------------------- #
+def inputs_to_embeds(params, cfg: ModelConfig, batch):
+    dtype = jnp.dtype(cfg.dtype)
+    if cfg.frontend == "audio_frames":
+        return batch["frame_embeds"].astype(dtype)
+    x = embed(params["embed"], batch["tokens"], dtype)
+    if cfg.frontend == "vit_patches":
+        x = jnp.where(batch["patch_mask"][..., None],
+                      batch["patch_embeds"].astype(dtype), x)
+    return x
+
+
+def _apply_sub(sub, cfg: ModelConfig, ctx: ExecContext, x, mixer: str,
+               ffn: str):
+    h = rmsnorm(sub["norm1"], x, cfg.norm_eps)
+    if mixer == "attn":
+        mx = attn_apply(sub["attn"], cfg, ctx, h)
+    elif mixer == "mamba":
+        mx = mamba_apply(sub["mamba"], h, ctx, d_state=cfg.mamba_d_state,
+                         d_conv=cfg.mamba_d_conv)
+    elif mixer == "mlstm":
+        mx = mlstm_apply(sub["mlstm"], h, ctx, num_heads=cfg.num_heads)
+    else:
+        mx = slstm_apply(sub["slstm"], h, ctx)
+    x = x + mx
+    aux = jnp.zeros((), jnp.float32)
+    if ffn != "none":
+        h = rmsnorm(sub["norm2"], x, cfg.norm_eps)
+        if ffn == "moe":
+            f, aux = moe_apply(sub["moe"], h, ctx, top_k=cfg.top_k,
+                               capacity_factor=cfg.capacity_factor,
+                               kind=cfg.mlp)
+        else:
+            f = mlp_apply(sub["mlp"], h, cfg.mlp)
+        x = x + f
+    return x, aux
+
+
+def forward(params, cfg: ModelConfig, ctx: ExecContext, batch,
+            *, remat: bool = True):
+    """batch -> (logits (B, T, vocab), aux_loss scalar).
+
+    Remat policy: the residual stream between sublayers is saved; each
+    sublayer's interior (attention logits, SSM scan operands, expert
+    buffers) is rematerialized in the backward pass — peak memory is the
+    *max* over sublayers rather than the sum over a period (critical for
+    Jamba's 7-Mamba periods whose scan operands are large).
+    """
+    kinds = block_kinds(cfg)
+    x = ctx.constrain(inputs_to_embeds(params, cfg, batch))
+
+    def sub_fn(j):
+        mixer, ffn = kinds[j]
+
+        def apply(sub, x):
+            y, a = _apply_sub(sub, cfg, ctx, x, mixer, ffn)
+            return ctx.constrain(y), a
+
+        return jax.checkpoint(apply) if remat else apply
+
+    sub_fns = [sub_fn(j) for j in range(len(kinds))]
+
+    def period_body(carry, period_params):
+        x, aux = carry
+        for j in range(len(kinds)):
+            x, a = sub_fns[j](period_params[f"sub_{j}"], x)
+            aux = aux + a
+        return (x, aux), None
+
+    (x, aux), _ = jax.lax.scan(period_body,
+                               (x, jnp.zeros((), jnp.float32)),
+                               params["layers"])
+
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    if "lm_head" in params:
+        logits = dense(params["lm_head"], x)
+    else:
+        logits = x @ params["embed"]["e"].T.astype(x.dtype)
+    return logits, aux
+
+
+def loss_fn(params, cfg: ModelConfig, ctx: ExecContext, batch,
+            *, remat: bool = True):
+    logits, aux = forward(params, cfg, ctx, batch, remat=remat)
+    ce = cross_entropy(logits, batch["labels"])
+    return ce + AUX_LOSS_WEIGHT * aux, {"ce": ce, "aux": aux}
+
+
+def loss_fn_chunked_head(params, cfg: ModelConfig, ctx: ExecContext, batch,
+                         *, remat: bool = True, chunk: int = 128):
+    """Loss with the fused chunked head (local/unsharded execution only:
+    under CP the token axis is mesh-sharded and the logits are already
+    distributed — see EXPERIMENTS.md §Perf iteration 3)."""
+    kinds = block_kinds(cfg)
+    x = ctx.constrain(inputs_to_embeds(params, cfg, batch))
+
+    def sub(j):
+        mixer, ffn = kinds[j]
+
+        def apply(p, x):
+            y, a = _apply_sub(p, cfg, ctx, x, mixer, ffn)
+            return ctx.constrain(y), a
+        return jax.checkpoint(apply) if remat else apply
+
+    subs = [sub(j) for j in range(len(kinds))]
+
+    def body(carry, pp):
+        x, aux = carry
+        for j in range(len(kinds)):
+            x, a = subs[j](pp[f"sub_{j}"], x)
+            aux = aux + a
+        return (x, aux), None
+
+    (x, aux), _ = jax.lax.scan(body, (x, jnp.zeros((), jnp.float32)),
+                               params["layers"])
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    head = params["lm_head"]["w"] if "lm_head" in params \
+        else params["embed"]["e"].T
+    ce = chunked_lm_loss(x, head, batch["labels"], chunk=chunk)
+    return ce + AUX_LOSS_WEIGHT * aux, {"ce": ce, "aux": aux}
+
+
+# --------------------------------------------------------------------- #
+# decode
+# --------------------------------------------------------------------- #
+def _sub_cache_init(cfg: ModelConfig, mixer: str, batch: int, max_len: int,
+                    dtype):
+    if mixer == "attn":
+        return attn_cache_init(cfg, batch, max_len, dtype)
+    if mixer == "mamba":
+        return mamba_cache_init(batch, cfg.d_model, expand=cfg.mamba_expand,
+                                d_state=cfg.mamba_d_state,
+                                d_conv=cfg.mamba_d_conv, dtype=dtype)
+    if mixer == "mlstm":
+        return mlstm_cache_init(batch, cfg.d_model, cfg.num_heads,
+                                expand=cfg.mamba_expand, dtype=dtype)
+    return slstm_cache_init(batch, cfg.d_model, dtype)
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int):
+    dtype = jnp.dtype(cfg.dtype)
+    kinds = block_kinds(cfg)
+    P = period_length(cfg)
+    n_periods = cfg.num_layers // P
+    period = {f"sub_{j}": _sub_cache_init(cfg, kinds[j][0], batch, max_len,
+                                          dtype)
+              for j in range(len(kinds))}
+    return jax.tree.map(
+        lambda a: jnp.zeros((n_periods,) + a.shape, a.dtype), period)
+
+
+def decode_step(params, cfg: ModelConfig, cache, batch, pos_t):
+    """One decode step.
+
+    batch: {"tokens": (B,) int32} (or {"frame_embeds": (B, d)} for audio).
+    pos_t: (B,) int32 current positions.  Returns (logits (B, vocab),
+    new cache).
+    """
+    dtype = jnp.dtype(cfg.dtype)
+    kinds = block_kinds(cfg)
+    if cfg.frontend == "audio_frames":
+        x = batch["frame_embeds"].astype(dtype)
+    else:
+        x = embed(params["embed"], batch["tokens"], dtype)
+
+    def period_body(x, scanned):
+        period_params, period_cache = scanned
+        new_cache = {}
+        for j, (mixer, ffn) in enumerate(kinds):
+            sub = period_params[f"sub_{j}"]
+            c = period_cache[f"sub_{j}"]
+            h = rmsnorm(sub["norm1"], x[:, None], cfg.norm_eps)[:, 0]
+            if mixer == "attn":
+                mx, nc = attn_decode(sub["attn"], cfg, h, pos_t, c)
+            elif mixer == "mamba":
+                mx, nc = mamba_decode(sub["mamba"], h,
+                                      c, d_state=cfg.mamba_d_state,
+                                      d_conv=cfg.mamba_d_conv)
+            elif mixer == "mlstm":
+                mx, nc = mlstm_decode(sub["mlstm"], h, c,
+                                      num_heads=cfg.num_heads)
+            else:
+                mx, nc = slstm_decode(sub["slstm"], h, c)
+            x = x + mx
+            new_cache[f"sub_{j}"] = nc
+            if ffn != "none":
+                h = rmsnorm(sub["norm2"], x[:, None], cfg.norm_eps)
+                if ffn == "moe":
+                    f, _ = moe_apply(sub["moe"], h, None, top_k=cfg.top_k,
+                                     capacity_factor=cfg.capacity_factor,
+                                     kind=cfg.mlp)
+                else:
+                    f = mlp_apply(sub["mlp"], h, cfg.mlp)
+                x = x + f[:, 0]
+        return x, new_cache
+
+    x, new_cache = jax.lax.scan(period_body, x,
+                                (params["layers"], cache))
+    x = rmsnorm(params["final_norm"], x[:, None], cfg.norm_eps)[:, 0]
+    if "lm_head" in params:
+        logits = dense(params["lm_head"], x)
+    else:
+        logits = x @ params["embed"]["e"].T.astype(x.dtype)
+    return logits, new_cache

@@ -1,0 +1,197 @@
+"""xLSTM blocks: mLSTM (matrix-memory, chunkwise-parallel) and sLSTM
+(scalar-memory, scan).
+
+Design notes (DESIGN.md §Arch-applicability):
+* mLSTM is computed in the chunkwise-parallel form: intra-chunk
+  decay-weighted attention + inter-chunk matrix state carried through
+  ``ctx.ssm_scan`` (which handles CP boundary exchange).  Gating uses
+  sigmoid forget/input gates — a stabilized simplification of the paper's
+  exponential gating (recorded deviation; the exp-gating stabilizer is a
+  max-plus scan that does not change the systems behaviour studied here).
+* sLSTM is an elementwise recurrence, mapped directly onto ``ctx.ssm_scan``.
+* Document resets zero the forget gate at intra-doc position 0.
+* d_ff == 0: these blocks carry their own up/down projections (expand 2).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .layers import _he
+
+__all__ = ["mlstm_init", "mlstm_apply", "slstm_init", "slstm_apply",
+           "mlstm_cache_init", "mlstm_decode", "slstm_cache_init",
+           "slstm_decode"]
+
+_CHUNK = 64
+
+
+# ===================================================================== #
+# mLSTM
+# ===================================================================== #
+def mlstm_init(rng, d: int, num_heads: int, *, expand: int = 2):
+    di = expand * d
+    rs = jax.random.split(rng, 7)
+    return {
+        "up": _he(rs[0], (d, 2 * di), d),
+        "wq": _he(rs[1], (di, di), di),
+        "wk": _he(rs[2], (di, di), di),
+        "wv": _he(rs[3], (di, di), di),
+        "wf": _he(rs[4], (di, num_heads), di),
+        "wi": _he(rs[5], (di, num_heads), di),
+        "down": _he(rs[6], (di, d), di),
+    }
+
+
+def mlstm_apply(p, x, ctx, *, num_heads: int):
+    """x (B, T, d) -> (B, T, d).  Chunkwise-parallel linear attention with
+    per-head scalar forget/input gates."""
+    B, T, d = x.shape
+    di = p["up"].shape[1] // 2
+    H = num_heads
+    dh = di // H
+
+    xu, z = jnp.split(x @ p["up"].astype(x.dtype), 2, axis=-1)
+
+    def heads(w, v):
+        return (v @ w.astype(v.dtype)).reshape(B, T, H, dh).swapaxes(1, 2)
+
+    q = heads(p["wq"], xu) * (dh ** -0.5)          # (B, H, T, dh)
+    k = heads(p["wk"], xu)
+    v = heads(p["wv"], xu)
+    f = jax.nn.sigmoid((xu.astype(jnp.float32) @ p["wf"])).swapaxes(1, 2)  # (B,H,T)
+    i = jax.nn.sigmoid((xu.astype(jnp.float32) @ p["wi"])).swapaxes(1, 2)
+    # document reset
+    f = f * (ctx.pos > 0)[:, None, :]
+
+    c = min(_CHUNK, T)
+    while T % c:
+        c //= 2
+    nc = T // c
+
+    qc = q.reshape(B, H, nc, c, dh)
+    kc = k.reshape(B, H, nc, c, dh).astype(jnp.float32)
+    vc = v.reshape(B, H, nc, c, dh).astype(jnp.float32)
+    fc = f.reshape(B, H, nc, c)
+    ic = i.reshape(B, H, nc, c)
+
+    lf = jnp.log(jnp.maximum(fc, 1e-30))
+    clf = jnp.cumsum(lf, axis=-1)                   # inclusive, intra-chunk
+
+    # ---- intra-chunk: decay-weighted causal attention ------------------ #
+    # W[t, s] = exp(clf_t - clf_s) * i_s   for s <= t
+    dmat = clf[..., :, None] - clf[..., None, :]
+    causal = jnp.tril(jnp.ones((c, c), bool))
+    # clamp *before* exp: anti-causal lanes have dmat > 0 and would produce
+    # inf, whose zero-cotangent product is NaN in the backward pass.
+    dmat = jnp.where(causal, dmat, -1e30)
+    w = jnp.exp(dmat) * ic[..., None, :]
+    qf = qc.astype(jnp.float32)
+    scores = jnp.einsum("bhntd,bhnsd->bhnts", qf, kc) * w
+    intra = jnp.einsum("bhnts,bhnsd->bhntd", scores, vc)
+    intra_n = jnp.einsum("bhnts,bhnsd->bhntd", w, kc)  # normalizer numerator
+
+    # ---- inter-chunk: matrix state scan over chunks --------------------- #
+    decay_chunk = jnp.exp(clf[..., -1])                        # (B,H,nc)
+    # contribution of chunk to state: sum_s exp(clf_end - clf_s) i_s k_s v_s^T
+    tail = jnp.exp(clf[..., -1:] - clf) * ic                   # (B,H,nc,c)
+    dC = jnp.einsum("bhns,bhnsk,bhnsv->bhnkv", tail, kc, vc)   # (B,H,nc,dh,dh)
+    dN = jnp.einsum("bhns,bhnsk->bhnk", tail, kc)              # (B,H,nc,dh)
+
+    # scan over the chunk axis (B*H batched); decay stays in broadcast
+    # (singleton) form so the scan never materializes a (dh, dh) decay
+    a_c = decay_chunk.swapaxes(1, 2)                           # (B,nc,H)
+    C_states = ctx.ssm_scan(a_c[..., None, None],
+                            dC.transpose(0, 2, 1, 3, 4))       # (B,nc,H,dh,dh)
+    N_states = ctx.ssm_scan(a_c[..., None],
+                            dN.transpose(0, 2, 1, 3))          # (B,nc,H,dh)
+    # previous-chunk states (exclusive)
+    C_prev = jnp.pad(C_states, ((0, 0), (1, 0), (0, 0), (0, 0), (0, 0)))[:, :-1]
+    N_prev = jnp.pad(N_states, ((0, 0), (1, 0), (0, 0), (0, 0)))[:, :-1]
+
+    carry_w = jnp.exp(clf)                                     # decay from chunk start
+    inter = jnp.einsum("bhntd,bnhdv->bhntv", qf * carry_w[..., None], C_prev)
+    inter_n = jnp.einsum("bhntd,bnhd->bhnt", qf * carry_w[..., None], N_prev)
+
+    num = intra + inter                                        # (B,H,nc,c,dh)
+    den = jnp.einsum("bhntd,bhntd->bhnt", qf, intra_n)[..., None] \
+        + inter_n[..., None]
+    out = num / jnp.maximum(jnp.abs(den), 1.0)
+    out = out.reshape(B, H, T, dh).swapaxes(1, 2).reshape(B, T, di)
+    out = out.astype(x.dtype) * jax.nn.silu(z)
+    return out @ p["down"].astype(x.dtype)
+
+
+def mlstm_cache_init(batch: int, d: int, num_heads: int, *, expand: int, dtype):
+    di = expand * d
+    dh = di // num_heads
+    return {
+        "C": jnp.zeros((batch, num_heads, dh, dh), jnp.float32),
+        "N": jnp.zeros((batch, num_heads, dh), jnp.float32),
+    }
+
+
+def mlstm_decode(p, x_t, cache, *, num_heads: int):
+    B, d = x_t.shape
+    di = p["up"].shape[1] // 2
+    H, dh = num_heads, di // num_heads
+
+    xu, z = jnp.split(x_t @ p["up"].astype(x_t.dtype), 2, axis=-1)
+    q = (xu @ p["wq"].astype(xu.dtype)).reshape(B, H, dh).astype(jnp.float32) \
+        * (dh ** -0.5)
+    k = (xu @ p["wk"].astype(xu.dtype)).reshape(B, H, dh).astype(jnp.float32)
+    v = (xu @ p["wv"].astype(xu.dtype)).reshape(B, H, dh).astype(jnp.float32)
+    f = jax.nn.sigmoid(xu.astype(jnp.float32) @ p["wf"])       # (B,H)
+    i = jax.nn.sigmoid(xu.astype(jnp.float32) @ p["wi"])
+
+    C = f[..., None, None] * cache["C"] + i[..., None, None] * \
+        jnp.einsum("bhk,bhv->bhkv", k, v)
+    N = f[..., None] * cache["N"] + i[..., None] * k
+    num = jnp.einsum("bhk,bhkv->bhv", q, C)
+    den = jnp.einsum("bhk,bhk->bh", q, N)[..., None]
+    out = (num / jnp.maximum(jnp.abs(den), 1.0)).reshape(B, di)
+    out = out.astype(x_t.dtype) * jax.nn.silu(z)
+    return out @ p["down"].astype(x_t.dtype), {"C": C, "N": N}
+
+
+# ===================================================================== #
+# sLSTM
+# ===================================================================== #
+def slstm_init(rng, d: int):
+    rs = jax.random.split(rng, 5)
+    return {
+        "wz": _he(rs[0], (d, d), d),
+        "wi": _he(rs[1], (d, d), d),
+        "wf": _he(rs[2], (d, d), d),
+        "wo": _he(rs[3], (d, d), d),
+        "down": _he(rs[4], (d, d), d),
+    }
+
+
+def slstm_apply(p, x, ctx):
+    """x (B, T, d) -> (B, T, d).  c_t = f_t c_{t-1} + i_t z_t; h = o ⊙ c."""
+    xf = x.astype(jnp.float32)
+    z = jnp.tanh(xf @ p["wz"])
+    i = jax.nn.sigmoid(xf @ p["wi"])
+    f = jax.nn.sigmoid(xf @ p["wf"])
+    o = jax.nn.sigmoid(xf @ p["wo"])
+    f = f * (ctx.pos > 0).astype(f.dtype)[..., None]
+    c = ctx.ssm_scan(f, i * z)
+    h = (o * c).astype(x.dtype)
+    return h @ p["down"].astype(x.dtype)
+
+
+def slstm_cache_init(batch: int, d: int, dtype):
+    return {"c": jnp.zeros((batch, d), jnp.float32)}
+
+
+def slstm_decode(p, x_t, cache):
+    xf = x_t.astype(jnp.float32)
+    z = jnp.tanh(xf @ p["wz"])
+    i = jax.nn.sigmoid(xf @ p["wi"])
+    f = jax.nn.sigmoid(xf @ p["wf"])
+    o = jax.nn.sigmoid(xf @ p["wo"])
+    c = f * cache["c"] + i * z
+    h = (o * c).astype(x_t.dtype)
+    return h @ p["down"].astype(x_t.dtype), {"c": c}

@@ -1,0 +1,83 @@
+"""AdamW with fp32 optimizer state mirroring the param pytree.
+
+Minimal, dependency-free (no optax offline).  The state shards exactly like
+the parameters (runtime/sharding.py applies the same PartitionSpecs), so
+ZeRO-style sharded optimizer state falls out of the FSDP param sharding.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["AdamWState", "adamw_init", "adamw_update"]
+
+
+@dataclasses.dataclass
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+
+
+def adamw_init(params, *, keep_master: bool | None = None):
+    """Optimizer state.  When the params are stored in a reduced dtype
+    (bf16 model weights — halves the FSDP all-gather volume, §Perf #1),
+    the state carries the fp32 master copy; for fp32 params the params
+    tree itself is the master."""
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    if keep_master is None:
+        keep_master = any(p.dtype != jnp.float32
+                          for p in jax.tree.leaves(params))
+    state = {
+        "mu": jax.tree.map(zeros, params),
+        "nu": jax.tree.map(zeros, params),
+        "count": jnp.zeros((), jnp.int32),
+    }
+    if keep_master:
+        state["master"] = jax.tree.map(
+            lambda p: p.astype(jnp.float32), params)
+    return state
+
+
+def adamw_update(params, grads, state, *, lr, b1=0.9, b2=0.95, eps=1e-8,
+                 weight_decay=0.1):
+    """Returns (new_params, new_state).  ``lr`` may be a traced scalar
+    (schedule value)."""
+    count = state["count"] + 1
+    c = count.astype(jnp.float32)
+    bc1 = 1.0 - b1 ** c
+    bc2 = 1.0 - b2 ** c
+    has_master = "master" in state
+
+    def upd(p, g, mu, nu, master):
+        g = g.astype(jnp.float32)
+        mu = b1 * mu + (1 - b1) * g
+        nu = b2 * nu + (1 - b2) * g * g
+        mhat = mu / bc1
+        nhat = nu / bc2
+        m = master if master is not None else p.astype(jnp.float32)
+        step = mhat / (jnp.sqrt(nhat) + eps) + weight_decay * m
+        new_m = m - lr * step
+        return new_m.astype(p.dtype), mu, nu, new_m
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_mu = treedef.flatten_up_to(state["mu"])
+    flat_nu = treedef.flatten_up_to(state["nu"])
+    flat_ms = treedef.flatten_up_to(state["master"]) if has_master \
+        else [None] * len(flat_p)
+    out = [upd(p, g, m, n, ms) for p, g, m, n, ms in
+           zip(flat_p, flat_g, flat_mu, flat_nu, flat_ms)]
+    new_p = treedef.unflatten([o[0] for o in out])
+    new_state = {"mu": treedef.unflatten([o[1] for o in out]),
+                 "nu": treedef.unflatten([o[2] for o in out]),
+                 "count": count}
+    if has_master:
+        new_state["master"] = treedef.unflatten([o[3] for o in out])
+    return new_p, new_state

@@ -1,0 +1,11 @@
+from .elastic import ElasticPlan, shrink_mesh_shape
+from .fault_tolerance import (FailureAction, FailurePolicy, HeartbeatMonitor,
+                              TrainingFailure, run_with_recovery)
+from .sharding import (batch_axes_of, batch_specs, cache_specs, named,
+                       param_shardings)
+from .straggler import StragglerMonitor
+
+__all__ = ["ElasticPlan", "shrink_mesh_shape", "FailureAction",
+           "FailurePolicy", "HeartbeatMonitor", "TrainingFailure",
+           "run_with_recovery", "batch_axes_of", "batch_specs",
+           "cache_specs", "named", "param_shardings", "StragglerMonitor"]

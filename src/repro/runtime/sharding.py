@@ -1,0 +1,159 @@
+"""Sharding rules: FSDP-style parameter layout + activation specs.
+
+Parameters are fully sharded across every available mesh axis (ZeRO-3):
+each leaf gets its largest divisible dims assigned greedily to the mesh
+axes, so a 132B-parameter model fits v5e HBM (DESIGN.md §5).  XLA SPMD
+inserts the per-layer all-gathers.  Stacked scan leaves (leading
+``n_periods`` dim) never shard dim 0.
+
+Activations: batch over ``data`` (and ``pod``); sequence over ``model``
+(the CP axis).
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+__all__ = ["param_shardings", "batch_specs", "batch_axes_of",
+           "named", "cache_specs"]
+
+
+def batch_axes_of(mesh: Mesh):
+    names = mesh.axis_names
+    return tuple(a for a in ("pod", "data") if a in names)
+
+
+def _leaf_spec(shape, mesh: Mesh, *, skip_dim0: bool) -> P:
+    axes = sorted(mesh.axis_names, key=lambda a: -mesh.shape[a])
+    dims: list[Any] = [None] * len(shape)
+    start = 1 if skip_dim0 and len(shape) > 1 else 0
+    used_dims: set[int] = set()
+    for ax in axes:
+        size = mesh.shape[ax]
+        if size == 1:
+            continue
+        # largest not-yet-sharded dim divisible by this axis
+        cand = [i for i in range(start, len(shape))
+                if i not in used_dims and shape[i] % size == 0
+                and shape[i] >= size]
+        if not cand:
+            # try stacking onto an already-sharded dim
+            for i in sorted(used_dims, key=lambda i: -shape[i]):
+                cur = dims[i] if isinstance(dims[i], tuple) else (dims[i],)
+                prod = int(np.prod([mesh.shape[a] for a in cur])) * size
+                if shape[i] % prod == 0:
+                    dims[i] = cur + (ax,)
+                    break
+            continue
+        best = max(cand, key=lambda i: shape[i])
+        dims[best] = ax
+        used_dims.add(best)
+    return P(*dims)
+
+
+def _expert_spec(shape, mesh: Mesh) -> P:
+    """Expert-parallel leaves (nP, E, d, f): E over ``model`` (the EP
+    all-to-all in the MoE island expects this layout), remaining axes
+    greedily over data/pod."""
+    dims: list[Any] = [None] * len(shape)
+    e_dim = 1 if len(shape) >= 4 else 0
+    if shape[e_dim] % mesh.shape["model"] == 0:
+        dims[e_dim] = "model"
+    rest = [a for a in mesh.axis_names if a != "model"
+            and mesh.shape[a] > 1]
+    used = {e_dim}
+    for ax in sorted(rest, key=lambda a: -mesh.shape[a]):
+        cand = [i for i in range(e_dim + 1, len(shape))
+                if i not in used and shape[i] % mesh.shape[ax] == 0]
+        if cand:
+            best = max(cand, key=lambda i: shape[i])
+            dims[best] = ax
+            used.add(best)
+    return P(*dims)
+
+
+def param_shardings(mesh: Mesh, params):
+    """NamedSharding tree for a param/optimizer pytree (path-aware)."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params)
+
+    def one(path, leaf):
+        if not hasattr(leaf, "shape") or leaf.ndim == 0:
+            return NamedSharding(mesh, P())
+        keys = [getattr(k, "key", str(k)) for k in path]
+        if "moe" in keys and keys[-1] in ("wi", "wg", "wo") \
+                and leaf.ndim >= 3:
+            return NamedSharding(mesh, _expert_spec(leaf.shape, mesh))
+        # stacked-scan leaves: leading small period dim stays unsharded
+        skip0 = leaf.ndim >= 2
+        return NamedSharding(mesh, _leaf_spec(leaf.shape, mesh,
+                                              skip_dim0=skip0))
+
+    return treedef.unflatten([one(p, l) for p, l in flat])
+
+
+def named(mesh: Mesh, spec: P) -> NamedSharding:
+    return NamedSharding(mesh, spec)
+
+
+def batch_specs(mesh: Mesh, batch_shapes: dict) -> dict:
+    """PartitionSpecs for the training batch dict (by key convention)."""
+    b = batch_axes_of(mesh)
+    B = b if len(b) > 1 else (b[0] if b else None)
+    specs = {}
+    for key, shape in batch_shapes.items():
+        ndim = len(shape)
+        bsz = shape[0] if ndim else 1
+        Bk = B
+        # batch not divisible (e.g. long_500k batch=1) -> replicate batch
+        if Bk is not None:
+            need = int(np.prod([mesh.shape[a] for a in
+                                (Bk if isinstance(Bk, tuple) else (Bk,))]))
+            if bsz % need != 0:
+                Bk = None
+        if key in ("tokens", "labels", "doc", "pos", "perm"):
+            specs[key] = P(Bk, "model")
+        elif key in ("frame_embeds", "patch_embeds"):
+            specs[key] = P(Bk, "model", None)
+        elif key == "patch_mask":
+            specs[key] = P(Bk, "model")
+        elif key == "send_idx":
+            specs[key] = P(Bk, "model", None)
+        elif key in ("gath_doc", "gath_pos"):
+            specs[key] = P(Bk, None)
+        else:
+            specs[key] = P(*([Bk] + [None] * (ndim - 1)))
+    return specs
+
+
+def cache_specs(mesh: Mesh, cache) -> dict:
+    """Decode caches: batch over data axes; the big axis over ``model``.
+
+    KV caches (nP, B, Hkv, S, D) shard S; SSM/conv states shard their
+    feature axis when divisible.
+    """
+    b = batch_axes_of(mesh)
+    B = b if len(b) > 1 else (b[0] if b else None)
+    msize = mesh.shape["model"]
+
+    def one(leaf):
+        shape = leaf.shape
+        # leading dim is the period stack; dim 1 is batch
+        dims = [None] * len(shape)
+        need = int(np.prod([mesh.shape[a] for a in
+                            (B if isinstance(B, tuple) else (B,))])) \
+            if B else 1
+        if len(shape) > 1 and B and shape[1] % need == 0:
+            dims[1] = B
+        # shard the largest remaining dim over model
+        cand = [i for i in range(2, len(shape))
+                if shape[i] % msize == 0 and shape[i] >= msize]
+        if cand:
+            best = max(cand, key=lambda i: shape[i])
+            dims[best] = "model"
+        return NamedSharding(mesh, P(*dims))
+
+    return jax.tree.map(one, cache)

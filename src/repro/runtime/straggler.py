@@ -1,0 +1,55 @@
+"""Straggler detection and mitigation.
+
+FlashCP's load balancing is itself the first line of defence (the slowest
+CP worker bounds the step, §3.1) — the planner equalizes attention work
+*within* a step.  This module adds the *across-step* loop:
+
+* per-step wall-time EMA + variance tracking;
+* when jitter (p95/median) exceeds ``jitter_threshold``, the monitor
+  tightens the planner's target imbalance ratio R (more aggressive
+  balancing buys back the straggler slack) down to ``min_target``;
+* when a specific host is persistently slow (hardware degradation), it is
+  reported for eviction via the fault-tolerance path.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+__all__ = ["StragglerMonitor"]
+
+
+@dataclasses.dataclass
+class StragglerMonitor:
+    window: int = 50
+    jitter_threshold: float = 1.15
+    min_target: float = 1.01
+    max_target: float = 1.10
+    _times: list[float] = dataclasses.field(default_factory=list)
+    target_imbalance: float = 1.05
+
+    def record_step(self, seconds: float) -> None:
+        self._times.append(seconds)
+        if len(self._times) > self.window:
+            self._times.pop(0)
+
+    @property
+    def jitter(self) -> float:
+        if len(self._times) < 10:
+            return 1.0
+        t = np.asarray(self._times)
+        med = float(np.median(t))
+        return float(np.percentile(t, 95)) / max(med, 1e-9)
+
+    def adjusted_target(self) -> float:
+        """Planner target imbalance R for the next step."""
+        j = self.jitter
+        if j > self.jitter_threshold:
+            self.target_imbalance = max(self.min_target,
+                                        self.target_imbalance * 0.98)
+        elif j < 1.05:
+            self.target_imbalance = min(self.max_target,
+                                        self.target_imbalance * 1.005)
+        return self.target_imbalance

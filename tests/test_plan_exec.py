@@ -1,0 +1,78 @@
+"""Plan-encoding tests: the host-side arrays the device program consumes."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.baselines import BASELINE_PLANNERS
+from repro.core.heuristic import flashcp_plan
+from repro.core.plan_exec import (encode_plan, encode_plan_batch,
+                                  pick_buffer_bucket, trivial_plan)
+
+
+@settings(max_examples=30, deadline=None)
+@given(seed=st.integers(0, 10_000), cp=st.sampled_from([2, 4, 8]))
+def test_encoding_invariants(seed, cp):
+    rng = np.random.default_rng(seed)
+    context = 64 * cp * int(rng.integers(1, 8))
+    cuts = np.sort(rng.choice(np.arange(1, context),
+                              int(rng.integers(0, 12)), replace=False))
+    lens = np.diff(np.concatenate([[0], cuts, [context]]))
+    lens = lens[lens > 0]
+    plan, _ = flashcp_plan(lens, cp)
+    enc = encode_plan(plan)
+
+    # perm covers every packed position exactly once
+    valid = enc.perm[enc.perm >= 0]
+    assert len(valid) == context
+    assert np.array_equal(np.sort(valid), np.arange(context))
+
+    # metadata consistent with the packed layout
+    starts = np.concatenate([[0], np.cumsum(lens)])[:-1]
+    ok = enc.perm >= 0
+    assert np.array_equal(enc.doc[ok],
+                          np.searchsorted(np.cumsum(lens), enc.perm[ok],
+                                          side="right"))
+    assert np.array_equal(enc.pos[ok], enc.perm[ok] - starts[enc.doc[ok]])
+
+    # send buffer: exactly the non-last-shard tokens, within capacity
+    nl = plan.nonlast_tokens_per_worker()
+    for j in range(cp):
+        sent = enc.send_idx[j][enc.send_idx[j] >= 0]
+        assert len(sent) == nl[j]
+        assert len(sent) <= enc.buf_len
+        # gathered metadata matches the local tokens it points at
+        gd = enc.gath_doc[j * enc.buf_len: j * enc.buf_len + len(sent)]
+        assert np.array_equal(gd, enc.doc[j * enc.t_loc + sent])
+    assert enc.comm_tokens == plan.comm_tokens()
+
+
+def test_bucketing():
+    assert pick_buffer_bucket(1, 4096) == 128
+    assert pick_buffer_bucket(129, 4096) == 256
+    assert pick_buffer_bucket(10_000, 4096) == 4096  # capped at local KV
+
+
+def test_batch_encoding_shares_shapes():
+    lens = [np.array([500, 300, 224]), np.array([1024])]
+    plans = [flashcp_plan(l, 4)[0] for l in lens]
+    stack, encs = encode_plan_batch(plans, align=16)
+    assert stack["doc"].shape == stack["pos"].shape
+    assert stack["send_idx"].shape[0] == 2
+    assert encs[0].buf_len == encs[1].buf_len
+    assert encs[0].t_loc == encs[1].t_loc
+
+
+def test_trivial_plan_zero_comm():
+    enc = encode_plan(trivial_plan(1024))
+    assert enc.comm_tokens == 0
+    assert np.all(enc.send_idx == -1)
+
+
+@pytest.mark.parametrize("strategy", ["llama3", "per_doc", "contiguous"])
+def test_baseline_plans_encode(strategy):
+    lens = np.array([700, 100, 1000, 248])
+    plan = BASELINE_PLANNERS[strategy](lens, 4)
+    enc = encode_plan(plan, align=8)
+    valid = enc.perm[enc.perm >= 0]
+    assert np.array_equal(np.sort(valid), np.arange(2048))

@@ -1,0 +1,145 @@
+"""Planner tests: Algorithm 1 invariants, baselines, Eq. 4/5 accounting.
+
+Property-based (hypothesis) over random document mixes: every plan tiles
+the documents exactly, satisfies the equal-token constraint, and FlashCP's
+communication never exceeds the static full exchange.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.baselines import (contiguous_plan, llama3_plan, per_doc_plan,
+                                  ring_zigzag_plan)
+from repro.core.heuristic import flashcp_plan, zigzag_doc_shards
+from repro.core.ilp import bnb_plan
+from repro.core.plan import ShardingPlan, validate_plan
+from repro.core.workload import (comm_saving, comm_tokens_static,
+                                 plan_comm_bytes, shard_workload)
+from repro.data.distributions import make_rng
+from repro.data.packing import pack_sequence
+
+
+def _doc_mix(rng, context, n_docs):
+    cuts = np.sort(rng.choice(np.arange(1, context), n_docs - 1,
+                              replace=False))
+    lens = np.diff(np.concatenate([[0], cuts, [context]]))
+    return lens[lens > 0]
+
+
+# --------------------------------------------------------------------- #
+# hypothesis properties
+# --------------------------------------------------------------------- #
+@settings(max_examples=40, deadline=None)
+@given(seed=st.integers(0, 10_000), n_docs=st.integers(1, 40),
+       cp=st.sampled_from([2, 4, 8, 16]))
+def test_flashcp_plan_invariants(seed, n_docs, cp):
+    rng = np.random.default_rng(seed)
+    context = 16 * cp * rng.integers(2, 16)
+    lens = _doc_mix(rng, context, min(n_docs, context // 2))
+    plan, stats = flashcp_plan(lens, cp)
+    # tiles docs exactly; tokens equal within the zigzag-remainder slack
+    validate_plan(plan, token_tolerance=cp)
+    t = plan.tokens_per_worker()
+    assert t.max() - t.min() <= cp
+    assert plan.imbalance_ratio() >= 1.0
+    # Eq.5 never exceeds Eq.4's static exchange
+    assert plan.comm_tokens() <= comm_tokens_static(context, cp)
+    assert stats.comm_tokens == plan.comm_tokens()
+
+
+@settings(max_examples=30, deadline=None)
+@given(seed=st.integers(0, 10_000), cp=st.sampled_from([2, 4, 8]))
+def test_baseline_plan_invariants(seed, cp):
+    rng = np.random.default_rng(seed)
+    context = 16 * cp * int(rng.integers(2, 12))
+    lens = _doc_mix(rng, context, int(rng.integers(1, 20)))
+    l3 = llama3_plan(lens, cp)
+    validate_plan(l3)
+    ct = contiguous_plan(lens, cp)
+    validate_plan(ct)
+    pd = per_doc_plan(lens, cp)
+    validate_plan(pd, require_equal_tokens=False)
+    # per-doc zigzag balances tokens within +-1 per document
+    t = pd.tokens_per_worker()
+    assert t.max() - t.min() <= len(lens)
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 1000))
+def test_zigzag_balances_single_doc(seed):
+    rng = np.random.default_rng(seed)
+    d = int(rng.integers(64, 4096))
+    N = 4
+    shards = zigzag_doc_shards(0, d, N)
+    plan = ShardingPlan(doc_lens=np.asarray([d]), shards=shards,
+                        num_workers=N)
+    w = plan.workload_per_worker()
+    # zigzag pairing: near-perfect attention balance for one document
+    assert w.max() / max(w.mean(), 1) < 1.35
+    t = plan.tokens_per_worker()
+    assert t.max() - t.min() <= 2
+
+
+# --------------------------------------------------------------------- #
+# behaviour on realistic mixes (paper's qualitative claims)
+# --------------------------------------------------------------------- #
+@pytest.mark.parametrize("dataset", ["wlb_llm", "pile", "redpajama"])
+def test_flashcp_beats_llama3_balance_and_static_comm(dataset):
+    # the paper's setting: 128K context windows, 8 CP workers
+    rng = make_rng(1)
+    ratios, savings, l3_ratios = [], [], []
+    for _ in range(3):
+        lens = pack_sequence(dataset, 131072, rng)
+        plan, _ = flashcp_plan(lens, 8)
+        l3 = llama3_plan(lens, 8)
+        ratios.append(plan.imbalance_ratio())
+        l3_ratios.append(l3.imbalance_ratio())
+        savings.append(comm_saving(plan))
+    assert np.mean(ratios) < 1.10                 # balanced (paper: ~1.04)
+    assert np.mean(ratios) < np.mean(l3_ratios)   # better than Llama3 CP
+    assert np.mean(savings) > 0.10                # real comm savings
+    # (paper: 28% heuristic comm saving on Pile, 23.6%/34.5% measured
+    # comm-latency reduction on WLB-LLM/Pile)
+
+
+def test_comm_bytes_formula():
+    # one doc split across 2 workers: head (s=100) is the only non-last
+    # shard -> Eq.5 term = 100 tokens
+    from repro.core.plan import Shard
+    plan = ShardingPlan(
+        doc_lens=np.asarray([400]),
+        shards=[Shard(0, 0, 100, 1), Shard(0, 100, 300, 0)],
+        num_workers=2)
+    assert plan.comm_tokens() == 100
+    bytes_ = plan_comm_bytes(plan, kv_heads=8, head_dim=128, dtype_bytes=2)
+    assert bytes_ == 4 * 100 * 8 * 128 * 1 * 2
+
+
+def test_workload_formula():
+    assert shard_workload(0, 4) == (4 + 1) * 4 / 2
+    assert shard_workload(10, 4) == (2 * 10 + 4 + 1) * 4 / 2
+
+
+def test_ring_plan_is_per_doc_with_ring_comm():
+    lens = [512, 256, 256]
+    r = ring_zigzag_plan(lens, 4)
+    p = per_doc_plan(lens, 4)
+    assert r.comm_style == "ring" and p.comm_style == "allgather"
+    assert len(r.shards) == len(p.shards)
+    # ring uses the static critical path (full KV travels the ring)
+    assert r.comm_tokens() == comm_tokens_static(1024, 4)
+
+
+# --------------------------------------------------------------------- #
+# exact reference (B&B "ILP") vs heuristic — Table 2 analogue
+# --------------------------------------------------------------------- #
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_bnb_at_least_as_good_as_heuristic(seed):
+    rng = np.random.default_rng(seed)
+    lens = _doc_mix(rng, 2048, 7)
+    res = bnb_plan(lens, 4, lambda_comm=0.5, max_nodes=200_000)
+    validate_plan(res.plan)
+    plan, _ = flashcp_plan(lens, 4)
+    heur_obj = plan.imbalance_ratio() + 0.5 * plan.comm_tokens() / 512
+    assert res.objective <= heur_obj + 1e-9

@@ -1,0 +1,95 @@
+"""Property tests for the recurrence substrate (hypothesis): the fused
+selective scan and the chunked ssm scan must equal the naive sequential
+recurrence for arbitrary shapes, chunk sizes, resets and initial states."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.models.context import local_selective_scan, local_ssm_scan
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 10_000), B=st.integers(1, 3),
+       T=st.sampled_from([8, 24, 64]), chunk=st.sampled_from([4, 16, 64]),
+       with_init=st.booleans())
+def test_ssm_scan_matches_naive(seed, B, T, chunk, with_init):
+    rng = np.random.default_rng(seed)
+    a = jnp.asarray(rng.uniform(0.2, 1.0, (B, T, 5)).astype(np.float32))
+    x = jnp.asarray(rng.standard_normal((B, T, 5)).astype(np.float32))
+    init = jnp.asarray(rng.standard_normal((B, 5)).astype(np.float32)) \
+        if with_init else None
+
+    h = np.asarray(init) if with_init else np.zeros((B, 5), np.float32)
+    ref = []
+    for t in range(T):
+        h = np.asarray(a[:, t]) * h + np.asarray(x[:, t])
+        ref.append(h.copy())
+    ref = np.stack(ref, 1)
+
+    out = local_ssm_scan(a, x, init=init, chunk=chunk)
+    np.testing.assert_allclose(np.asarray(out), ref, atol=1e-5, rtol=1e-5)
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 10_000), B=st.integers(1, 2),
+       T=st.sampled_from([16, 48, 64]), chunk=st.sampled_from([8, 32]),
+       di=st.sampled_from([4, 8]), S=st.sampled_from([2, 4]),
+       with_init=st.booleans())
+def test_selective_scan_matches_naive(seed, B, T, chunk, di, S, with_init):
+    rng = np.random.default_rng(seed)
+    dt = jnp.asarray(rng.uniform(0.01, 0.5, (B, T, di)).astype(np.float32))
+    A = jnp.asarray(-rng.uniform(0.1, 2.0, (di, S)).astype(np.float32))
+    Bm = jnp.asarray(rng.standard_normal((B, T, S)).astype(np.float32))
+    Cm = jnp.asarray(rng.standard_normal((B, T, S)).astype(np.float32))
+    xf = jnp.asarray(rng.standard_normal((B, T, di)).astype(np.float32))
+    reset = np.ones((B, T), np.float32)
+    reset[:, 0] = 0.0
+    if T > 20:
+        reset[:, 17] = 0.0            # mid-sequence document boundary
+    init = jnp.asarray(rng.standard_normal((B, di, S)).astype(np.float32)) \
+        if with_init else None
+
+    # naive recurrence
+    h = np.asarray(init) if with_init else np.zeros((B, di, S), np.float32)
+    ys = []
+    for t in range(T):
+        a_t = np.exp(np.asarray(dt[:, t])[..., None] * np.asarray(A)) \
+            * reset[:, t][:, None, None]
+        h = a_t * h + (np.asarray(dt[:, t]) * np.asarray(xf[:, t])
+                       )[..., None] * np.asarray(Bm[:, t])[:, None, :]
+        ys.append(np.einsum("bds,bs->bd", h, np.asarray(Cm[:, t])))
+    ref = np.stack(ys, 1)
+
+    out = local_selective_scan(dt, A, Bm, Cm, xf, jnp.asarray(reset),
+                               chunk=chunk, init_state=init)
+    np.testing.assert_allclose(np.asarray(out), ref, atol=2e-5, rtol=2e-4)
+
+    # summary mode agrees with the naive final state
+    pA, hS = local_selective_scan(dt, A, Bm, Cm, xf, jnp.asarray(reset),
+                                  chunk=chunk, summary_only=True)
+    if not with_init:
+        np.testing.assert_allclose(np.asarray(hS), h, atol=2e-5, rtol=2e-4)
+
+
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(0, 1000))
+def test_bnb_proven_optimal_on_tiny_instances(seed):
+    """When the search exhausts the tree, the result must dominate every
+    explicitly-enumerated whole-doc assignment."""
+    import itertools
+    from repro.core.heuristic import _repair_equal_tokens, _Piece, _State
+    from repro.core.ilp import bnb_plan, _evaluate
+
+    rng = np.random.default_rng(seed)
+    n, N = 5, 2
+    cuts = np.sort(rng.choice(np.arange(1, 256), n - 1, replace=False))
+    lens = np.diff(np.concatenate([[0], cuts, [256]]))
+    lens = lens[lens > 0]
+    res = bnb_plan(lens, N, lambda_comm=0.5, max_nodes=500_000)
+    if not res.proven_optimal:
+        return
+    best = min(_evaluate(np.asarray(lens, np.int64), list(asg), N, 0.5)[0]
+               for asg in itertools.product(range(N), repeat=len(lens)))
+    assert res.objective <= best + 1e-9
