@@ -13,14 +13,14 @@ import time
 
 import numpy as np
 
-from repro.core.heuristic import flashcp_plan
-from repro.core.ilp import bnb_plan
+from repro.planner import bnb_plan, get_planner
 from repro.core.workload import comm_saving
 from repro.data.distributions import make_rng
 from repro.data.packing import pack_sequence
 
 
 def run() -> list[str]:
+    heuristic = get_planner("flashcp")
     rng = make_rng(0)
     # small instances keep the exact search tractable (scaled-down C, as
     # the paper scales time by using a commercial solver for minutes)
@@ -35,7 +35,7 @@ def run() -> list[str]:
             lens = np.sort(np.concatenate([lens[:-2], [lens[-1] + lens[-2]]])
                            )[::-1]
         t0 = time.perf_counter()
-        plan, _ = flashcp_plan(lens, 4)
+        plan = heuristic(lens, 4)
         t_h += time.perf_counter() - t0
         t0 = time.perf_counter()
         res = bnb_plan(lens, 4, lambda_comm=0.5, max_nodes=400_000)

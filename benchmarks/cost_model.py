@@ -25,8 +25,8 @@ import dataclasses
 
 import numpy as np
 
-from repro.core.plan import ShardingPlan
-from repro.core.workload import comm_tokens_static, plan_comm_bytes
+from repro.planner import ShardingPlan
+from repro.core.workload import plan_comm_bytes
 
 HW = {
     "peak_flops": 197e12,        # bf16 MXU
@@ -73,26 +73,27 @@ def _attention_block_work(plan: ShardingPlan, *, ring: bool = False
     Collective strategies run one kernel per shard over its full KV run
     (extent = prefix + length); ring processes each shard blockwise per
     rotation hop, so the kernel extent collapses to the shard length —
-    the paper's Ring-Attn kernel-efficiency penalty."""
-    worst_pairs, worst_shards = 0.0, 0
-    for j in range(plan.num_workers):
-        shards = plan.shards_of_worker(j)
-        pairs = 0.0
-        for s in shards:
-            # kv tiles visited by this shard's q tiles: ceil sizes to BLOCK
-            q_tiles = -(-s.length // BLOCK)
-            kv_len = s.start + s.length
-            kv_tiles = -(-kv_len // BLOCK)
-            # causal-doc structure: roughly half the q x kv tile rectangle
-            # above the diagonal is skipped for the local triangle
-            tri = q_tiles * (q_tiles + 1) / 2.0
-            rect = q_tiles * max(kv_tiles - q_tiles, 0)
-            extent = s.length if ring else kv_len
-            pairs += (tri + rect) * BLOCK * BLOCK / _kernel_eff(extent)
-        if pairs > worst_pairs:
-            worst_pairs, worst_shards = pairs, len(shards)
-        worst_shards = max(worst_shards, len(shards))
-    return worst_pairs, worst_shards
+    the paper's Ring-Attn kernel-efficiency penalty.
+
+    Vectorized over the plan's ShardArrays: one pass of numpy ops instead
+    of a Python loop over every shard of every worker."""
+    a = plan.arrays
+    if len(a) == 0:
+        return 0.0, 0
+    # kv tiles visited by each shard's q tiles: ceil sizes to BLOCK
+    q_tiles = -(-a.length // BLOCK)
+    kv_len = a.start + a.length
+    kv_tiles = -(-kv_len // BLOCK)
+    # causal-doc structure: roughly half the q x kv tile rectangle above
+    # the diagonal is skipped for the local triangle
+    tri = q_tiles * (q_tiles + 1) / 2.0
+    rect = q_tiles * np.maximum(kv_tiles - q_tiles, 0)
+    extent = a.length if ring else kv_len
+    pairs = (tri + rect) * BLOCK * BLOCK / _kernel_eff(extent)
+    per_worker = np.bincount(a.worker, weights=pairs,
+                             minlength=plan.num_workers)
+    shards_per_worker = np.bincount(a.worker, minlength=plan.num_workers)
+    return float(per_worker.max()), int(shards_per_worker.max())
 
 
 def step_breakdown(plan: ShardingPlan, dims: ModelDims,
@@ -122,10 +123,9 @@ def step_breakdown(plan: ShardingPlan, dims: ModelDims,
         comm_s = max(0.0, comm_s - attn_s) + merge_s
 
     # ---- data copies (§4.3 "Others") ---------------------------------- #
-    copy_bytes = sum(
-        s.length for s in plan.shards) / N * dims.kv_heads * dims.head_dim \
-        * 2 * 2
-    other_s = len(plan.shards) / N * hw["copy_overhead_s"] \
+    copy_bytes = int(plan.arrays.length.sum()) / N * dims.kv_heads \
+        * dims.head_dim * 2 * 2
+    other_s = len(plan.arrays) / N * hw["copy_overhead_s"] \
         + copy_bytes / hw["hbm_bw"]
 
     # ---- token-linear GEMMs (equal across methods) -------------------- #
@@ -139,5 +139,5 @@ def step_breakdown(plan: ShardingPlan, dims: ModelDims,
     total = attn_s + comm_s + other_s + linear_s
     return {"attn_s": attn_s, "comm_s": comm_s, "other_s": other_s,
             "linear_s": linear_s, "total_s": total,
-            "comm_bytes": comm_bytes, "shards": len(plan.shards),
+            "comm_bytes": comm_bytes, "shards": len(plan.arrays),
             "imbalance": plan.imbalance_ratio()}

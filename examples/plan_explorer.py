@@ -1,7 +1,9 @@
 """Plan explorer: visualize how each CP strategy shards a packed sequence.
 
 ASCII rendering of worker assignments plus the balance/communication
-numbers the paper's figures are built from.
+numbers the paper's figures are built from.  Strategies resolve through
+the :mod:`repro.planner` registry — pass ``--strategy all`` to sweep every
+registered planner, or a comma-separated subset.
 
     PYTHONPATH=src python examples/plan_explorer.py --dataset pile --cp 8
 """
@@ -14,7 +16,7 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 import numpy as np
 
-from repro.core.baselines import BASELINE_PLANNERS
+from repro.planner import available_planners, get_planner
 from repro.core.workload import comm_saving, comm_tokens_static
 from repro.data.distributions import make_rng
 from repro.data.packing import pack_sequence
@@ -26,10 +28,11 @@ def render(plan, width=100):
     """One row per packed position range; glyph = worker id."""
     C = plan.context_len
     doc_starts = np.concatenate([[0], np.cumsum(plan.doc_lens)])[:-1]
+    a = plan.arrays
     owner = np.zeros(C, np.int32)
-    for s in plan.shards:
-        g = doc_starts[s.doc_id] + s.start
-        owner[g:g + s.length] = s.worker
+    g = doc_starts[a.doc_id] + a.start
+    for lo, ln, w in zip(g, a.length, a.worker):
+        owner[lo:lo + ln] = w
     cells = np.array_split(owner, width)
     line = "".join(GLYPHS[int(np.bincount(c).argmax())] for c in cells)
     # document boundary markers
@@ -46,6 +49,8 @@ def main():
     ap.add_argument("--context", type=int, default=32768)
     ap.add_argument("--cp", type=int, default=8)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--strategy", default="llama3,per_doc,flashcp",
+                    help="comma-separated planner names, or 'all'")
     args = ap.parse_args()
 
     rng = make_rng(args.seed)
@@ -53,13 +58,23 @@ def main():
     print(f"{args.dataset}: {len(lens)} documents in {args.context} tokens "
           f"(| marks document boundaries; digits are CP worker ids)\n")
 
-    for name in ("llama3", "per_doc", "flashcp"):
-        plan = BASELINE_PLANNERS[name](lens, args.cp)
-        print(f"--- {name}")
+    if args.strategy == "all":
+        # skip the exponential reference solver on realistic mixes
+        names = [n for n in available_planners()
+                 if get_planner(n).info.cost_hint != "exponential"]
+    else:
+        names = args.strategy.split(",")
+
+    for name in names:
+        planner = get_planner(name)
+        info = planner.info
+        plan = planner(lens, args.cp)
+        print(f"--- {name}  [comm={info.comm_style}, exec={info.exec_style}"
+              f"{', order-preserving' if info.preserves_token_order else ''}]")
         print(render(plan))
         static = comm_tokens_static(args.context, args.cp)
         print(f"    imbalance {plan.imbalance_ratio():.3f} | "
-              f"shards {len(plan.shards)} | "
+              f"shards {len(plan.arrays)} | "
               f"comm {plan.comm_tokens()}/{static} tokens/rank "
               f"({comm_saving(plan):.0%} saved)\n")
 

@@ -1,148 +1,10 @@
-"""Baseline CP sharding plans (paper §4.1): Llama3 CP, Per-Doc CP, Ring-Attn.
+"""Legacy import path — baseline planners live in
+:mod:`repro.planner.baselines`; resolve by name via
+:func:`repro.planner.get_planner`."""
 
-All baselines are expressed as :class:`~repro.core.plan.ShardingPlan`s over
-the *same* substrate as FlashCP so that the paper's comparisons (Fig. 5/6/7)
-run on identical machinery; only the plan and the communication style differ.
+from repro.planner.baselines import (BASELINE_PLANNERS,  # noqa: F401
+                                     contiguous_plan, llama3_plan,
+                                     per_doc_plan, ring_zigzag_plan)
 
-* ``llama3_plan``   — Per-Seq sharding: the packed sequence is split into
-  2N equal chunks regardless of document boundaries (zigzag pairing i and
-  2N-1-i, Fig. 1(b)); full-KV all-gather (Eq. 4).  Workload-imbalanced under
-  document masking.
-* ``per_doc_plan``  — every document is zigzag-split into 2N chunks
-  (WLB-LLM); balanced but kernel-inefficient; full-KV all-gather (Eq. 4).
-* ``ring_zigzag_plan`` — same shard layout as Per-Doc, but KV travels by
-  P2P ring (``comm_style='ring'``): N-1 ``ppermute`` hops of the full local
-  KV, attention computed blockwise with LSE accumulation.
-"""
-
-from __future__ import annotations
-
-from typing import Sequence
-
-import numpy as np
-
-from .heuristic import zigzag_doc_shards
-from .plan import Shard, ShardingPlan, merge_adjacent_shards, validate_plan
-
-__all__ = ["llama3_plan", "per_doc_plan", "ring_zigzag_plan", "BASELINE_PLANNERS"]
-
-
-def _doc_of_position(doc_lens: np.ndarray):
-    """Map a global packed position -> (doc_id, offset_in_doc)."""
-    bounds = np.concatenate([[0], np.cumsum(doc_lens)])
-    return bounds
-
-
-def llama3_plan(doc_lens: Sequence[int], num_workers: int,
-                *, validate: bool = True) -> ShardingPlan:
-    """Per-Seq sharding: 2N uniform chunks of the packed sequence, worker i
-    receives chunks i and 2N-1-i.  Document boundaries are ignored, so a
-    chunk may contain pieces of several documents (each piece becomes a
-    Shard of its own document)."""
-    doc_lens = np.asarray(doc_lens, dtype=np.int64)
-    ctx = int(doc_lens.sum())
-    n2 = 2 * num_workers
-    assert ctx % n2 == 0, f"context {ctx} must divide 2N={n2} for Llama3 CP"
-    chunk = ctx // n2
-    bounds = _doc_of_position(doc_lens)
-
-    shards: list[Shard] = []
-    for c in range(n2):
-        worker = c if c < num_workers else n2 - 1 - c
-        lo, hi = c * chunk, (c + 1) * chunk
-        # walk documents overlapping [lo, hi)
-        first = int(np.searchsorted(bounds, lo, side="right")) - 1
-        pos = lo
-        d = first
-        while pos < hi:
-            doc_end = int(bounds[d + 1])
-            take = min(hi, doc_end) - pos
-            shards.append(Shard(doc_id=d, start=int(pos - bounds[d]),
-                                length=int(take), worker=worker))
-            pos += take
-            d += 1
-    shards = merge_adjacent_shards(shards)
-    plan = ShardingPlan(doc_lens=doc_lens, shards=shards,
-                        num_workers=num_workers, comm_style="allgather")
-    if validate:
-        validate_plan(plan)
-    return plan
-
-
-def per_doc_plan(doc_lens: Sequence[int], num_workers: int,
-                 *, validate: bool = True) -> ShardingPlan:
-    """Per-Doc CP (WLB-LLM): zigzag-shard every document independently."""
-    doc_lens = np.asarray(doc_lens, dtype=np.int64)
-    shards: list[Shard] = []
-    for did, d in enumerate(doc_lens):
-        shards.extend(zigzag_doc_shards(did, int(d), num_workers))
-    plan = ShardingPlan(doc_lens=doc_lens, shards=shards,
-                        num_workers=num_workers, comm_style="allgather")
-    if validate:
-        # zigzag remainders can leave ±1-token differences between workers;
-        # Per-Doc CP in practice pads documents — we only require coverage.
-        validate_plan(plan, require_equal_tokens=False)
-    return plan
-
-
-def ring_zigzag_plan(doc_lens: Sequence[int], num_workers: int,
-                     *, validate: bool = True) -> ShardingPlan:
-    """Ring-Attn (Zigzag): Per-Doc layout with ring P2P communication."""
-    plan = per_doc_plan(doc_lens, num_workers, validate=validate)
-    plan.comm_style = "ring"
-    return plan
-
-
-def contiguous_plan(doc_lens: Sequence[int], num_workers: int,
-                    *, validate: bool = True) -> ShardingPlan:
-    """Contiguous N-chunk sharding with FlashCP's sharding-aware comm.
-
-    Used for recurrent architectures (Jamba's Mamba layers, xLSTM): SSM
-    state must flow rank i -> i+1, so token order must be preserved across
-    ranks.  FlashCP's communication mechanism still applies (documents
-    wholly inside one chunk are never exchanged; only non-last doc pieces
-    are), but Whole-Doc *placement* is constrained by the ordering —
-    recorded in DESIGN.md §Arch-applicability.
-    """
-    doc_lens = np.asarray(doc_lens, dtype=np.int64)
-    ctx = int(doc_lens.sum())
-    assert ctx % num_workers == 0
-    chunk = ctx // num_workers
-    bounds = _doc_of_position(doc_lens)
-
-    shards: list[Shard] = []
-    for j in range(num_workers):
-        lo, hi = j * chunk, (j + 1) * chunk
-        first = int(np.searchsorted(bounds, lo, side="right")) - 1
-        pos, d = lo, first
-        while pos < hi:
-            doc_end = int(bounds[d + 1])
-            take = min(hi, doc_end) - pos
-            shards.append(Shard(doc_id=d, start=int(pos - bounds[d]),
-                                length=int(take), worker=j))
-            pos += take
-            d += 1
-    shards = merge_adjacent_shards(shards)
-    plan = ShardingPlan(doc_lens=doc_lens, shards=shards,
-                        num_workers=num_workers, comm_style="flashcp")
-    if validate:
-        validate_plan(plan)
-    return plan
-
-
-def _flashcp_adapter(doc_lens, num_workers, *, validate=True):
-    from .heuristic import flashcp_plan
-
-    plan, _ = flashcp_plan(doc_lens, num_workers, validate=validate)
-    return plan
-
-
-#: name -> planner fn, used by benchmarks and the training launcher
-BASELINE_PLANNERS = {
-    "llama3": llama3_plan,
-    "per_doc": per_doc_plan,
-    "ring_zigzag": ring_zigzag_plan,
-    "ring": ring_zigzag_plan,
-    "contiguous": contiguous_plan,
-    "flashcp": _flashcp_adapter,
-}
+__all__ = ["llama3_plan", "per_doc_plan", "ring_zigzag_plan",
+           "contiguous_plan", "BASELINE_PLANNERS"]

@@ -31,6 +31,8 @@ from typing import Any, Callable
 
 import jax
 import jax.numpy as jnp
+
+from repro.compat import axis_size, shard_map
 from jax.sharding import PartitionSpec as P
 
 from repro.models.context import ExecContext, local_ssm_scan
@@ -147,7 +149,7 @@ def _flashcp_island(q, k, v, doc, pos, send_idx, gath_doc, gath_pos,
                     *, impl, q_chunk, interpret, tables=None, block_q=128,
                     block_k=128, kv_comm_dtype="native"):
     b = q.shape[0]
-    N = jax.lax.axis_size(CP_AXIS)
+    N = axis_size(CP_AXIS)
     me = jax.lax.axis_index(CP_AXIS)
     buf = send_idx.shape[-1]
 
@@ -190,7 +192,7 @@ def _allgather_island(q, k, v, doc, pos, *, impl, q_chunk, interpret):
 
 def _ring_island(q, k, v, doc, pos, *, q_chunk, scale):
     b, Hq, T, D = q.shape
-    N = jax.lax.axis_size(CP_AXIS)
+    N = axis_size(CP_AXIS)
     perm = [(i, (i + 1) % N) for i in range(N)]
 
     acc = jnp.zeros((b, Hq, T, D), jnp.float32)
@@ -229,7 +231,7 @@ def _moe_island(x, topi, gates, wi, wg, wo, *, kind, capacity_factor,
                                   expert_ffn)
 
     b, t, d = x.shape
-    N = jax.lax.axis_size(CP_AXIS)
+    N = axis_size(CP_AXIS)
     E_local = wi.shape[0]
     E = E_local * N
     n = b * t
@@ -257,7 +259,7 @@ def _selective_scan_island(dt, A, Bm, Cm, xf, reset):
     """
     from repro.models.context import local_selective_scan
 
-    N = jax.lax.axis_size(CP_AXIS)
+    N = axis_size(CP_AXIS)
     me = jax.lax.axis_index(CP_AXIS)
 
     A_rank, S_rank = local_selective_scan(dt, A, Bm, Cm, xf, reset,
@@ -279,7 +281,7 @@ def _selective_scan_island(dt, A, Bm, Cm, xf, reset):
 
 def _ssm_island(a, x):
     """Cross-rank recurrence: local scan + associative prefix combine."""
-    N = jax.lax.axis_size(CP_AXIS)
+    N = axis_size(CP_AXIS)
     me = jax.lax.axis_index(CP_AXIS)
 
     h_loc = local_ssm_scan(a, x)
@@ -361,7 +363,7 @@ def make_cp_context(
             args = args + tuple(tables)
 
         def attn(q, k, v):
-            f = jax.shard_map(island, mesh=mesh, in_specs=tuple(in_specs),
+            f = shard_map(island, mesh=mesh, in_specs=tuple(in_specs),
                               out_specs=qkv_spec, check_vma=False)
             return f(q, k, v, doc, pos, *args)
 
@@ -370,7 +372,7 @@ def make_cp_context(
                                    q_chunk=q_chunk, interpret=interpret)
 
         def attn(q, k, v):
-            f = jax.shard_map(
+            f = shard_map(
                 island, mesh=mesh,
                 in_specs=(qkv_spec, qkv_spec, qkv_spec, tok_spec, tok_spec),
                 out_specs=qkv_spec, check_vma=False)
@@ -380,7 +382,7 @@ def make_cp_context(
         island = functools.partial(_ring_island, q_chunk=q_chunk, scale=scale)
 
         def attn(q, k, v):
-            f = jax.shard_map(
+            f = shard_map(
                 island, mesh=mesh,
                 in_specs=(qkv_spec, qkv_spec, qkv_spec, tok_spec, tok_spec),
                 out_specs=qkv_spec, check_vma=False)
@@ -392,7 +394,7 @@ def make_cp_context(
     def ssm_scan(a, x):
         a_spec = P(B, CP_AXIS, *([None] * (a.ndim - 2)))
         x_spec = P(B, CP_AXIS, *([None] * (x.ndim - 2)))
-        f = jax.shard_map(_ssm_island, mesh=mesh,
+        f = shard_map(_ssm_island, mesh=mesh,
                           in_specs=(a_spec, x_spec), out_specs=x_spec,
                           check_vma=False)
         return f(a, x)
@@ -400,7 +402,7 @@ def make_cp_context(
     def selective_scan(dt, A, Bm, Cm, xf, reset):
         tok = P(B, CP_AXIS)
         tok3 = P(B, CP_AXIS, None)
-        f = jax.shard_map(
+        f = shard_map(
             _selective_scan_island, mesh=mesh,
             in_specs=(tok3, P(None, None), tok3, tok3, tok3, tok),
             out_specs=tok3, check_vma=False)
@@ -415,7 +417,7 @@ def make_cp_context(
         wg = params.get("wg")
         if wg is None:
             wg = params["wi"]      # unused by gelu path; keeps arity static
-        f = jax.shard_map(
+        f = shard_map(
             island, mesh=mesh,
             in_specs=(tok3, tok3, tok3, expert, expert, expert),
             out_specs=tok3, check_vma=False)

@@ -1,373 +1,12 @@
-"""FlashCP heuristic sharding algorithm (paper Algorithm 1).
+"""Legacy import path — Algorithm 1 lives in
+:mod:`repro.planner.heuristic` (vectorized, registry-registered as
+``"flashcp"``)."""
 
-Faithful structure:
+from repro.planner.heuristic import (HeuristicStats,  # noqa: F401
+                                     _ArrayState, _repair_equal_tokens,
+                                     flashcp_plan, zigzag_doc_shards)
 
-  1. Sort documents by decreasing length.
-  2. Greedy LPT: assign each *whole* document to the CP worker with the
-     minimum attention workload (``Min_Worker_Add``).
-  3. Equal-token repair (``Whole_Doc_Shard_and_Add``): while token counts
-     are unequal, move tokens from over-full to under-full workers.  Two
-     move kinds, cheapest first:
-       (a) relocate a whole document (zero communication cost);
-       (b) cut a *head piece* off a document and move it — the donated head
-           becomes a non-last shard (communication ∝ its length, the
-           paper's Δl), while the bulk tail stays in place as a last shard
-           (never communicated).
-  4. If the resulting workload imbalance ratio exceeds the target ``R``,
-     pop the longest document into the *Per-Doc* set (zigzag 2N-chunk
-     sharding, perfectly balanced) and repeat from 2 with the remainder.
-
-The returned :class:`~repro.core.plan.ShardingPlan` mixes Per-Doc zigzag
-shards and Whole-Doc shards, exactly as §3.3 "Combine Per-Doc and Whole-Doc
-Sharding" prescribes.
-"""
-
-from __future__ import annotations
-
-import dataclasses
-from typing import Sequence
-
-import numpy as np
-
-from .plan import Shard, ShardingPlan, merge_adjacent_shards, validate_plan
-from .workload import shard_workload
+# the seed's mutable-state names, kept for external callers
+_State = _ArrayState
 
 __all__ = ["flashcp_plan", "zigzag_doc_shards", "HeuristicStats"]
-
-
-@dataclasses.dataclass
-class HeuristicStats:
-    outer_iterations: int
-    per_doc_docs: int
-    whole_docs: int
-    cut_docs: int
-    imbalance_ratio: float
-    comm_tokens: int
-
-
-# --------------------------------------------------------------------- #
-# Per-Doc zigzag sharding (used for extreme documents and by baselines)
-# --------------------------------------------------------------------- #
-def zigzag_doc_shards(doc_id: int, doc_len: int, num_workers: int) -> list[Shard]:
-    """Split one document into 2N chunks; worker i gets chunks i and 2N-1-i.
-
-    Pairing an early (cheap) with a late (expensive) chunk balances the
-    causal attention workload across workers — the standard zigzag scheme
-    of Per-Doc CP / Ring-Attn (Zigzag).
-    """
-    n2 = 2 * num_workers
-    base, rem = divmod(doc_len, n2)
-    sizes = [base + (1 if c < rem else 0) for c in range(n2)]
-    starts = np.concatenate([[0], np.cumsum(sizes)])[:-1]
-    shards = []
-    for c in range(n2):
-        if sizes[c] == 0:
-            continue
-        worker = c if c < num_workers else n2 - 1 - c
-        shards.append(Shard(doc_id=doc_id, start=int(starts[c]),
-                            length=int(sizes[c]), worker=worker))
-    return merge_adjacent_shards(shards)
-
-
-# --------------------------------------------------------------------- #
-# internal mutable state for the whole-doc phase
-# --------------------------------------------------------------------- #
-@dataclasses.dataclass
-class _Piece:
-    """A (possibly cut) piece of a document living on one worker."""
-
-    doc_id: int
-    start: int
-    length: int
-    worker: int
-
-    @property
-    def end(self) -> int:
-        return self.start + self.length
-
-    def workload(self) -> float:
-        return shard_workload(self.start, self.length)
-
-
-class _State:
-    def __init__(self, num_workers: int, base_tokens, base_workload,
-                 doc_lens=None):
-        self.N = num_workers
-        self.pieces: list[_Piece] = []
-        self.tokens = np.asarray(base_tokens, dtype=np.int64).copy()
-        self.work = np.asarray(base_workload, dtype=np.float64).copy()
-        self.doc_lens = doc_lens
-
-    def is_last(self, piece: _Piece) -> bool:
-        if self.doc_lens is None:
-            return True
-        return piece.end == int(self.doc_lens[piece.doc_id])
-
-    def add(self, piece: _Piece) -> None:
-        self.pieces.append(piece)
-        self.tokens[piece.worker] += piece.length
-        self.work[piece.worker] += piece.workload()
-
-    def move(self, piece: _Piece, worker: int) -> None:
-        self.tokens[piece.worker] -= piece.length
-        self.work[piece.worker] -= piece.workload()
-        piece.worker = worker
-        self.tokens[worker] += piece.length
-        self.work[worker] += piece.workload()
-
-    def cut_head(self, piece: _Piece, size: int, receiver: int) -> _Piece:
-        """Split ``size`` tokens off the front of ``piece``; move the head
-        to ``receiver``.  The tail stays put (its prefix grows)."""
-        assert 0 < size < piece.length
-        donor = piece.worker
-        head = _Piece(piece.doc_id, piece.start, size, receiver)
-        # update tail in place
-        old_w = piece.workload()
-        piece.start += size
-        piece.length -= size
-        self.tokens[donor] -= size
-        self.work[donor] += piece.workload() - old_w
-        self.add(head)
-        return head
-
-    def cut_tail(self, piece: _Piece, size: int, receiver: int) -> _Piece:
-        """Split ``size`` tokens off the end of ``piece``; move the tail to
-        ``receiver``.  Cheaper than a head cut when size > length/2: the
-        moved tail keeps the piece's last-shard status (never sent), and
-        only the remaining head joins the communication set."""
-        assert 0 < size < piece.length
-        donor = piece.worker
-        tail = _Piece(piece.doc_id, piece.end - size, size, receiver)
-        old_w = piece.workload()
-        piece.length -= size
-        self.tokens[donor] -= size
-        self.work[donor] += piece.workload() - old_w
-        self.add(tail)
-        return tail
-
-
-# --------------------------------------------------------------------- #
-# the algorithm
-# --------------------------------------------------------------------- #
-def flashcp_plan(
-    doc_lens: Sequence[int],
-    num_workers: int,
-    *,
-    target_ratio: float = 1.05,
-    max_outer_iters: int | None = None,
-    validate: bool = True,
-) -> tuple[ShardingPlan, HeuristicStats]:
-    """Run Algorithm 1 and return (plan, stats).
-
-    ``doc_lens`` must sum to a context length divisible by ``num_workers``.
-    """
-    doc_lens = np.asarray(doc_lens, dtype=np.int64)
-    n = len(doc_lens)
-    ctx = int(doc_lens.sum())
-    N = num_workers
-    assert ctx % N == 0, f"context {ctx} not divisible by CP size {N}"
-    per_worker = ctx // N
-    if max_outer_iters is None:
-        max_outer_iters = n + 1
-
-    # documents sorted by decreasing length (line 1); ties broken by id for
-    # determinism.
-    order = sorted(range(n), key=lambda i: (-int(doc_lens[i]), i))
-
-    per_doc_ids: list[int] = []      # Per_Doc_P (line 2/22)
-    remaining: list[int] = list(order)
-
-    state: _State | None = None
-    outer = 0
-    while True:
-        outer += 1
-        # ---- per-doc zigzag base load (from docs already popped).  The
-        # 2N-chunk remainders are allocated jointly: each doc's extra
-        # tokens go to the chunks of the currently least-loaded workers,
-        # keeping the per-doc base within +-1 token of equal overall. ---- #
-        base_tokens = np.zeros(N, dtype=np.int64)
-        base_work = np.zeros(N, dtype=np.float64)
-        per_doc_shards: list[Shard] = []
-        n2 = 2 * N
-        for did in per_doc_ids:
-            d = int(doc_lens[did])
-            base, rem = divmod(d, n2)
-            sizes = [base] * n2
-            worker_of = [c if c < N else n2 - 1 - c for c in range(n2)]
-            if rem:
-                chunk_order = sorted(
-                    range(n2),
-                    key=lambda c: (base_tokens[worker_of[c]], c))
-                for c in chunk_order[:rem]:
-                    sizes[c] += 1
-            starts = np.concatenate([[0], np.cumsum(sizes)])[:-1]
-            chunk_shards = [
-                Shard(did, int(starts[c]), int(sizes[c]), worker_of[c])
-                for c in range(n2) if sizes[c] > 0]
-            for s in merge_adjacent_shards(chunk_shards):
-                per_doc_shards.append(s)
-                base_tokens[s.worker] += s.length
-                base_work[s.worker] += s.workload()
-
-        # ---- lines 5-9: greedy whole-doc LPT by attention workload ------ #
-        state = _State(N, base_tokens, base_work, doc_lens)
-        for did in remaining:
-            j = int(np.argmin(state.work))
-            state.add(_Piece(did, 0, int(doc_lens[did]), j))
-
-        # ---- lines 10-16: equal-token repair ---------------------------- #
-        _repair_equal_tokens(state, per_worker)
-
-        # ---- beyond-paper refinement: comm-free workload exchange ------- #
-        # Moving pieces between workers changes no shard's last-ness, so it
-        # is (near-)free in Eq. 5 terms; exchanging a high-prefix piece on
-        # the hottest worker against low-workload pieces on the coldest
-        # often reaches the target ratio without popping documents into
-        # Per-Doc sharding (which is what costs communication).
-        _workload_exchange(state, per_worker, target_ratio)
-
-        # ---- line 18: imbalance ratio of the full temporary plan -------- #
-        work = state.work
-        cur_ratio = float(np.max(work)) / max(float(np.mean(work)), 1e-9)
-
-        if cur_ratio <= target_ratio or not remaining or outer >= max_outer_iters:
-            break
-        # ---- lines 19-23: pop the longest doc, shard it Per-Doc --------- #
-        per_doc_ids.append(remaining.pop(0))
-
-    # ---- build the final ShardingPlan ----------------------------------- #
-    shards = list(per_doc_shards)
-    shards.extend(
-        Shard(p.doc_id, p.start, p.length, p.worker) for p in state.pieces
-    )
-    shards = merge_adjacent_shards(shards)
-    plan = ShardingPlan(doc_lens=doc_lens, shards=shards, num_workers=N,
-                        comm_style="flashcp")
-    if validate:
-        validate_plan(plan, token_tolerance=0 if not per_doc_ids else N)
-
-    whole_docs = len({s.doc_id for s in shards
-                      if s.start == 0 and s.length == doc_lens[s.doc_id]})
-    stats = HeuristicStats(
-        outer_iterations=outer,
-        per_doc_docs=len(per_doc_ids),
-        whole_docs=whole_docs,
-        cut_docs=n - whole_docs,
-        imbalance_ratio=plan.imbalance_ratio(),
-        comm_tokens=plan.comm_tokens(),
-    )
-    return plan, stats
-
-
-# --------------------------------------------------------------------- #
-def _workload_exchange(state: _State, target_tokens: int,
-                       target_ratio: float, max_iters: int = 40) -> None:
-    """Reduce the attention-workload imbalance by exchanging pieces between
-    the hottest and coldest workers (token counts re-repaired after each
-    exchange).  Exchanges never change a piece's last-shard status, so the
-    Eq. 5 communication set is essentially unchanged."""
-    for _ in range(max_iters):
-        work = state.work
-        mean = float(np.mean(work))
-        if mean <= 0 or float(np.max(work)) / mean <= target_ratio:
-            return
-        hot = int(np.argmax(work))
-        cold = int(np.argmin(work))
-        hot_pieces = [p for p in state.pieces if p.worker == hot]
-        cold_pieces = [p for p in state.pieces if p.worker == cold]
-        if not hot_pieces:
-            return
-        gap = work[hot] - work[cold]
-
-        # best single-piece exchange (B may be 'nothing')
-        best = None
-        for A in hot_pieces:
-            wa = A.workload()
-            for B in cold_pieces + [None]:
-                wb = B.workload() if B is not None else 0.0
-                delta = wa - wb
-                if delta <= 0 or delta >= gap:
-                    continue  # must strictly shrink the gap
-                score = abs(gap - 2 * delta)
-                if best is None or score < best[0]:
-                    best = (score, A, B)
-        if best is None:
-            return
-        _, A, B = best
-        state.move(A, cold)
-        if B is not None:
-            state.move(B, hot)
-        _repair_equal_tokens(state, target_tokens)
-
-
-def _repair_equal_tokens(state: _State, target: int) -> None:
-    """``Whole_Doc_Shard_and_Add``: equalize token counts to ``target``.
-
-    Strategy (cheapest communication first):
-      1. relocate whole pieces donor→receiver when one fits the excess and
-         the deficit (zero communication);
-      2. cut head pieces of size min(excess, deficit) and move them (the
-         donated head is a non-last shard; communication ∝ head length).
-
-    Heads are preferentially cut from the piece whose transferred workload
-    best levels the two workers' attention workloads, so token repair also
-    nudges workload balance (Fig. 4(2) right: several small Δl cuts).
-    """
-    N = state.N
-    guard = 0
-    while True:
-        guard += 1
-        if guard > 100_000:  # pragma: no cover - safety net
-            raise RuntimeError("token repair failed to converge")
-        excess = state.tokens - target
-        donor = int(np.argmax(excess))
-        receiver = int(np.argmin(excess))
-        if excess[donor] <= 0:
-            assert np.all(excess == 0), f"tokens drifted: {state.tokens}"
-            return
-        need = int(min(excess[donor], -excess[receiver]))
-        assert need > 0
-
-        donor_pieces = [p for p in state.pieces if p.worker == donor]
-        if not donor_pieces:
-            # the excess sits entirely in per-doc zigzag base load (off by
-            # at most a few tokens after joint remainder allocation);
-            # execution-side padding absorbs it (plan_exec).
-            return
-        # (1) whole-piece relocation: largest piece that fits both sides.
-        fits = [p for p in donor_pieces if p.length <= need]
-        if fits:
-            best = max(fits, key=lambda p: p.length)
-            state.move(best, receiver)
-            continue
-
-        # (2) cut exactly `need` tokens off a piece.  Direction matters for
-        # communication (Eq. 5):
-        #   - cutting a piece that is already non-last adds NOTHING (its
-        #     tokens were all in the send set already);
-        #   - a last piece pays min(need, len - need): move the head (head
-        #     joins the send set) or move the tail (the remaining head
-        #     joins the send set) — pick the cheaper side.
-        # Ties are broken toward leveling the donor/receiver workloads.
-        candidates = [p for p in donor_pieces if p.length > need]
-        assert candidates, "no piece can donate a cut"
-        gap = state.work[donor] - state.work[receiver]
-
-        def added_comm(p: _Piece) -> int:
-            if not state.is_last(p):
-                return 0
-            return min(need, p.length - need)
-
-        def level_score(p: _Piece) -> float:
-            if state.is_last(p) and need > p.length - need:
-                moved = shard_workload(p.end - need, need)   # tail cut
-            else:
-                moved = shard_workload(p.start, need)        # head cut
-            return abs(gap - 2.0 * moved)
-
-        best = min(candidates, key=lambda p: (added_comm(p),
-                                              level_score(p)))
-        if state.is_last(best) and need > best.length - need:
-            state.cut_tail(best, need, receiver)
-        else:
-            state.cut_head(best, need, receiver)

@@ -1,218 +1,16 @@
-"""Sharding-plan data structures for FlashCP context parallelism.
+"""Legacy import path — the plan data structures live in
+:mod:`repro.planner.plan` (vectorized ShardArrays core)."""
 
-Terminology follows the paper (§3.1):
-
-* A packed input sequence of context length ``C`` contains ``n`` documents
-  ``D = [d_1 .. d_n]`` (lengths).
-* Documents are partitioned into ``m`` shards ``S = [s_1 .. s_m]``; shard
-  ``i`` has a *prefix length* ``p_i`` — the number of tokens of the same
-  document preceding its start.
-* Each shard is assigned to exactly one CP worker (Eq. 1); every worker holds
-  exactly ``C / N`` tokens (Eq. 2, the equal-token constraint).
-* A shard is a **last shard** iff it contains the final token of its
-  document.  Only *non-last* shards ever need their KV communicated (§3.2):
-  some later shard of the same document (living on another worker) must
-  attend to them.  Whole documents kept on one worker are last shards by
-  definition and are never communicated.
-
-Everything in this module is host-side ``numpy`` / pure Python; the
-device-facing encoding lives in :mod:`repro.core.plan_exec`.
-"""
-
-from __future__ import annotations
-
-import dataclasses
-from typing import Iterable, Sequence
-
-import numpy as np
+from repro.planner.plan import (Shard, ShardArrays, ShardingPlan,  # noqa: F401
+                                make_whole_doc_plan,
+                                merge_adjacent_shards,
+                                shard_workload_array, validate_plan)
 
 __all__ = [
     "Shard",
+    "ShardArrays",
     "ShardingPlan",
     "make_whole_doc_plan",
     "validate_plan",
+    "merge_adjacent_shards",
 ]
-
-
-@dataclasses.dataclass(frozen=True)
-class Shard:
-    """A contiguous slice of one document, assigned to one CP worker."""
-
-    doc_id: int
-    start: int      # offset inside the document == prefix length p_i
-    length: int     # s_i, in tokens
-    worker: int
-
-    @property
-    def end(self) -> int:
-        return self.start + self.length
-
-    def is_last(self, doc_len: int) -> bool:
-        return self.end == doc_len
-
-    def workload(self) -> float:
-        """Attention workload W_i = (2 p_i + s_i + 1) * s_i / 2 (paper §3.1).
-
-        This is the number of (query, key) pairs evaluated by causal
-        attention for this shard, counting its prefix context.
-        """
-        return (2 * self.start + self.length + 1) * self.length / 2.0
-
-
-@dataclasses.dataclass
-class ShardingPlan:
-    """A complete sharding + distribution plan for one packed sequence."""
-
-    doc_lens: np.ndarray          # (n,) int64 document lengths
-    shards: list[Shard]           # all shards, all workers
-    num_workers: int
-    # how KV is exchanged at execution time; informs cost models and the
-    # device-side executor.  "flashcp" = sharding-aware compact all-gather
-    # (Eq. 5); "allgather" = full-KV all-gather (Eq. 4, Llama3/Per-Doc CP);
-    # "ring" = P2P ring exchange of full KV (Ring-Attn).
-    comm_style: str = "flashcp"
-
-    # ------------------------------------------------------------------ #
-    # basic derived quantities
-    # ------------------------------------------------------------------ #
-    @property
-    def context_len(self) -> int:
-        return int(np.sum(self.doc_lens))
-
-    @property
-    def num_docs(self) -> int:
-        return len(self.doc_lens)
-
-    def shards_of_worker(self, j: int) -> list[Shard]:
-        return [s for s in self.shards if s.worker == j]
-
-    def tokens_per_worker(self) -> np.ndarray:
-        t = np.zeros(self.num_workers, dtype=np.int64)
-        for s in self.shards:
-            t[s.worker] += s.length
-        return t
-
-    def workload_per_worker(self) -> np.ndarray:
-        w = np.zeros(self.num_workers, dtype=np.float64)
-        for s in self.shards:
-            w[s.worker] += s.workload()
-        return w
-
-    def imbalance_ratio(self) -> float:
-        """max_workload / avg_workload across CP workers (paper §4.3)."""
-        w = self.workload_per_worker()
-        avg = float(np.mean(w))
-        if avg == 0.0:
-            return 1.0
-        return float(np.max(w)) / avg
-
-    # ------------------------------------------------------------------ #
-    # communication (token counts; multiply by 4*H*D*(N-1) for bytes —
-    # see repro.core.workload)
-    # ------------------------------------------------------------------ #
-    def nonlast_tokens_per_worker(self) -> np.ndarray:
-        """Σ_{i∈Ŝ} x_ij s_i for each worker j — the Eq. 5 inner term."""
-        t = np.zeros(self.num_workers, dtype=np.int64)
-        for s in self.shards:
-            if not s.is_last(int(self.doc_lens[s.doc_id])):
-                t[s.worker] += s.length
-        return t
-
-    def comm_tokens(self) -> int:
-        """Tokens each rank contributes to the KV exchange on the critical
-        path.  For the sharding-aware scheme this is Eq. 5's max-term; for
-        static schemes it is the full local KV, C / N (Eq. 4)."""
-        if self.comm_style == "flashcp":
-            return int(np.max(self.nonlast_tokens_per_worker()))
-        return self.context_len // self.num_workers
-
-    # ------------------------------------------------------------------ #
-    def sorted_shards(self) -> list[Shard]:
-        return sorted(self.shards, key=lambda s: (s.worker, s.doc_id, s.start))
-
-    def describe(self) -> str:
-        t = self.tokens_per_worker()
-        w = self.workload_per_worker()
-        lines = [
-            f"ShardingPlan(N={self.num_workers}, C={self.context_len}, "
-            f"docs={self.num_docs}, shards={len(self.shards)}, "
-            f"comm={self.comm_style})",
-            f"  tokens/worker   : {t.tolist()}",
-            f"  workload/worker : {[int(x) for x in w]}",
-            f"  imbalance ratio : {self.imbalance_ratio():.4f}",
-            f"  comm tokens     : {self.comm_tokens()} "
-            f"(static would be {self.context_len // self.num_workers})",
-        ]
-        return "\n".join(lines)
-
-
-# ---------------------------------------------------------------------- #
-# constructors & checks
-# ---------------------------------------------------------------------- #
-def make_whole_doc_plan(
-    doc_lens: Sequence[int], assignment: Sequence[int], num_workers: int
-) -> ShardingPlan:
-    """Plan in which every document is kept whole on ``assignment[i]``."""
-    doc_lens = np.asarray(doc_lens, dtype=np.int64)
-    shards = [
-        Shard(doc_id=i, start=0, length=int(doc_lens[i]), worker=int(assignment[i]))
-        for i in range(len(doc_lens))
-    ]
-    return ShardingPlan(doc_lens=doc_lens, shards=shards, num_workers=num_workers)
-
-
-def validate_plan(plan: ShardingPlan, *, require_equal_tokens: bool = True,
-                  token_tolerance: int = 0) -> None:
-    """Raise ``AssertionError`` unless the plan is well formed.
-
-    Invariants (tested property-style in tests/test_planner.py):
-      * shards of each document tile [0, d_i) exactly, without overlap;
-      * every shard has positive length and a valid worker id;
-      * (optionally) Eq. 2 — every worker holds C/N tokens, within
-        ``token_tolerance`` (zigzag chunk remainders can leave a few
-        tokens of slack, absorbed by execution-side padding).
-    """
-    by_doc: dict[int, list[Shard]] = {}
-    for s in plan.shards:
-        assert s.length > 0, f"empty shard {s}"
-        assert 0 <= s.worker < plan.num_workers, f"bad worker in {s}"
-        assert 0 <= s.doc_id < plan.num_docs, f"bad doc_id in {s}"
-        by_doc.setdefault(s.doc_id, []).append(s)
-
-    assert set(by_doc) == set(range(plan.num_docs)), "missing documents"
-    for doc_id, shards in by_doc.items():
-        shards = sorted(shards, key=lambda s: s.start)
-        pos = 0
-        for s in shards:
-            assert s.start == pos, (
-                f"doc {doc_id}: gap/overlap at {pos} (shard starts {s.start})"
-            )
-            pos = s.end
-        assert pos == int(plan.doc_lens[doc_id]), (
-            f"doc {doc_id}: covered {pos} of {int(plan.doc_lens[doc_id])} tokens"
-        )
-
-    if require_equal_tokens:
-        t = plan.tokens_per_worker()
-        c = plan.context_len
-        n = plan.num_workers
-        assert c % n == 0, f"context {c} not divisible by N={n}"
-        assert int(t.max() - c // n) <= token_tolerance \
-            and int(c // n - t.min()) <= token_tolerance, \
-            f"equal-token constraint violated: {t.tolist()}"
-
-
-def merge_adjacent_shards(shards: Iterable[Shard]) -> list[Shard]:
-    """Merge shards of the same doc that are adjacent *and* co-located.
-
-    The repair loop can produce e.g. [0,a)@w and [a,b)@w; merging keeps the
-    kernel's shard count (and the comm accounting) minimal.
-    """
-    out: list[Shard] = []
-    for s in sorted(shards, key=lambda s: (s.doc_id, s.start)):
-        if out and out[-1].doc_id == s.doc_id and out[-1].end == s.start \
-                and out[-1].worker == s.worker:
-            prev = out.pop()
-            s = Shard(s.doc_id, prev.start, prev.length + s.length, s.worker)
-        out.append(s)
-    return out

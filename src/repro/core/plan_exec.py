@@ -1,167 +1,9 @@
-"""Plan execution encoding: ShardingPlan -> static-shaped device arrays.
+"""Legacy import path — the plan encoder lives in
+:mod:`repro.planner.encode` (vectorized)."""
 
-XLA programs need static shapes, but FlashCP's plan is data-dependent.  The
-split of labor (DESIGN.md §4):
-
-* the planner output is encoded **per packed sequence** as a token
-  permutation plus fixed-size metadata arrays;
-* dynamic quantities (the Eq. 5 send-buffer size, the Pallas visit-table
-  width) are **bucketed** to powers of two, so at most ``log2`` distinct
-  executables exist and the compile cache absorbs them.
-
-Plan-order layout: worker j's tokens occupy the contiguous slice
-``[j*T_loc, (j+1)*T_loc)`` of every (B, C_pad) array.  Under pjit with the
-sequence axis sharded over the ``model`` mesh axis, that slice *is* worker
-j's local shard — host permutation implements FlashCP's token distribution
-with zero device-side data movement.
-
-Send-buffer semantics (sharding-aware communication, §3.2): worker j
-contributes the KV of its *non-last* document shards, compacted (no
-per-document padding — the paper's "single continuous communication
-buffer"), padded to the bucket ``buf_len``; the device all-gathers these
-buffers so every worker can serve queries whose prefix lives remotely.
-"""
-
-from __future__ import annotations
-
-import dataclasses
-
-import numpy as np
-
-from .plan import Shard, ShardingPlan
+from repro.planner.encode import (PlanEncoding, encode_plan,  # noqa: F401
+                                  encode_plan_batch, pick_buffer_bucket,
+                                  plan_shape_hints, trivial_plan)
 
 __all__ = ["PlanEncoding", "encode_plan", "encode_plan_batch",
            "pick_buffer_bucket", "trivial_plan"]
-
-
-def _next_pow2(x: int, floor: int = 128) -> int:
-    v = floor
-    while v < x:
-        v *= 2
-    return v
-
-
-def pick_buffer_bucket(comm_tokens: int, t_loc: int, floor: int = 128) -> int:
-    """Static Eq.5 buffer size: pow2 bucket, at most the full local KV."""
-    return min(_next_pow2(max(comm_tokens, 1), floor), _next_pow2(t_loc, floor))
-
-
-@dataclasses.dataclass
-class PlanEncoding:
-    """Device-facing encoding of one packed sequence's sharding plan."""
-
-    perm: np.ndarray        # (C_pad,) plan-order -> packed position (-1 pad)
-    doc: np.ndarray         # (C_pad,) int32 doc id per plan-order token
-    pos: np.ndarray         # (C_pad,) int32 intra-doc position
-    send_idx: np.ndarray    # (N, buf_len) int32 local indices, -1 pad
-    gath_doc: np.ndarray    # (N * buf_len,) int32, -1 pad
-    gath_pos: np.ndarray    # (N * buf_len,) int32
-    t_loc: int              # tokens per worker (C_pad // N)
-    buf_len: int            # Eq. 5 bucket
-    comm_tokens: int        # actual max_j non-last tokens (pre-bucket)
-    imbalance: float
-
-
-def trivial_plan(context_len: int) -> ShardingPlan:
-    """Single-worker plan (smoke tests / local mode)."""
-    return ShardingPlan(
-        doc_lens=np.asarray([context_len], dtype=np.int64),
-        shards=[Shard(0, 0, context_len, 0)],
-        num_workers=1, comm_style="flashcp")
-
-
-def encode_plan(
-    plan: ShardingPlan,
-    *,
-    buf_len: int | None = None,
-    t_loc: int | None = None,
-    align: int = 1,
-) -> PlanEncoding:
-    N = plan.num_workers
-    doc_starts = np.concatenate([[0], np.cumsum(plan.doc_lens)])[:-1]
-
-    per_worker: list[list[Shard]] = [[] for _ in range(N)]
-    for s in plan.shards:
-        per_worker[s.worker].append(s)
-    for j in range(N):
-        per_worker[j].sort(key=lambda s: (s.doc_id, s.start))
-
-    tokens_per_worker = [sum(s.length for s in ws) for ws in per_worker]
-    need_t = max(tokens_per_worker)
-    if t_loc is None:
-        t_loc = need_t
-        if align > 1:
-            t_loc = ((t_loc + align - 1) // align) * align
-    assert t_loc >= need_t, (t_loc, need_t)
-
-    C_pad = N * t_loc
-    perm = np.full(C_pad, -1, np.int64)
-    doc = np.full(C_pad, -1, np.int32)
-    pos = np.zeros(C_pad, np.int32)
-
-    send_lists: list[np.ndarray] = []
-    for j, ws in enumerate(per_worker):
-        cursor = j * t_loc
-        send_local: list[np.ndarray] = []
-        for s in ws:
-            rng = np.arange(s.start, s.end)
-            perm[cursor: cursor + s.length] = doc_starts[s.doc_id] + rng
-            doc[cursor: cursor + s.length] = s.doc_id
-            pos[cursor: cursor + s.length] = rng
-            if not s.is_last(int(plan.doc_lens[s.doc_id])):
-                base = cursor - j * t_loc
-                send_local.append(np.arange(base, base + s.length))
-            cursor += s.length
-        send_lists.append(
-            np.concatenate(send_local) if send_local
-            else np.zeros(0, np.int64))
-
-    max_send = max((len(s) for s in send_lists), default=0)
-    if buf_len is None:
-        buf_len = pick_buffer_bucket(max_send, t_loc)
-    assert buf_len >= max_send, (
-        f"Eq.5 bucket {buf_len} < required send volume {max_send}")
-
-    send_idx = np.full((N, buf_len), -1, np.int32)
-    gath_doc = np.full(N * buf_len, -1, np.int32)
-    gath_pos = np.zeros(N * buf_len, np.int32)
-    for j, sl in enumerate(send_lists):
-        send_idx[j, : len(sl)] = sl
-        gath_doc[j * buf_len: j * buf_len + len(sl)] = doc[j * t_loc + sl]
-        gath_pos[j * buf_len: j * buf_len + len(sl)] = pos[j * t_loc + sl]
-
-    return PlanEncoding(
-        perm=perm, doc=doc, pos=pos, send_idx=send_idx,
-        gath_doc=gath_doc, gath_pos=gath_pos, t_loc=t_loc, buf_len=buf_len,
-        comm_tokens=max_send, imbalance=plan.imbalance_ratio())
-
-
-def encode_plan_batch(
-    plans: list[ShardingPlan],
-    *,
-    buf_len: int | None = None,
-    align: int = 1,
-) -> tuple[dict[str, np.ndarray], list[PlanEncoding]]:
-    """Encode a batch of per-sample plans with a common bucket.
-
-    Returns (stacked arrays dict, per-sample encodings).  All samples share
-    ``t_loc`` (max over batch, aligned) and ``buf_len`` (bucketed max).
-    """
-    N = plans[0].num_workers
-    assert all(p.num_workers == N for p in plans)
-
-    pre = [encode_plan(p, buf_len=None, align=align) for p in plans]
-    t_loc = max(e.t_loc for e in pre)
-    if buf_len is None:
-        buf_len = max(e.buf_len for e in pre)
-    encs = [encode_plan(p, buf_len=buf_len, t_loc=t_loc) for p in plans]
-
-    stack = {
-        "perm": np.stack([e.perm for e in encs]),
-        "doc": np.stack([e.doc for e in encs]).astype(np.int32),
-        "pos": np.stack([e.pos for e in encs]).astype(np.int32),
-        "send_idx": np.stack([e.send_idx for e in encs]).astype(np.int32),
-        "gath_doc": np.stack([e.gath_doc for e in encs]).astype(np.int32),
-        "gath_pos": np.stack([e.gath_pos for e in encs]).astype(np.int32),
-    }
-    return stack, encs

@@ -2,8 +2,11 @@
 
 Per batch, per packed sequence:
   1. draw document lengths from the dataset distribution (seeded);
-  2. run the configured CP planner (FlashCP / baseline);
-  3. encode the plan (permutation + comm metadata, §plan_exec);
+  2. resolve the configured CP planner through the
+     :mod:`repro.planner` registry and plan (PlanCache-accelerated —
+     replayed steps after a restart and recurring mixes hit the cache);
+  3. encode the plan (permutation + comm metadata, vectorized single-pass
+     batch encoding, :mod:`repro.planner.encode`);
   4. synthesize tokens and next-token labels (label masking at document
      finals and padding), all in *plan order*.
 
@@ -11,21 +14,26 @@ Determinism & elasticity: the stream for (seed, dp_rank, step) is a pure
 function — after a failure the restarted pipeline replays exactly by
 seeking ``start_step`` (used by the fault-tolerant training driver), and a
 re-sharded (elastic) job re-splits ranks without touching earlier history.
+The cache preserves this: exact-signature hits return plans identical to
+a cold run (the first miss stores the planner's own output).
 
-A background thread prefetches ``prefetch`` batches ahead of the consumer.
+A background thread prefetches ``prefetch`` batches ahead of the consumer;
+multi-sequence batches plan/encode through the planner worker pool.
 """
 
 from __future__ import annotations
 
 import dataclasses
+import functools
 import queue
 import threading
 from typing import Any, Iterator
 
 import numpy as np
 
-from repro.core.baselines import BASELINE_PLANNERS
-from repro.core.plan_exec import PlanEncoding, encode_plan_batch
+from repro.planner import (PlanCache, encode_plan_batch, get_planner,
+                           plan_many)
+from repro.planner.encode import PlanEncoding  # noqa: F401  (re-export)
 from .distributions import make_rng
 from .packing import pack_sequence
 
@@ -44,26 +52,42 @@ class PipelineConfig:
     buf_len: int | None = None   # fixed Eq.5 bucket (None -> per-batch)
     align: int = 128             # T_loc alignment (Pallas block size)
     target_imbalance: float = 1.05
+    # planner-subsystem knobs
+    cache_plans: bool = True
+    cache_granularity: int = 1   # 1 = exact signatures (plan-identical)
+    cache_entries: int = 256
+    planner_workers: int = 0     # 0 = auto (serial on small hosts)
+
+
+@functools.lru_cache(maxsize=32)
+def _planner_state(cfg: PipelineConfig):
+    """(planner, kwargs, cache) resolved once per config."""
+    planner = get_planner(cfg.strategy)
+    kwargs = {}
+    if planner.info.supports_target_ratio:
+        kwargs["target_ratio"] = cfg.target_imbalance
+    cache = PlanCache(planner, cfg.cp_size,
+                      granularity=cfg.cache_granularity,
+                      max_entries=cfg.cache_entries,
+                      planner_kwargs=kwargs) if cfg.cache_plans else None
+    return planner, kwargs, cache
 
 
 def _plan(cfg: PipelineConfig, doc_lens):
-    if cfg.strategy == "flashcp":
-        from repro.core.heuristic import flashcp_plan
-        plan, _ = flashcp_plan(doc_lens, cfg.cp_size,
-                               target_ratio=cfg.target_imbalance)
-        return plan
-    return BASELINE_PLANNERS[cfg.strategy](doc_lens, cfg.cp_size)
+    planner, kwargs, cache = _planner_state(cfg)
+    if cache is not None:
+        return cache.plan(doc_lens)
+    return planner(doc_lens, cfg.cp_size, **kwargs)
 
 
 def make_batch(cfg: PipelineConfig, step: int, dp_rank: int = 0,
                dp_size: int = 1) -> dict[str, Any]:
     """Build one host-local batch for (step, dp_rank)."""
     rng = make_rng(hash((cfg.seed, dp_rank, step)) % (2 ** 63))
-    plans, doc_lens_list = [], []
-    for _ in range(cfg.batch_per_host):
-        lens = pack_sequence(cfg.dataset, cfg.context_len, rng)
-        doc_lens_list.append(lens)
-        plans.append(_plan(cfg, lens))
+    doc_lens_list = [pack_sequence(cfg.dataset, cfg.context_len, rng)
+                     for _ in range(cfg.batch_per_host)]
+    plans = plan_many(lambda lens: _plan(cfg, lens), doc_lens_list,
+                      workers=cfg.planner_workers)
 
     stack, encs = encode_plan_batch(plans, buf_len=cfg.buf_len,
                                     align=cfg.align)
@@ -87,8 +111,6 @@ def make_batch(cfg: PipelineConfig, step: int, dp_rank: int = 0,
         valid = perm >= 0
         tokens[b, valid] = packed[perm[valid]]
         # next-token labels: valid unless last token of its document
-        doc = stack["doc"][b]
-        pos = stack["pos"][b]
         nxt = perm + 1
         is_final = np.zeros_like(valid)
         ends = np.cumsum(lens) - 1
@@ -97,6 +119,7 @@ def make_batch(cfg: PipelineConfig, step: int, dp_rank: int = 0,
         labels[b, lab_ok] = packed[np.minimum(nxt[lab_ok],
                                               len(packed) - 1)]
 
+    _, _, cache = _planner_state(cfg)
     batch = {k: v for k, v in stack.items()}
     batch["tokens"] = tokens
     batch["labels"] = labels
@@ -106,6 +129,8 @@ def make_batch(cfg: PipelineConfig, step: int, dp_rank: int = 0,
         "t_loc": encs[0].t_loc,
         "imbalance": float(np.mean([e.imbalance for e in encs])),
         "num_docs": float(np.mean([len(l) for l in doc_lens_list])),
+        "plan_cache_hit_rate":
+            cache.stats.hit_rate if cache is not None else 0.0,
     }
     return batch
 

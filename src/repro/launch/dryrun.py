@@ -29,6 +29,7 @@ import traceback
 
 import jax
 
+from repro.compat import set_mesh
 from repro.configs import ARCHS, SHAPES, RunConfig, get_config
 from repro.launch.hlo_analysis import analyze_hlo
 from repro.launch.mesh import make_production_mesh
@@ -93,7 +94,7 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool,
     else:
         bundle = build_decode_step(cfg, mesh, run, shape)
 
-    with jax.set_mesh(mesh):
+    with set_mesh(mesh):
         lowered = bundle.lower()
         compiled = lowered.compile()
 

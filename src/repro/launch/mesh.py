@@ -6,12 +6,13 @@ Multi-pod:  2 x 16 x 16 = 512 chips, axes ("pod", "data", "model").
 ``model`` is the context-parallel (CP) axis — FlashCP distributes sequence
 tokens over it; parameters are additionally fully sharded over every axis
 (FSDP, runtime/sharding.py).  A *function*, not a module constant: importing
-this module must never touch JAX device state.
+this module must never touch JAX device state.  Construction goes through
+:mod:`repro.compat` so it works across JAX versions.
 """
 
 from __future__ import annotations
 
-import jax
+from repro.compat import make_mesh
 
 __all__ = ["make_production_mesh", "make_local_mesh"]
 
@@ -19,11 +20,9 @@ __all__ = ["make_production_mesh", "make_local_mesh"]
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return make_mesh(shape, axes)
 
 
 def make_local_mesh(data: int = 1, model: int = 1):
     """Small mesh for tests/examples on host devices."""
-    return jax.make_mesh((data, model), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return make_mesh((data, model), ("data", "model"))

@@ -20,6 +20,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.compat import set_mesh
 from repro.configs import get_config, reduce_for_smoke
 from repro.launch.mesh import make_local_mesh, make_production_mesh
 from repro.models import decode_step, init_cache, init_params
@@ -43,7 +44,7 @@ def serve(args) -> dict:
     S = Tp + args.gen
     rng = np.random.default_rng(0)
 
-    with jax.set_mesh(mesh):
+    with set_mesh(mesh):
         params = init_params(jax.random.PRNGKey(0), cfg)
 
         # ---- prefill: one packed doc per request ---------------------- #

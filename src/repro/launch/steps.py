@@ -18,7 +18,7 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs.base import ModelConfig, RunConfig, ShapeConfig
 from repro.core.cp_attention import make_cp_context
-from repro.core.plan_exec import pick_buffer_bucket
+from repro.planner import get_planner, pick_buffer_bucket
 from repro.models import decode_step as model_decode_step
 from repro.models import forward, init_cache, init_params, loss_fn
 from repro.optim import (adamw_init, adamw_update, clip_by_global_norm,
@@ -33,16 +33,27 @@ __all__ = ["effective_strategy", "train_input_specs", "decode_input_specs",
 
 def effective_strategy(cfg: ModelConfig, requested: str) -> str:
     """Recurrent-state architectures need token order preserved across CP
-    ranks: force contiguous sharding (sharding-aware comm still applies).
+    ranks; planners declare that capability in their registry metadata
+    (``PlannerInfo.preserves_token_order``) — anything else is swapped for
+    contiguous sharding (sharding-aware comm still applies).
     See DESIGN.md §Arch-applicability."""
     if cfg.family in ("hybrid", "ssm"):
+        # unknown names raise here (listing registered planners) instead
+        # of being silently replaced by contiguous.
+        if get_planner(requested).info.preserves_token_order:
+            return requested
         return "contiguous"
     return requested
 
 
 def exec_strategy_of(plan_strategy: str) -> str:
-    return {"llama3": "allgather", "per_doc": "allgather",
-            "ring_zigzag": "ring"}.get(plan_strategy, plan_strategy)
+    """Execution-strategy name for the device-side CP context, resolved
+    from the planner registry (unknown names pass through for custom
+    execution styles)."""
+    try:
+        return get_planner(plan_strategy).info.exec_style
+    except KeyError:
+        return plan_strategy
 
 
 def default_buf_len(seq_len: int, cp: int) -> int:

@@ -26,11 +26,13 @@ import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.checkpoint import CheckpointManager
+from repro.compat import set_mesh
 from repro.configs import RunConfig, get_config, reduce_for_smoke
 from repro.configs.base import ShapeConfig
 from repro.data.pipeline import PipelineConfig, Prefetcher, make_batch
 from repro.launch.mesh import make_local_mesh, make_production_mesh
 from repro.launch.steps import build_train_step, effective_strategy
+from repro.planner import get_planner
 from repro.models import init_params
 from repro.optim import adamw_init
 from repro.runtime import (FailurePolicy, StragglerMonitor, TrainingFailure,
@@ -64,6 +66,9 @@ def train(args) -> dict:
                     grad_compression=args.grad_compression,
                     checkpoint_dir=args.checkpoint_dir, remat=not args.no_remat)
     shape = ShapeConfig("custom", args.seq_len, args.batch, "train")
+    # resolve through the planner registry: unknown --strategy fails fast
+    # with the list of registered planners.
+    get_planner(run.cp_strategy)
     strategy = effective_strategy(cfg, run.cp_strategy)
 
     pipe_cfg = PipelineConfig(
@@ -75,7 +80,7 @@ def train(args) -> dict:
     bundle = build_train_step(cfg, mesh, run, shape, q_chunk=args.q_chunk)
     p_shard, o_shard, b_shard, _ = bundle.in_shardings
 
-    with jax.set_mesh(mesh):
+    with set_mesh(mesh):
         params = init_params(jax.random.PRNGKey(run.seed), cfg)
         params = jax.device_put(params, p_shard)
         opt = jax.device_put(adamw_init(params), o_shard)

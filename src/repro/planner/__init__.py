@@ -1,0 +1,52 @@
+"""FlashCP planning stack: vectorized plan core, planner registry, cache.
+
+Layering (everything host-side numpy):
+
+* :mod:`repro.planner.plan`      — ``ShardArrays`` structure-of-arrays
+  shard storage + ``ShardingPlan`` and vectorized validation/accounting;
+* :mod:`repro.planner.registry`  — the ``Planner`` protocol,
+  ``@register_planner`` and :func:`get_planner`, with per-planner
+  capability metadata (:class:`PlannerInfo`);
+* :mod:`repro.planner.heuristic` — Algorithm 1 (FlashCP), vectorized;
+* :mod:`repro.planner.baselines` — Llama3 / Per-Doc / Ring / contiguous;
+* :mod:`repro.planner.ilp`       — exact branch-and-bound reference;
+* :mod:`repro.planner.encode`    — plan -> static-shaped device arrays;
+* :mod:`repro.planner.cache`     — ``PlanCache`` keyed by (quantized)
+  doc-length signature;
+* :mod:`repro.planner.parallel`  — multi-sequence planning worker pool;
+* :mod:`repro.planner.reference` — frozen seed implementations (golden
+  parity + benchmark baseline; never used on the hot path).
+
+The legacy ``repro.core.plan`` / ``heuristic`` / ``baselines`` / ``ilp`` /
+``plan_exec`` modules re-export from here.
+"""
+
+from .plan import (Shard, ShardArrays, ShardingPlan, make_whole_doc_plan,
+                   merge_adjacent_shards, shard_workload_array,
+                   validate_plan)
+from .registry import (Planner, PlannerInfo, RegisteredPlanner,
+                       available_planners, get_planner, planner_info,
+                       register_planner)
+from .heuristic import HeuristicStats, flashcp_plan, zigzag_doc_shards
+from .baselines import (BASELINE_PLANNERS, contiguous_plan, llama3_plan,
+                        per_doc_plan, ring_zigzag_plan)
+from .ilp import BnBResult, bnb_plan
+from .encode import (PlanEncoding, encode_plan, encode_plan_batch,
+                     pick_buffer_bucket, plan_shape_hints, trivial_plan)
+from .cache import CacheStats, PlanCache
+from .parallel import PlannerPool, get_pool, plan_many
+
+__all__ = [
+    "Shard", "ShardArrays", "ShardingPlan", "make_whole_doc_plan",
+    "merge_adjacent_shards", "shard_workload_array", "validate_plan",
+    "Planner", "PlannerInfo", "RegisteredPlanner", "available_planners",
+    "get_planner", "planner_info", "register_planner",
+    "HeuristicStats", "flashcp_plan", "zigzag_doc_shards",
+    "BASELINE_PLANNERS", "contiguous_plan", "llama3_plan", "per_doc_plan",
+    "ring_zigzag_plan",
+    "BnBResult", "bnb_plan",
+    "PlanEncoding", "encode_plan", "encode_plan_batch",
+    "pick_buffer_bucket", "plan_shape_hints", "trivial_plan",
+    "CacheStats", "PlanCache",
+    "PlannerPool", "get_pool", "plan_many",
+]

@@ -20,6 +20,7 @@ import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.core.baselines import BASELINE_PLANNERS
+from repro.compat import make_mesh, set_mesh
 from repro.core.cp_attention import make_cp_context
 from repro.core.plan_exec import encode_plan_batch
 from repro.core.plan import validate_plan
@@ -56,8 +57,7 @@ def permute(x, perm, axis):
 
 def main():
     rng = np.random.default_rng(0)
-    mesh = jax.make_mesh((DATA, N_CP), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = make_mesh((DATA, N_CP), ("data", "model"))
 
     doc_lens = np.array([100, 37, 200, 80, 95], dtype=np.int64)
     gdoc, gpos = doc_ids_and_positions(doc_lens)
@@ -132,7 +132,7 @@ def main():
 
         kv_dtype = "int8" if impl == "xla-int8" else "native"
         real_impl = "xla" if impl == "xla-int8" else impl
-        with jax.set_mesh(mesh):
+        with set_mesh(mesh):
             ctx = make_cp_context(
                 mesh, arrays, strategy=exec_strategy, impl=real_impl,
                 batch_axes=("data",), head_dim=D, q_chunk=64,
@@ -174,7 +174,7 @@ def main():
     a = a.at[:, 0].set(0.0).at[:, 97].set(0.0)   # doc resets
     x = jnp.asarray(rng.standard_normal((B, T, 8)).astype(np.float32))
     ref = np.asarray(local_ssm_scan(a, x))
-    with jax.set_mesh(mesh):
+    with set_mesh(mesh):
         ctx = make_cp_context(mesh, {"doc": jnp.zeros((B, T), jnp.int32),
                                      "pos": jnp.zeros((B, T), jnp.int32)},
                               strategy="ring", impl="xla",
@@ -189,7 +189,7 @@ def main():
         return jnp.sum(ctx.ssm_scan(a, x) ** 2)
     def rloss(a, x):
         return jnp.sum(local_ssm_scan(a, x) ** 2)
-    with jax.set_mesh(mesh):
+    with set_mesh(mesh):
         g = jax.jit(jax.grad(sloss, (0, 1)))(a, x)
     gr = jax.grad(rloss, (0, 1))(a, x)
     for gi, gri, nm in zip(g, gr, "ax"):

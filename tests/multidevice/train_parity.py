@@ -26,6 +26,7 @@ from repro.configs.base import ShapeConfig
 from repro.core.heuristic import flashcp_plan
 from repro.core.baselines import contiguous_plan
 from repro.core.plan_exec import encode_plan_batch
+from repro.compat import make_mesh, set_mesh
 from repro.core.cp_attention import make_cp_context
 from repro.data.packing import doc_ids_and_positions
 from repro.models import init_params, loss_fn, make_local_context
@@ -97,10 +98,9 @@ def run_case(arch: str):
     for k, v in extra.items():
         batch2[k] = jnp.asarray(permute2(v))
 
-    mesh = jax.make_mesh((DATA, N_CP), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = make_mesh((DATA, N_CP), ("data", "model"))
     strategy = "contiguous" if cfg.family in ("hybrid", "ssm") else "flashcp"
-    with jax.set_mesh(mesh):
+    with set_mesh(mesh):
         ctx2 = make_cp_context(
             mesh, {k: batch2[k] for k in ("doc", "pos", "send_idx",
                                           "gath_doc", "gath_pos")},

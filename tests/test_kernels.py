@@ -6,6 +6,7 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 import pytest
+pytest.importorskip("hypothesis", reason="property tests need the hypothesis dev dependency")
 from hypothesis import given, settings, strategies as st
 
 from repro.kernels.doc_attention import (KIND_SKIP, build_block_tables)

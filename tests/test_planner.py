@@ -7,6 +7,7 @@ communication never exceeds the static full exchange.
 
 import numpy as np
 import pytest
+pytest.importorskip("hypothesis", reason="property tests need the hypothesis dev dependency")
 from hypothesis import given, settings, strategies as st
 
 from repro.core.baselines import (contiguous_plan, llama3_plan, per_doc_plan,

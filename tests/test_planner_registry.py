@@ -1,0 +1,237 @@
+"""Planner-subsystem tests: golden parity vs the frozen seed
+implementations, the registry API, the plan cache, and the worker pool.
+
+These tests are deliberately hypothesis-free so they always collect; the
+property suites in test_planner.py / test_plan_exec.py cover the same
+structures generatively when hypothesis is installed.
+"""
+
+import numpy as np
+import pytest
+
+from repro.planner import (PlanCache, ShardArrays, ShardingPlan,
+                           available_planners, encode_plan,
+                           encode_plan_batch, flashcp_plan, get_planner,
+                           merge_adjacent_shards, plan_many, planner_info,
+                           validate_plan)
+from repro.planner import reference as ref
+from repro.planner.plan import Shard
+from repro.data.distributions import make_rng
+from repro.data.packing import pack_sequence
+
+
+def _key(plan):
+    return sorted((int(s.doc_id), int(s.start), int(s.length), int(s.worker))
+                  for s in plan.shards)
+
+
+def _ref_key(plan):
+    return sorted((s.doc_id, s.start, s.length, s.worker)
+                  for s in plan.shards)
+
+
+# --------------------------------------------------------------------- #
+# golden parity: registry planners == seed implementations
+# --------------------------------------------------------------------- #
+@pytest.mark.parametrize("dataset", ["wlb_llm", "pile", "redpajama"])
+@pytest.mark.parametrize("cp", [2, 4, 8])
+def test_planners_match_seed_implementations(dataset, cp):
+    rng = make_rng(17)
+    for _ in range(3):
+        lens = pack_sequence(dataset, 16384, rng)
+        for name in ("flashcp", "llama3", "per_doc", "ring_zigzag",
+                     "contiguous"):
+            plan = get_planner(name)(lens, cp)
+            seed = ref.REFERENCE_PLANNERS[name](lens, cp)
+            assert _key(plan) == _ref_key(seed), \
+                f"{name} diverged from seed on {dataset}/cp{cp}"
+            assert plan.comm_style == seed.comm_style
+            assert plan.comm_tokens() == seed.comm_tokens()
+            np.testing.assert_array_equal(plan.tokens_per_worker(),
+                                          seed.tokens_per_worker())
+            assert plan.imbalance_ratio() == \
+                pytest.approx(seed.imbalance_ratio())
+
+
+def test_flashcp_parity_across_seeds():
+    for seed in range(6):
+        rng = make_rng(seed)
+        lens = pack_sequence("wlb_llm", 32768, rng)
+        plan, stats = flashcp_plan(lens, 8)
+        golden = ref.ref_flashcp_plan(lens, 8)
+        assert _key(plan) == _ref_key(golden)
+        validate_plan(plan, token_tolerance=8)
+
+
+def test_encoding_matches_seed_encoder():
+    rng = make_rng(3)
+    lens_a = pack_sequence("pile", 16384, rng)
+    lens_b = pack_sequence("pile", 16384, rng)
+    new = [flashcp_plan(lens_a, 8)[0], flashcp_plan(lens_b, 8)[0]]
+    old = [ref.ref_flashcp_plan(lens_a, 8), ref.ref_flashcp_plan(lens_b, 8)]
+
+    e_new = encode_plan(new[0], align=16)
+    e_old = ref.ref_encode_plan(old[0], align=16)
+    for f in ("perm", "doc", "pos", "send_idx", "gath_doc", "gath_pos"):
+        np.testing.assert_array_equal(getattr(e_new, f), getattr(e_old, f),
+                                      err_msg=f)
+    assert (e_new.t_loc, e_new.buf_len, e_new.comm_tokens) == \
+        (e_old.t_loc, e_old.buf_len, e_old.comm_tokens)
+
+    s_new, _ = encode_plan_batch(new, align=16)
+    s_old, _ = ref.ref_encode_plan_batch(old, align=16)
+    for k in s_new:
+        np.testing.assert_array_equal(s_new[k], s_old[k], err_msg=k)
+        assert s_new[k].dtype == s_old[k].dtype
+
+
+# --------------------------------------------------------------------- #
+# registry API
+# --------------------------------------------------------------------- #
+def test_registry_unknown_planner_lists_available():
+    with pytest.raises(KeyError) as ei:
+        get_planner("definitely_not_a_planner")
+    msg = str(ei.value)
+    for name in available_planners():
+        assert name in msg
+
+
+def test_registry_aliases_and_metadata():
+    assert get_planner("ring") is get_planner("ring_zigzag")
+    assert planner_info("flashcp").supports_target_ratio
+    assert planner_info("flashcp").order_invariant
+    assert planner_info("llama3").exec_style == "allgather"
+    assert not planner_info("llama3").order_invariant
+    assert planner_info("contiguous").preserves_token_order
+    assert planner_info("bnb").cost_hint == "exponential"
+    # planners declaring equal-token plans actually emit them
+    lens = np.asarray([700, 100, 1000, 248])
+    for name in available_planners():
+        info = planner_info(name)
+        plan = get_planner(name)(lens, 4)
+        validate_plan(plan, require_equal_tokens=info.needs_equal_tokens,
+                      token_tolerance=4)
+        assert plan.comm_style == info.comm_style
+
+
+def test_effective_strategy_uses_registry_capabilities():
+    from repro.launch.steps import effective_strategy, exec_strategy_of
+    import dataclasses
+
+    class Cfg:
+        family = "hybrid"
+
+    assert effective_strategy(Cfg, "flashcp") == "contiguous"
+    assert effective_strategy(Cfg, "contiguous") == "contiguous"
+    Cfg.family = "dense"
+    assert effective_strategy(Cfg, "flashcp") == "flashcp"
+    assert exec_strategy_of("per_doc") == "allgather"
+    assert exec_strategy_of("ring") == "ring"
+    assert exec_strategy_of("flashcp") == "flashcp"
+
+
+# --------------------------------------------------------------------- #
+# PlanCache
+# --------------------------------------------------------------------- #
+def test_plan_cache_exact_hit_is_plan_identical():
+    cache = PlanCache("flashcp", 8)
+    rng = make_rng(0)
+    lens = pack_sequence("wlb_llm", 8192, rng)
+    cold = cache.plan(lens)
+    assert cache.stats.misses == 1 and cache.stats.hits == 0
+    # cold-path result equals an uncached plan bit-for-bit
+    direct, _ = flashcp_plan(lens, 8)
+    assert _key(cold) == _key(direct)
+    hot = cache.plan(lens)
+    assert cache.stats.hits == 1
+    assert _key(hot) == _key(cold)
+    np.testing.assert_array_equal(hot.doc_lens, cold.doc_lens)
+
+
+def test_plan_cache_order_invariant_permutation_hit():
+    """flashcp is order-invariant: a permuted doc mix hits the cache and
+    the returned plan is relabelled into the query's packing order."""
+    cache = PlanCache("flashcp", 4)
+    lens = np.asarray([512, 1024, 256, 256])
+    cache.plan(lens)
+    perm = np.asarray([1024, 256, 512, 256])
+    plan = cache.plan(perm)
+    assert cache.stats.hits == 1
+    np.testing.assert_array_equal(plan.doc_lens, perm)
+    validate_plan(plan)
+
+
+def test_plan_cache_position_dependent_planner_keys_on_order():
+    cache = PlanCache("llama3", 4)
+    cache.plan(np.asarray([512, 1024, 256, 256]))
+    cache.plan(np.asarray([1024, 256, 512, 256]))
+    # llama3 cuts by packed position: permuted mix must NOT hit
+    assert cache.stats.misses == 2 and cache.stats.hits == 0
+    plan = cache.plan(np.asarray([512, 1024, 256, 256]))
+    assert cache.stats.hits == 1
+    validate_plan(plan)
+
+
+def test_plan_cache_signature_quantization_adapts():
+    cache = PlanCache("flashcp", 4, granularity=64)
+    a = np.asarray([1000, 500, 300, 248])          # sums 2048
+    b = np.asarray([990, 505, 310, 243])           # same quantized buckets
+    ka, _ = cache.signature(a)
+    kb, _ = cache.signature(b)
+    assert ka == kb
+    cache.plan(a)
+    adapted = cache.plan(b)
+    assert cache.stats.quantized_hits == 1
+    np.testing.assert_array_equal(adapted.doc_lens, b)
+    validate_plan(adapted, token_tolerance=4)
+
+
+def test_plan_cache_lru_eviction_and_stats():
+    cache = PlanCache("flashcp", 2, max_entries=2)
+    mixes = [np.asarray([256, 256]), np.asarray([384, 128]),
+             np.asarray([512 - 32, 32])]
+    for m in mixes:
+        cache.plan(m)
+    assert cache.stats.evictions == 1
+    assert len(cache) == 2
+    cache.plan(mixes[0])                           # evicted -> miss again
+    assert cache.stats.misses == 4
+    assert cache.stats.hit_rate == pytest.approx(0.0)
+    cache.plan(mixes[0])
+    assert cache.stats.hits == 1
+
+
+# --------------------------------------------------------------------- #
+# ShardArrays / pool
+# --------------------------------------------------------------------- #
+def test_shard_arrays_accounting_matches_objects():
+    shards = [Shard(0, 0, 100, 1), Shard(0, 100, 300, 0),
+              Shard(1, 0, 112, 1)]
+    plan = ShardingPlan(doc_lens=np.asarray([400, 112]), shards=shards,
+                        num_workers=2)
+    np.testing.assert_array_equal(plan.tokens_per_worker(), [300, 212])
+    w = plan.workload_per_worker()
+    assert w[0] == sum(s.workload() for s in shards if s.worker == 0)
+    np.testing.assert_array_equal(plan.nonlast_tokens_per_worker(),
+                                  [0, 100])
+    assert plan.comm_tokens() == 100
+    assert plan.shards_of_worker(1) == [shards[0], shards[2]]
+
+
+def test_merge_adjacent_shards_vectorized():
+    merged = merge_adjacent_shards([
+        Shard(0, 64, 64, 1), Shard(0, 0, 64, 1), Shard(0, 128, 10, 0),
+        Shard(1, 0, 8, 0),
+    ])
+    assert merged == [Shard(0, 0, 128, 1), Shard(0, 128, 10, 0),
+                      Shard(1, 0, 8, 0)]
+    assert ShardArrays.empty().merged().to_shards() == []
+
+
+def test_plan_many_preserves_order():
+    mixes = [np.asarray([256, 256]), np.asarray([128, 384]),
+             np.asarray([512 - 8, 8])]
+    plans = plan_many(lambda l: flashcp_plan(l, 2)[0], mixes, workers=2)
+    for lens, plan in zip(mixes, plans):
+        np.testing.assert_array_equal(plan.doc_lens, lens)
+        validate_plan(plan)

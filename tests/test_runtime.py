@@ -7,6 +7,7 @@ import jax.numpy as jnp
 import pytest
 from jax.sharding import PartitionSpec as P
 
+from repro.compat import make_abstract_mesh
 from repro.runtime import (FailureAction, FailurePolicy, HeartbeatMonitor,
                            StragglerMonitor, TrainingFailure,
                            run_with_recovery, shrink_mesh_shape)
@@ -79,7 +80,7 @@ def test_straggler_monitor_tightens_target():
 # --------------------------------------------------------------------- #
 def test_param_sharding_rules():
     # AbstractMesh: sharding rules are pure metadata (no devices needed)
-    mesh = jax.sharding.AbstractMesh((2, 2), ("data", "model"))
+    mesh = make_abstract_mesh((2, 2), ("data", "model"))
     params = {
         "embed": {"e": jnp.zeros((100, 64))},
         "layers": {"sub_0": {
@@ -100,7 +101,7 @@ def test_param_sharding_rules():
 
 
 def test_batch_specs_fallback_replicates_indivisible_batch():
-    mesh = jax.sharding.AbstractMesh((2, 2), ("data", "model"))
+    mesh = make_abstract_mesh((2, 2), ("data", "model"))
     specs = batch_specs(mesh, {"tokens": (1, 512), "labels": (4, 512)})
     assert specs["tokens"][0] is None           # batch=1 can't split 2 ways
     assert specs["labels"][0] == "data"

@@ -5,6 +5,9 @@ recurrence for arbitrary shapes, chunk sizes, resets and initial states."""
 import numpy as np
 import jax
 import jax.numpy as jnp
+import pytest
+
+pytest.importorskip("hypothesis", reason="property tests need the hypothesis dev dependency")
 from hypothesis import given, settings, strategies as st
 
 from repro.models.context import local_selective_scan, local_ssm_scan
