@@ -9,6 +9,7 @@ row is a ratio/summary).  Suites:
   fig7   context-window sweep
   table2 exact (B&B) vs heuristic optimality
   extra  planner runtime
+  overlap blocking vs chunked CP execution + visit-table builder
 
 Usage: PYTHONPATH=src python -m benchmarks.run [suite ...]
 """
@@ -22,7 +23,7 @@ import time
 def main() -> None:
     from . import (bench_breakdown, bench_context_window, bench_e2e_cp,
                    bench_ilp_vs_heuristic, bench_kernel_efficiency,
-                   bench_planner_runtime)
+                   bench_overlap, bench_planner_runtime)
 
     suites = {
         "fig3": bench_kernel_efficiency.run,
@@ -31,6 +32,7 @@ def main() -> None:
         "fig7": bench_context_window.run,
         "table2": bench_ilp_vs_heuristic.run,
         "planner": bench_planner_runtime.run,
+        "overlap": bench_overlap.run,
     }
     want = sys.argv[1:] or list(suites)
     print("name,us_per_call,derived")

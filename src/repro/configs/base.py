@@ -150,6 +150,9 @@ class RunConfig:
     dataset: str = "wlb_llm"
     cp_strategy: Literal["flashcp", "llama3", "per_doc", "ring", "contiguous"] = "flashcp"
     attention_impl: Literal["xla", "pallas"] = "xla"
+    # chunked = overlapped KV exchange (ppermute hops merged via online
+    # LSE); none = the monolithic blocking-collective islands
+    cp_overlap: Literal["chunked", "none"] = "chunked"
     target_imbalance: float = 1.05
     # optimizer
     lr: float = 3e-4

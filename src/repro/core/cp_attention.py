@@ -1,22 +1,39 @@
 """Device-side context parallelism: shard_map islands over the CP axis.
 
-Four communication strategies, all on identical substrate (so the paper's
-comparisons are apples-to-apples):
+Every strategy now runs on one **partial-attention + online-LSE merge
+substrate**: attention against any KV subset yields a merge-ready partial
+``(o, m, l)`` (unnormalized accumulator, row max, row sum — or the
+equivalent normalized ``(o, lse, 1)`` form the Pallas kernel emits), and
+partials merge by the usual flash rescaling in any order.  Communication
+strategies differ only in *which* KV subsets exist and how they move:
 
 * ``flashcp`` / ``contiguous`` — **sharding-aware communication** (§3.2):
-  each rank gathers only the compacted non-last-shard KV buffer (Eq. 5
-  volume).  The backward pass is the JAX transpose of the gather — a
-  reduce-scatter of dKV with the same reduced volume (the paper's 4x
-  factor).
-* ``allgather`` — full-KV exchange (Eq. 4): Llama3 CP and Per-Doc CP.
-* ``ring`` — Ring-Attention (Zigzag): N-1 ``ppermute`` hops of full local
-  KV with blockwise attention + online LSE merge (compute/comm overlap via
-  the XLA latency-hiding scheduler on the ppermute chain).
+  only the compacted non-last-shard KV buffer (Eq. 5 volume) moves.
+  ``overlap="chunked"`` (default) moves it in N-1 ``ppermute`` ring hops:
+  local-KV attention runs concurrently with hop 0, and each arriving
+  buffer attends while the next hop is in flight — the XLA latency-hiding
+  scheduler overlaps the whole exchange with compute.  ``overlap="none"``
+  keeps the original single blocking all-gather island (parity baseline).
+  Backward is the JAX transpose either way — reduce-scatter (monolithic)
+  or the reversed ppermute chain (chunked) of dKV at the same reduced
+  volume (the paper's 4x factor).
+* ``allgather`` — full-KV exchange (Eq. 4): Llama3 CP and Per-Doc CP;
+  the same ``overlap`` switch applies with the full local KV as the
+  hop payload.
+* ``ring`` — Ring-Attention (Zigzag): N-1 hops of full local KV.
+  ``overlap="chunked"`` is the substrate engine (Pallas-capable);
+  ``overlap="none"`` selects the frozen pure-XLA seed loop.
 
-A self-ownership subtlety of the compact buffer: the all-gather includes
-this rank's own contribution, which is *also* present as local KV.  The
-island marks its own gathered segment invisible (doc id -2) so no KV pair
-is double-counted.
+Any strategy runs the Pallas block-sparse kernel per subset when
+``impl="pallas"`` and per-rank visit tables are threaded in (the planner
+emits them — :func:`repro.planner.encode.emit_visit_tables`; the data
+pipeline forwards them as ``tab_*`` plan arrays).
+
+A self-ownership subtlety of the compact buffer: the monolithic all-gather
+includes this rank's own contribution, which is *also* present as local
+KV.  The island marks its own gathered segment invisible (doc id -2) so no
+KV pair is double-counted.  The chunked exchange never attends its own
+buffer (N-1 hops visit exactly the other ranks), so no masking is needed.
 
 The SSM island implements cross-rank recurrence for Mamba/xLSTM: local
 chunked scans + an all-gather of per-rank (decay, state) summaries with an
@@ -37,10 +54,27 @@ from jax.sharding import PartitionSpec as P
 
 from repro.models.context import ExecContext, local_ssm_scan
 
-__all__ = ["make_cp_context", "CP_AXIS"]
+__all__ = ["make_cp_context", "resolve_overlap", "CP_AXIS",
+           "merge_partials", "finalize_partial"]
 
 CP_AXIS = "model"
 NEG = -1e30
+
+
+def resolve_overlap(strategy: str, impl: str, overlap: str) -> str:
+    """Effective overlap mode for (strategy, impl).
+
+    Ring has no monolithic Pallas form — its only kernel-capable engine
+    is the chunked substrate — so ring+pallas upgrades ``"none"`` to
+    ``"chunked"``.  The single source of truth for table emission
+    (data/pipeline.py), AOT input specs (launch/steps.py), and the
+    context dispatch below.
+    """
+    if overlap not in ("none", "chunked"):
+        raise ValueError(f"unknown overlap mode {overlap!r}")
+    if strategy in ("ring", "ring_zigzag") and impl == "pallas":
+        return "chunked"
+    return overlap
 
 
 # ===================================================================== #
@@ -54,46 +88,61 @@ def _take_tokens(x, idx):
     return out * (idx >= 0)[:, None, :, None].astype(x.dtype)
 
 
-def _partial_attention(q, k, v, q_doc, q_pos, kv_doc, kv_pos, scale,
-                       q_chunk: int):
-    """Unnormalized blockwise attention: returns (o, m, l) for LSE merging.
+# ===================================================================== #
+# partial-attention + online-LSE merge substrate
+# ===================================================================== #
+def _merge_step(acc, part):
+    """Online-LSE merge of two partials; associative and (to fp rounding)
+    commutative — hop order never changes the result beyond tolerance."""
+    ao, am, al = acc
+    o, m, l = part
+    m_new = jnp.maximum(am, m)
+    c1 = jnp.exp(am - m_new)
+    c2 = jnp.exp(m - m_new)
+    return (ao * c1[..., None] + o * c2[..., None], m_new, al * c1 + l * c2)
 
-    o (b,Hq,T,D) f32 = sum_s exp(s - m) v;  m rowmax;  l rowsum.
+
+def merge_partials(parts):
+    """Fold a sequence of (o, m, l) partials into one (tests/benchmarks)."""
+    acc = None
+    for p in parts:
+        acc = p if acc is None else _merge_step(acc, p)
+    return acc
+
+
+def finalize_partial(part, dtype):
+    """Normalize a merged partial into the attention output (0 where no
+    KV was visible)."""
+    o, _, l = part
+    out = jnp.where(l[..., None] > 0, o / jnp.maximum(l[..., None], 1e-30),
+                    0.0)
+    return out.astype(dtype)
+
+
+def _partial_masked_attention(q, k, v, q_doc, q_pos, kv_doc, kv_pos, *,
+                              impl, scale, q_chunk, interpret, tables=None,
+                              block_q=128, block_k=128):
+    """Merge-ready partial against one KV subset, on either kernel.
+
+    The Pallas kernel emits the normalized ``(o, lse)`` form, re-expressed
+    as the triple ``(o, m=lse, l=1)``; the two forms are interchangeable
+    under :func:`_merge_step` (``o * exp(lse - M)`` recovers the
+    unnormalized accumulator either way).  ``lse`` is clamped to the
+    finite NEG stand-in so empty rows contribute weight exp(NEG - M) = 0
+    and their cotangent is dropped by the clamp's gradient.
     """
-    b, Hq, T, D = q.shape
-    _, Hkv, S, _ = k.shape
-    G = Hq // Hkv
-    kf = k.astype(jnp.float32)
-    vf = v.astype(jnp.float32)
+    from repro.kernels import ops as kops
 
-    if T % q_chunk != 0:
-        q_chunk = T
-    nq = T // q_chunk
-
-    def one(args):
-        qc, qd, qp = args
-        qc = qc.astype(jnp.float32).reshape(b, Hkv, G, q_chunk, D)
-        s = jnp.einsum("bhgqd,bhkd->bhgqk", qc, kf) * scale
-        vis = (qd[:, :, None] == kv_doc[:, None, :]) \
-            & (qp[:, :, None] >= kv_pos[:, None, :]) \
-            & (qd[:, :, None] >= 0) & (kv_doc[:, None, :] >= 0)
-        s = jnp.where(vis[:, None, None], s, NEG)
-        m = jnp.max(s, axis=-1)                                  # (b,Hkv,G,qc)
-        p = jnp.where(vis[:, None, None], jnp.exp(s - m[..., None]), 0.0)
-        l = jnp.sum(p, axis=-1)
-        o = jnp.einsum("bhgqk,bhkd->bhgqd", p, vf)
-        return (o.reshape(b, Hq, q_chunk, D), m.reshape(b, Hq, q_chunk),
-                l.reshape(b, Hq, q_chunk))
-
-    if nq == 1:
-        return one((q, q_doc, q_pos))
-    qs = q.reshape(b, Hq, nq, q_chunk, D).transpose(2, 0, 1, 3, 4)
-    qds = q_doc.reshape(b, nq, q_chunk).transpose(1, 0, 2)
-    qps = q_pos.reshape(b, nq, q_chunk).transpose(1, 0, 2)
-    os, ms, ls = jax.lax.map(one, (qs, qds, qps))
-    return (os.transpose(1, 2, 0, 3, 4).reshape(b, Hq, T, D),
-            ms.transpose(1, 2, 0, 3).reshape(b, Hq, T),
-            ls.transpose(1, 2, 0, 3).reshape(b, Hq, T))
+    if impl == "pallas":
+        assert tables is not None, "pallas CP attention needs host tables"
+        o, lse = kops.doc_flash_attention(
+            q, k, v, q_doc, q_pos, kv_doc, kv_pos, tables, scale=scale,
+            interpret=interpret, block_q=block_q, block_k=block_k,
+            partial=True)
+        m = jnp.maximum(lse, NEG)
+        return o.astype(jnp.float32), m, jnp.ones_like(m)
+    return kops.doc_attention_xla(q, k, v, q_doc, q_pos, kv_doc, kv_pos,
+                                  scale=scale, q_chunk=q_chunk, partial=True)
 
 
 def _masked_attention(q, k, v, q_doc, q_pos, kv_doc, kv_pos, *, impl,
@@ -145,6 +194,109 @@ def _quantized_gather_bwd(axis_name, _, g):
 _quantized_gather.defvjp(_quantized_gather_fwd, _quantized_gather_bwd)
 
 
+@functools.partial(jax.custom_vjp, nondiff_argnums=(1, 2))
+def _quantized_ppermute(x, axis_name, perm):
+    """int8 ppermute hop with per-(batch, head, token) scales — the
+    chunked-exchange counterpart of :func:`_quantized_gather`.
+
+    Straight-through backward: the hop's transpose is the inverse
+    ppermute of the full-precision cotangent, so gradients stay exact and
+    only the forward KV wire is quantized.  Each hop requantizes the
+    arriving (already dequantized) buffer, so per-hop error accumulates
+    over the ring — bounded by hops x one quantization step.
+    """
+    scale = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1,
+                    keepdims=True) / 127.0
+    scale = jnp.maximum(scale, 1e-8)
+    q8 = jnp.clip(jnp.round(x.astype(jnp.float32) / scale), -127,
+                  127).astype(jnp.int8)
+    g8 = jax.lax.ppermute(q8, axis_name, perm)
+    gs = jax.lax.ppermute(scale.astype(jnp.float32), axis_name, perm)
+    return (g8.astype(jnp.float32) * gs).astype(x.dtype)
+
+
+def _quantized_ppermute_fwd(x, axis_name, perm):
+    return _quantized_ppermute(x, axis_name, perm), None
+
+
+def _quantized_ppermute_bwd(axis_name, perm, _, g):
+    inv = tuple((d, s) for (s, d) in perm)
+    return (jax.lax.ppermute(g, axis_name, inv),)
+
+
+_quantized_ppermute.defvjp(_quantized_ppermute_fwd, _quantized_ppermute_bwd)
+
+
+def _wire_permute(x, perm, kv_comm_dtype):
+    if kv_comm_dtype == "int8":
+        return _quantized_ppermute(x, CP_AXIS, perm)
+    return jax.lax.ppermute(x, CP_AXIS, perm)
+
+
+# ===================================================================== #
+# chunked-exchange engine: attend arriving KV while the next hop flies
+# ===================================================================== #
+def _run_hops(init_part, payload, n_hops, attend, hop_xs=None,
+              kv_comm_dtype="native"):
+    """Ring-rotate ``payload = (kc, vc, dc, pc)`` for ``n_hops`` hops,
+    merging ``attend(kc, vc, dc, pc, xs)`` partials onto ``init_part``.
+
+    Transfer/compute pipelining: the payload is launched to the neighbor
+    *before* any remote attention (that first hop flies while the caller's
+    local-KV partial computes), and each scan iteration forwards the
+    arrived buffer in the same breath as attending it — the forward
+    depends only on the buffer, never on the attention, so the XLA
+    latency-hiding scheduler keeps hop h+1 in flight under hop h's
+    compute.  The final hop is attended outside the scan and not
+    forwarded, so total wire volume is exactly ``n_hops`` buffer hops —
+    the same bytes as the monolithic all-gather, pipelined.  The scan
+    transpose reverses the ppermute chain, routing each hop's dKV back to
+    the owning rank at the same wire volume as the forward exchange.
+    """
+    if n_hops <= 0:
+        return init_part
+    N = axis_size(CP_AXIS)
+    perm = tuple((i, (i + 1) % N) for i in range(N))
+
+    def fwd(kc, vc, dc, pc):
+        return (_wire_permute(kc, perm, kv_comm_dtype),
+                _wire_permute(vc, perm, kv_comm_dtype),
+                jax.lax.ppermute(dc, CP_AXIS, perm),
+                jax.lax.ppermute(pc, CP_AXIS, perm))
+
+    payload = fwd(*payload)       # hop 1 in flight under the local partial
+
+    def step(carry, xs):
+        kc, vc, dc, pc, acc, m, l = carry
+        nxt = fwd(kc, vc, dc, pc)
+        part = attend(kc, vc, dc, pc, xs)
+        acc, m, l = _merge_step((acc, m, l), part)
+        return (*nxt, acc, m, l), None
+
+    xs_scan = xs_last = None
+    if hop_xs is not None:
+        xs_scan = tuple(a[:n_hops - 1] for a in hop_xs)
+        xs_last = tuple(a[n_hops - 1] for a in hop_xs)
+    carry, _ = jax.lax.scan(step, (*payload, *init_part), xs_scan,
+                            length=n_hops - 1)
+    last = attend(*carry[:4], xs_last)
+    return _merge_step(carry[4:], last)
+
+
+def _unpack_rank_tables(tabs):
+    """Strip the sharded-to-1 rank dim of per-rank table arrays."""
+    if tabs is None:
+        return None
+    return tuple(t[:, 0] for t in tabs)
+
+
+def _hop_xs_of(hop_tabs):
+    """(b, H, ...) hop tables -> scan xs with the hop axis leading."""
+    if hop_tabs is None:
+        return None
+    return tuple(jnp.moveaxis(t, 1, 0) for t in hop_tabs)
+
+
 def _flashcp_island(q, k, v, doc, pos, send_idx, gath_doc, gath_pos,
                     *, impl, q_chunk, interpret, tables=None, block_q=128,
                     block_k=128, kv_comm_dtype="native"):
@@ -181,16 +333,87 @@ def _flashcp_island(q, k, v, doc, pos, send_idx, gath_doc, gath_pos,
                              tables=tabs, block_q=block_q, block_k=block_k)
 
 
-def _allgather_island(q, k, v, doc, pos, *, impl, q_chunk, interpret):
-    kg = jax.lax.all_gather(k, CP_AXIS, axis=2, tiled=True)
-    vg = jax.lax.all_gather(v, CP_AXIS, axis=2, tiled=True)
+def _flashcp_island_chunked(q, k, v, doc, pos, send_idx, gath_doc, gath_pos,
+                            *, impl, scale, q_chunk, interpret,
+                            loc_tables=None, hop_tables=None, block_q=128,
+                            block_k=128, kv_comm_dtype="native"):
+    """Overlapped sharding-aware exchange: the compacted Eq.-5 buffer
+    moves in N-1 ppermute hops; each arriving buffer attends while the
+    next hop is in flight, and local-KV attention overlaps hop 0.  After
+    hop h a rank holds the buffer of rank (me - h) mod N, so the N-1 hops
+    visit exactly the other ranks — the monolithic island's self-segment
+    masking is unnecessary by construction."""
+    N = axis_size(CP_AXIS)
+    me = jax.lax.axis_index(CP_AXIS)
+    buf = send_idx.shape[-1]
+
+    sidx = send_idx[:, 0]                       # (b, buf)
+    ksel = _take_tokens(k, sidx)
+    vsel = _take_tokens(v, sidx)
+    # this rank's slice of the (replicated) gathered-buffer metadata
+    my_doc = jax.lax.dynamic_slice_in_dim(gath_doc, me * buf, buf, axis=1)
+    my_pos = jax.lax.dynamic_slice_in_dim(gath_pos, me * buf, buf, axis=1)
+
+    attend = functools.partial(
+        _partial_masked_attention, impl=impl, scale=scale, q_chunk=q_chunk,
+        interpret=interpret, block_q=block_q, block_k=block_k)
+    init = attend(q, k, v, doc, pos, doc, pos,
+                  tables=_unpack_rank_tables(loc_tables))
+
+    def hop_attend(kc, vc, dc, pc, xs):
+        return attend(q, kc, vc, doc, pos, dc, pc, tables=xs)
+
+    part = _run_hops(init, (ksel, vsel, my_doc, my_pos), N - 1, hop_attend,
+                     hop_xs=_hop_xs_of(_unpack_rank_tables(hop_tables)),
+                     kv_comm_dtype=kv_comm_dtype)
+    return finalize_partial(part, q.dtype)
+
+
+def _allgather_island(q, k, v, doc, pos, *, impl, q_chunk, interpret,
+                      tables=None, block_q=128, block_k=128,
+                      kv_comm_dtype="native"):
+    if kv_comm_dtype == "int8":
+        kg = _quantized_gather(k, CP_AXIS)
+        vg = _quantized_gather(v, CP_AXIS)
+    else:
+        kg = jax.lax.all_gather(k, CP_AXIS, axis=2, tiled=True)
+        vg = jax.lax.all_gather(v, CP_AXIS, axis=2, tiled=True)
     gdoc = jax.lax.all_gather(doc, CP_AXIS, axis=1, tiled=True)
     gpos = jax.lax.all_gather(pos, CP_AXIS, axis=1, tiled=True)
     return _masked_attention(q, kg, vg, doc, pos, gdoc, gpos, impl=impl,
-                             q_chunk=q_chunk, interpret=interpret)
+                             q_chunk=q_chunk, interpret=interpret,
+                             tables=_unpack_rank_tables(tables),
+                             block_q=block_q, block_k=block_k)
+
+
+def _gather_island_chunked(q, k, v, doc, pos, *, impl, scale, q_chunk,
+                           interpret, loc_tables=None, hop_tables=None,
+                           block_q=128, block_k=128,
+                           kv_comm_dtype="native"):
+    """Overlapped full-KV exchange (allgather strategies, ring): the full
+    local KV ring-rotates in N-1 hops on the merge substrate — identical
+    results to the monolithic gather, with the wire pipelined behind
+    per-hop attention."""
+    attend = functools.partial(
+        _partial_masked_attention, impl=impl, scale=scale, q_chunk=q_chunk,
+        interpret=interpret, block_q=block_q, block_k=block_k)
+    init = attend(q, k, v, doc, pos, doc, pos,
+                  tables=_unpack_rank_tables(loc_tables))
+
+    def hop_attend(kc, vc, dc, pc, xs):
+        return attend(q, kc, vc, doc, pos, dc, pc, tables=xs)
+
+    part = _run_hops(init, (k, v, doc, pos), axis_size(CP_AXIS) - 1,
+                     hop_attend,
+                     hop_xs=_hop_xs_of(_unpack_rank_tables(hop_tables)),
+                     kv_comm_dtype=kv_comm_dtype)
+    return finalize_partial(part, q.dtype)
 
 
 def _ring_island(q, k, v, doc, pos, *, q_chunk, scale):
+    """Seed Ring-Attention loop (pure XLA), kept as the ``overlap="none"``
+    parity baseline; the chunked engine generalizes it with Pallas-kernel
+    hops and int8 wire support."""
     b, Hq, T, D = q.shape
     N = axis_size(CP_AXIS)
     perm = [(i, (i + 1) % N) for i in range(N)]
@@ -201,24 +424,19 @@ def _ring_island(q, k, v, doc, pos, *, q_chunk, scale):
 
     def step(carry, _):
         kc, vc, dc, pc, acc, m, l = carry
-        o_i, m_i, l_i = _partial_attention(q, kc, vc, doc, pos, dc, pc,
-                                           scale, q_chunk)
-        m_new = jnp.maximum(m, m_i)
-        c1 = jnp.exp(m - m_new)
-        c2 = jnp.exp(m_i - m_new)
-        acc = acc * c1[..., None] + o_i * c2[..., None]
-        l = l * c1 + l_i * c2
+        part = _partial_masked_attention(
+            q, kc, vc, doc, pos, dc, pc, impl="xla", scale=scale,
+            q_chunk=q_chunk, interpret=False)
+        acc, m, l = _merge_step((acc, m, l), part)
         kc = jax.lax.ppermute(kc, CP_AXIS, perm)
         vc = jax.lax.ppermute(vc, CP_AXIS, perm)
         dc = jax.lax.ppermute(dc, CP_AXIS, perm)
         pc = jax.lax.ppermute(pc, CP_AXIS, perm)
-        return (kc, vc, dc, pc, acc, m_new, l), None
+        return (kc, vc, dc, pc, acc, m, l), None
 
     (kc, vc, dc, pc, acc, m, l), _ = jax.lax.scan(
         step, (k, v, doc, pos, acc, m, l), None, length=N)
-    out = jnp.where(l[..., None] > 0, acc / jnp.maximum(l[..., None], 1e-30),
-                    0.0)
-    return out.astype(q.dtype)
+    return finalize_partial((acc, m, l), q.dtype)
 
 
 def _moe_island(x, topi, gates, wi, wg, wo, *, kind, capacity_factor,
@@ -308,6 +526,13 @@ def _ssm_island(a, x):
 # ===================================================================== #
 # context factory
 # ===================================================================== #
+MONO_TABLE_KEYS = ("tab_kv_idx", "tab_kv_nvis", "tab_q_idx", "tab_q_nvis")
+LOC_TABLE_KEYS = ("tab_loc_kv_idx", "tab_loc_kv_nvis",
+                  "tab_loc_q_idx", "tab_loc_q_nvis")
+HOP_TABLE_KEYS = ("tab_hop_kv_idx", "tab_hop_kv_nvis",
+                  "tab_hop_q_idx", "tab_hop_q_nvis")
+
+
 def make_cp_context(
     mesh,
     plan_arrays: dict[str, Any],
@@ -317,6 +542,7 @@ def make_cp_context(
     batch_axes=("data",),
     head_dim: int,
     q_chunk: int = 512,
+    overlap: str = "chunked",
     interpret: bool = False,
     tables: tuple | None = None,
     block_q: int = 128,
@@ -326,8 +552,18 @@ def make_cp_context(
     """Build the ExecContext driving a CP training/prefill step.
 
     ``plan_arrays`` are the (jnp) outputs of
-    :func:`repro.core.plan_exec.encode_plan_batch`, in global (B, ·) view.
+    :func:`repro.planner.encode.encode_plan_batch`, in global (B, ·) view,
+    optionally extended with per-rank Pallas visit tables (``tab_*`` keys,
+    :func:`repro.planner.encode.emit_visit_tables`).
+
+    ``overlap="chunked"`` (default) runs the overlapped chunked-KV
+    exchange engine; ``overlap="none"`` the original monolithic islands.
+    ``impl="pallas"`` requires matching visit tables: monolithic islands
+    take the 4-tuple layout (``tables=`` or ``tab_*`` plan arrays),
+    the chunked engine per-rank local + per-hop tables (``tab_loc_*`` /
+    ``tab_hop_*`` plan arrays).
     """
+    overlap = resolve_overlap(strategy, impl, overlap)
     doc = plan_arrays["doc"]
     pos = plan_arrays["pos"]
     b = tuple(batch_axes) if isinstance(batch_axes, (tuple, list)) \
@@ -338,55 +574,103 @@ def make_cp_context(
     qkv_spec = P(B, None, CP_AXIS, None)
     tok_spec = P(B, CP_AXIS)
 
+    def _plan_tables(keys):
+        if all(k in plan_arrays for k in keys):
+            return tuple(plan_arrays[k] for k in keys)
+        return None
+
+    def _table_specs(arrs):
+        return [P(B, CP_AXIS, *([None] * (a.ndim - 2))) for a in arrs]
+
+    def _chunked_tables(what):
+        if impl != "pallas":
+            return ()
+        loc = _plan_tables(LOC_TABLE_KEYS)
+        hop = _plan_tables(HOP_TABLE_KEYS)
+        if loc is None or hop is None:
+            raise ValueError(
+                f"pallas {what} with overlap='chunked' needs per-rank "
+                "local + per-hop visit tables (tab_loc_*/tab_hop_* plan "
+                "arrays; see repro.planner.encode.emit_visit_tables)")
+        return loc + hop
+
+    def _mono_tables(what):
+        if impl != "pallas":
+            return ()
+        mono = tables if tables is not None else _plan_tables(MONO_TABLE_KEYS)
+        if mono is None:
+            raise ValueError(
+                f"pallas {what} needs visit tables (tables= or tab_* plan "
+                "arrays; see repro.planner.encode.emit_visit_tables)")
+        return tuple(mono)
+
     if strategy in ("flashcp", "contiguous"):
-        island = functools.partial(_flashcp_island, impl=impl,
-                                   q_chunk=q_chunk, interpret=interpret,
-                                   kv_comm_dtype=kv_comm_dtype)
-        in_specs = [qkv_spec, qkv_spec, qkv_spec, tok_spec, tok_spec,
-                    P(B, CP_AXIS, None), P(B, None), P(B, None)]
-        args = (plan_arrays["send_idx"], plan_arrays["gath_doc"],
-                plan_arrays["gath_pos"])
-        if impl == "pallas":
-            assert tables is not None
+        base_args = (plan_arrays["send_idx"], plan_arrays["gath_doc"],
+                     plan_arrays["gath_pos"])
+        base_specs = [qkv_spec, qkv_spec, qkv_spec, tok_spec, tok_spec,
+                      P(B, CP_AXIS, None), P(B, None), P(B, None)]
+        if overlap == "chunked":
+            tabs = _chunked_tables("flashcp")
 
-            def island(q, k, v, d_, p_, si, gd, gp, *tabs):  # noqa: F811
-                return _flashcp_island(q, k, v, d_, p_, si, gd, gp,
-                                       impl=impl, q_chunk=q_chunk,
-                                       interpret=interpret, tables=tabs,
-                                       block_q=block_q, block_k=block_k,
-                                       kv_comm_dtype=kv_comm_dtype)
+            def island(q, k, v, d_, p_, si, gd, gp, *tt):
+                return _flashcp_island_chunked(
+                    q, k, v, d_, p_, si, gd, gp, impl=impl, scale=scale,
+                    q_chunk=q_chunk, interpret=interpret,
+                    loc_tables=tt[:4] or None, hop_tables=tt[4:] or None,
+                    block_q=block_q, block_k=block_k,
+                    kv_comm_dtype=kv_comm_dtype)
+        else:
+            tabs = _mono_tables("flashcp")
 
-            in_specs = in_specs + [P(B, CP_AXIS, None, None),
-                                   P(B, CP_AXIS, None),
-                                   P(B, CP_AXIS, None, None),
-                                   P(B, CP_AXIS, None)]
-            args = args + tuple(tables)
+            def island(q, k, v, d_, p_, si, gd, gp, *tt):
+                return _flashcp_island(
+                    q, k, v, d_, p_, si, gd, gp, impl=impl, q_chunk=q_chunk,
+                    interpret=interpret, tables=tt or None,
+                    block_q=block_q, block_k=block_k,
+                    kv_comm_dtype=kv_comm_dtype)
+
+        in_specs = base_specs + _table_specs(tabs)
+        args = base_args + tabs
 
         def attn(q, k, v):
             f = shard_map(island, mesh=mesh, in_specs=tuple(in_specs),
-                              out_specs=qkv_spec, check_vma=False)
+                          out_specs=qkv_spec, check_vma=False)
             return f(q, k, v, doc, pos, *args)
 
-    elif strategy in ("allgather", "llama3", "per_doc"):
-        island = functools.partial(_allgather_island, impl=impl,
-                                   q_chunk=q_chunk, interpret=interpret)
+    elif strategy in ("allgather", "llama3", "per_doc", "ring",
+                      "ring_zigzag"):
+        is_ring = strategy in ("ring", "ring_zigzag")
+        if overlap == "chunked":
+            tabs = _chunked_tables(strategy)
+
+            def island(q, k, v, d_, p_, *tt):
+                return _gather_island_chunked(
+                    q, k, v, d_, p_, impl=impl, scale=scale,
+                    q_chunk=q_chunk, interpret=interpret,
+                    loc_tables=tt[:4] or None, hop_tables=tt[4:] or None,
+                    block_q=block_q, block_k=block_k,
+                    kv_comm_dtype=kv_comm_dtype)
+        elif is_ring:
+            tabs = ()
+            island = functools.partial(_ring_island, q_chunk=q_chunk,
+                                       scale=scale)
+        else:
+            tabs = _mono_tables(strategy)
+
+            def island(q, k, v, d_, p_, *tt):
+                return _allgather_island(
+                    q, k, v, d_, p_, impl=impl, q_chunk=q_chunk,
+                    interpret=interpret, tables=tt or None,
+                    block_q=block_q, block_k=block_k,
+                    kv_comm_dtype=kv_comm_dtype)
+
+        in_specs = [qkv_spec, qkv_spec, qkv_spec, tok_spec, tok_spec] \
+            + _table_specs(tabs)
 
         def attn(q, k, v):
-            f = shard_map(
-                island, mesh=mesh,
-                in_specs=(qkv_spec, qkv_spec, qkv_spec, tok_spec, tok_spec),
-                out_specs=qkv_spec, check_vma=False)
-            return f(q, k, v, doc, pos)
-
-    elif strategy in ("ring", "ring_zigzag"):
-        island = functools.partial(_ring_island, q_chunk=q_chunk, scale=scale)
-
-        def attn(q, k, v):
-            f = shard_map(
-                island, mesh=mesh,
-                in_specs=(qkv_spec, qkv_spec, qkv_spec, tok_spec, tok_spec),
-                out_specs=qkv_spec, check_vma=False)
-            return f(q, k, v, doc, pos)
+            f = shard_map(island, mesh=mesh, in_specs=tuple(in_specs),
+                          out_specs=qkv_spec, check_vma=False)
+            return f(q, k, v, doc, pos, *tabs)
 
     else:
         raise ValueError(f"unknown CP strategy {strategy!r}")

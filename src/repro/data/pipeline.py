@@ -57,6 +57,11 @@ class PipelineConfig:
     cache_granularity: int = 1   # 1 = exact signatures (plan-identical)
     cache_entries: int = 256
     planner_workers: int = 0     # 0 = auto (serial on small hosts)
+    # Pallas visit-table emission (attention_impl="pallas" steps)
+    emit_tables: bool = False
+    table_overlap: str = "chunked"   # matches RunConfig.cp_overlap
+    table_block_q: int = 128
+    table_block_k: int = 128
 
 
 @functools.lru_cache(maxsize=32)
@@ -121,6 +126,19 @@ def make_batch(cfg: PipelineConfig, step: int, dp_rank: int = 0,
 
     _, _, cache = _planner_state(cfg)
     batch = {k: v for k, v in stack.items()}
+    if cfg.emit_tables:
+        from repro.core.cp_attention import resolve_overlap
+        from repro.planner import emit_visit_tables
+        exec_style = get_planner(cfg.strategy).info.exec_style
+        style_needs_gath = exec_style in ("flashcp", "contiguous")
+        overlap = resolve_overlap(exec_style, "pallas", cfg.table_overlap)
+        batch.update(emit_visit_tables(
+            stack["doc"], stack["pos"],
+            stack["gath_doc"] if style_needs_gath else None,
+            stack["gath_pos"] if style_needs_gath else None,
+            num_workers=cfg.cp_size, strategy=exec_style,
+            overlap=overlap, block_q=cfg.table_block_q,
+            block_k=cfg.table_block_k))
     batch["tokens"] = tokens
     batch["labels"] = labels
     batch["stats"] = {

@@ -93,6 +93,143 @@ def _pad_lists(lists: list[list[int]], width: int) -> np.ndarray:
     return out
 
 
+_BIG = np.int32(1 << 30)     # invalid-token sentinel in int32 summaries
+_KEY = np.int64(1) << 31     # (doc, pos) composite-key stride
+
+
+def _scatter_lists(rows: np.ndarray, vals: np.ndarray, nvis: np.ndarray,
+                   width: int) -> np.ndarray:
+    """(R, width) visit table from sorted pair lists.
+
+    ``rows`` must be ascending; ``vals`` ascending within each row (the
+    order ``np.nonzero`` / interval expansion produce).  Padded slots
+    repeat the last valid index (a Pallas revisit no-op fetch); empty rows
+    are zeros — identical layout to the legacy list-of-lists builder.
+    """
+    R = nvis.shape[0]
+    starts = np.zeros(R + 1, np.int64)
+    np.cumsum(nvis, out=starts[1:])
+    slot = np.arange(vals.shape[0], dtype=np.int64) - starts[rows]
+    idx = np.zeros((R, width), np.int32)
+    idx[rows, slot] = vals
+    pad = np.arange(width, dtype=np.int32)[None, :] >= nvis[:, None]
+    last = idx[np.arange(R), np.maximum(nvis - 1, 0)]
+    np.copyto(idx, np.broadcast_to(last[:, None], idx.shape), where=pad)
+    return idx
+
+
+def _summ32(doc: np.ndarray, pos: np.ndarray, blk: int):
+    """Per-block int32 summaries: (dmin, dmax, pmin, pmax, all_valid,
+    single_doc).  Empty blocks encode as dmin=BIG / dmax=-1, which makes
+    the any-valid guards of the pair classification implicit."""
+    d = doc.reshape(doc.shape[0], -1, blk)
+    p = pos.reshape(pos.shape[0], -1, blk)
+    valid = d >= 0
+    dmin = np.where(valid, d, _BIG).min(-1).astype(np.int32)
+    dmax = np.where(valid, d, -1).max(-1).astype(np.int32)
+    pmin = np.where(valid, p, _BIG).min(-1).astype(np.int32)
+    pmax = np.where(valid, p, -1).max(-1).astype(np.int32)
+    return dmin, dmax, pmin, pmax, valid.all(-1), dmin == dmax
+
+
+def _detect_segments(kdmin, kdmax, kpmin, kpmax, ksingle) -> np.ndarray:
+    """Cut points splitting one row's KV blocks into runs whose summaries
+    are (doc, pos)-monotone — the property the interval path needs.  A
+    fully plan-ordered row is one segment; a FlashCP concat layout
+    ``[local | gathered buffers]`` autosplits at each buffer boundary."""
+    nonempty = kdmax >= 0
+    edmin = np.where(nonempty, kdmin, _BIG)
+    edmax = np.where(nonempty, kdmax, _BIG)
+    brk = edmin[1:] < edmax[:-1]
+    same = ksingle[1:] & ksingle[:-1] & (kdmin[1:] == kdmin[:-1])
+    brk |= same & ((kpmin[1:] < kpmin[:-1]) | (kpmax[1:] < kpmax[:-1]))
+    return np.flatnonzero(brk) + 1
+
+
+def _pairs_dense(qs, ks):
+    """O(nq*nk) classification of one row -> (visited pairs, full count).
+
+    The seed's boolean logic with the validity guards folded into int32
+    sentinel summaries (empty blocks can never satisfy the overlap test)."""
+    qdmin, qdmax, qpmin, qpmax, q_all, qsing = qs
+    kdmin, kdmax, kpmin, kpmax, k_all, ksing = ks
+    vis = qdmax[:, None] >= kdmin[None, :]
+    vis &= kdmax[None, :] >= qdmin[:, None]
+    qd_s = np.where(qsing, qdmin, np.int32(-3))
+    kd_s = np.where(ksing, kdmin, np.int32(-4))
+    sd = qd_s[:, None] == kd_s[None, :]
+    anti = sd & (qpmax[:, None] < kpmin[None, :])
+    np.logical_not(anti, out=anti)
+    vis &= anti
+    qpf = np.where(q_all, qpmin, np.int32(-1))
+    kpf = np.where(k_all, kpmax, _BIG)
+    full = qpf[:, None] >= kpf[None, :]
+    full &= sd
+    full &= vis
+    qrows, cols = np.nonzero(vis)
+    nvis = np.count_nonzero(vis, axis=-1).astype(np.int32)
+    return qrows, cols.astype(np.int32), nvis, int(full.sum())
+
+
+def _pairs_intervals(qs, ks, cuts, nk):
+    """Sorted-segment classification of one row in O((nq + pairs) log nk).
+
+    Within a monotone KV segment the visited set of a q block is an index
+    interval [lo, hi) (binary search on the doc summaries) minus an
+    anti-causal *suffix* of its own doc's single-block run — at most two
+    intervals per (q block, segment), expanded to pair lists with the
+    same repeat/cumsum construction the plan encoder uses.  Exactly
+    reproduces the dense classification (same summaries, same rules).
+    """
+    qdmin, qdmax, qpmin, qpmax, q_all, qsing = qs
+    kdmin, kdmax, kpmin, kpmax, k_all, ksing = ks
+    nq = qdmin.shape[0]
+    nonempty = kdmax >= 0
+    edmin = np.where(nonempty, kdmin, _BIG)
+    edmax = np.where(nonempty, kdmax, _BIG)
+    qd64 = qdmin.astype(np.int64) * _KEY
+    bounds = [0, *cuts.tolist(), nk]
+    S = len(bounds) - 1
+    starts = np.zeros((nq, S, 2), np.int64)
+    lens = np.zeros((nq, S, 2), np.int64)
+    n_full = 0
+    for si in range(S):
+        s, e = bounds[si], bounds[si + 1]
+        lo = s + np.searchsorted(edmax[s:e], qdmin)
+        hi = s + np.searchsorted(edmin[s:e], qdmax, side="right")
+        hi = np.maximum(hi, lo)
+        # anti-causal suffix of the q-doc's single-block run
+        sidx = s + np.flatnonzero(ksing[s:e])
+        anti_lo = anti_hi = hi
+        if sidx.size:
+            skey = kdmin[sidx].astype(np.int64) * _KEY + kpmin[sidx]
+            r1 = np.searchsorted(skey, qd64 + (_KEY - 1), side="right")
+            cnt = r1 - np.searchsorted(skey, qd64 + qpmax, side="right")
+            cnt = np.where(qsing & (r1 > 0), cnt, 0)
+            last = sidx[np.maximum(r1 - 1, 0)]
+            anti_hi = np.where(cnt > 0, last + 1, hi)
+            anti_lo = anti_hi - np.where(cnt > 0, cnt, 0)
+            fidx = sidx[k_all[sidx]]
+            if fidx.size:
+                fkey = kdmin[fidx].astype(np.int64) * _KEY + kpmax[fidx]
+                nf = (np.searchsorted(fkey, qd64 + qpmin, side="right")
+                      - np.searchsorted(fkey, qd64))
+                n_full += int(nf[qsing & q_all].sum())
+        starts[:, si, 0] = lo
+        lens[:, si, 0] = np.maximum(anti_lo - lo, 0)
+        starts[:, si, 1] = anti_hi
+        lens[:, si, 1] = np.maximum(hi - anti_hi, 0)
+    flat_lens = lens.reshape(-1)
+    flat_starts = starts.reshape(-1)
+    total = int(flat_lens.sum())
+    ar = np.arange(total, dtype=np.int64)
+    excl = np.cumsum(flat_lens) - flat_lens
+    cols = (ar + np.repeat(flat_starts - excl, flat_lens)).astype(np.int32)
+    nvis = lens.sum((1, 2)).astype(np.int32)
+    qrows = np.repeat(np.arange(nq, dtype=np.int64), nvis)
+    return qrows, cols, nvis, n_full
+
+
 def build_block_tables(
     q_doc: np.ndarray,
     q_pos: np.ndarray,
@@ -101,6 +238,7 @@ def build_block_tables(
     *,
     block_q: int = DEFAULT_BLOCK_Q,
     block_k: int = DEFAULT_BLOCK_K,
+    legacy: bool = False,
 ) -> BlockTables:
     """Classify every (q-block, kv-block) pair as skip / partial / full.
 
@@ -109,12 +247,74 @@ def build_block_tables(
     kernel then pays no masking).  Anything uncertain is partial.
     Within a block, FlashCP's executor lays tokens out sorted by
     (doc, pos), which makes the min/max summaries tight.
+
+    The visit lists are built by pure-numpy sort/cumsum construction:
+    plan-ordered (doc, pos)-monotone KV segments resolve each q block's
+    visits to at most two index intervals per segment via binary search
+    on the block summaries (cost scales with the number of *visited*
+    pairs), with a dense sentinel-folded classification as the fallback
+    for arbitrary layouts.  ``legacy=True`` selects the original
+    O(nq x nk) Python list-of-lists construction, kept only as the
+    parity/benchmark baseline.
     """
     q_doc = np.asarray(q_doc); q_pos = np.asarray(q_pos)
     kv_doc = np.asarray(kv_doc); kv_pos = np.asarray(kv_pos)
     B, Tq = q_doc.shape
     _, Tk = kv_doc.shape
     assert Tq % block_q == 0 and Tk % block_k == 0, (Tq, block_q, Tk, block_k)
+    nq, nk = Tq // block_q, Tk // block_k
+
+    if legacy:
+        return _build_block_tables_legacy(q_doc, q_pos, kv_doc, kv_pos,
+                                          block_q=block_q, block_k=block_k)
+
+    qsum = _summ32(q_doc, q_pos, block_q)
+    ksum = _summ32(kv_doc, kv_pos, block_k)
+
+    per_row = []
+    n_visited = n_full = 0
+    for b in range(B):
+        qs = tuple(a[b] for a in qsum)
+        ks = tuple(a[b] for a in ksum)
+        cuts = _detect_segments(ks[0], ks[1], ks[2], ks[3], ks[5])
+        if cuts.size + 1 > max(8, nk // 8):
+            qrows, cols, nvis, nf = _pairs_dense(qs, ks)
+        else:
+            qrows, cols, nvis, nf = _pairs_intervals(qs, ks, cuts, nk)
+        per_row.append((qrows, cols, nvis))
+        n_visited += int(nvis.sum())
+        n_full += nf
+
+    Vk = max(1, max(int(r[2].max()) if r[2].size else 0 for r in per_row))
+    rev_nvis = [np.bincount(cols, minlength=nk).astype(np.int32)
+                for _, cols, _ in per_row]
+    Vq = max(1, max(int(n.max()) if n.size else 0 for n in rev_nvis))
+
+    kv_idx = np.zeros((B, nq, Vk), np.int32)
+    kv_nvis = np.zeros((B, nq), np.int32)
+    q_idx = np.zeros((B, nk, Vq), np.int32)
+    q_nvis = np.zeros((B, nk), np.int32)
+    for b, (qrows, cols, nvis) in enumerate(per_row):
+        kv_idx[b] = _scatter_lists(qrows, cols, nvis, Vk)
+        kv_nvis[b] = nvis
+        order = np.lexsort((qrows, cols))      # by kv block, q ascending
+        q_idx[b] = _scatter_lists(cols[order], qrows[order].astype(np.int32),
+                                  rev_nvis[b], Vq)
+        q_nvis[b] = rev_nvis[b]
+
+    return BlockTables(
+        kv_idx=kv_idx, kv_nvis=kv_nvis, q_idx=q_idx, q_nvis=q_nvis,
+        block_q=block_q, block_k=block_k,
+        visited_frac=n_visited / max(B * nq * nk, 1),
+        full_frac=n_full / max(n_visited, 1),
+    )
+
+
+def _build_block_tables_legacy(q_doc, q_pos, kv_doc, kv_pos, *, block_q,
+                               block_k) -> BlockTables:
+    """The seed implementation, frozen as the parity/benchmark baseline."""
+    B, Tq = q_doc.shape
+    _, Tk = kv_doc.shape
     nq, nk = Tq // block_q, Tk // block_k
 
     def summarize(doc, pos, blk):

@@ -8,7 +8,22 @@
   (Pallas TPU kernels cannot lower on the CPU backend); differentiable by
   ordinary JAX AD.
 
-Both implement the doc-mask visibility rule defined in ``ref.py``.
+Both implement the doc-mask visibility rule defined in ``ref.py``, and
+both expose a **partial mode** for the CP overlap engine
+(:mod:`repro.core.cp_attention`): instead of a finished attention output
+they emit a merge-ready partial whose combination across KV subsets via
+online-LSE rescaling reproduces full attention exactly:
+
+* ``doc_flash_attention(..., partial=True)`` returns ``(o, lse)`` — the
+  subset-normalized output plus its log-sum-exp.  The custom VJP folds
+  the incoming ``d lse`` into the flash backward's ``delta`` term
+  (``ds = p * (dp - (delta - dlse))``), so the same Pallas backward
+  kernels serve the merged objective with exact gradients.
+* ``doc_attention_xla(..., partial=True)`` returns the raw online-softmax
+  triple ``(o_unnormalized, m, l)``; plain JAX AD differentiates it.
+
+The two partial forms are interchangeable under the same merge: a
+normalized ``(o, lse)`` pair is the triple ``(o, m=lse, l=1)``.
 """
 
 from __future__ import annotations
@@ -72,6 +87,57 @@ def _attn_bwd(scale, block_q, block_k, interpret, res, do):
 _attn.defvjp(_attn_fwd, _attn_bwd)
 
 
+# ===================================================================== #
+# Pallas partial mode: (o, lse) with exact gradients through both
+# ===================================================================== #
+@functools.partial(jax.custom_vjp, nondiff_argnums=(11, 12, 13, 14))
+def _attn_partial(q, k, v, q_doc, q_pos, kv_doc, kv_pos, kv_idx, kv_nvis,
+                  q_idx, q_nvis, scale, block_q, block_k, interpret):
+    return da.flash_fwd(
+        q, k, v, q_doc, q_pos, kv_doc, kv_pos, kv_idx, kv_nvis,
+        scale=scale, block_q=block_q, block_k=block_k, interpret=interpret)
+
+
+def _attn_partial_fwd(q, k, v, q_doc, q_pos, kv_doc, kv_pos, kv_idx,
+                      kv_nvis, q_idx, q_nvis, scale, block_q, block_k,
+                      interpret):
+    out, lse = da.flash_fwd(
+        q, k, v, q_doc, q_pos, kv_doc, kv_pos, kv_idx, kv_nvis,
+        scale=scale, block_q=block_q, block_k=block_k, interpret=interpret)
+    res = (q, k, v, out, lse, q_doc, q_pos, kv_doc, kv_pos,
+           kv_idx, kv_nvis, q_idx, q_nvis)
+    return (out, lse), res
+
+
+def _attn_partial_bwd(scale, block_q, block_k, interpret, res, cts):
+    """Backward of the (o, lse) pair with the standard flash kernels.
+
+    With p = exp(s - lse): d s = p * (do . v - delta) + p * dlse, so the
+    lse cotangent folds into the delta argument as ``delta - dlse`` and
+    the unmodified dq / dkv kernels compute exact gradients of both
+    outputs.  (d lse / d v = 0, which the dkv kernel respects for free.)
+    """
+    do, dlse = cts
+    (q, k, v, out, lse, q_doc, q_pos, kv_doc, kv_pos,
+     kv_idx, kv_nvis, q_idx, q_nvis) = res
+    delta = jnp.sum(do.astype(jnp.float32) * out.astype(jnp.float32), axis=-1)
+    delta = delta - dlse.astype(jnp.float32)
+    dq = da.flash_bwd_dq(
+        q, k, v, do, lse, delta, q_doc, q_pos, kv_doc, kv_pos,
+        kv_idx, kv_nvis, scale=scale, block_q=block_q, block_k=block_k,
+        interpret=interpret)
+    dk, dv = da.flash_bwd_dkv(
+        q, k, v, do, lse, delta, q_doc, q_pos, kv_doc, kv_pos,
+        q_idx, q_nvis, scale=scale, block_q=block_q, block_k=block_k,
+        interpret=interpret)
+    zeros = tuple(_float0_zero(x) for x in
+                  (q_doc, q_pos, kv_doc, kv_pos, kv_idx, kv_nvis, q_idx, q_nvis))
+    return (dq, dk, dv) + zeros
+
+
+_attn_partial.defvjp(_attn_partial_fwd, _attn_partial_bwd)
+
+
 def doc_flash_attention(
     q: jax.Array, k: jax.Array, v: jax.Array,
     q_doc: jax.Array, q_pos: jax.Array,
@@ -82,11 +148,16 @@ def doc_flash_attention(
     block_q: int = da.DEFAULT_BLOCK_Q,
     block_k: int = da.DEFAULT_BLOCK_K,
     interpret: bool = False,
+    partial: bool = False,
 ) -> jax.Array:
     """Document-masked causal flash attention (Pallas TPU kernel).
 
     ``tables`` is a :class:`~repro.kernels.doc_attention.BlockTables` or the
     4-tuple of its arrays (kv_idx, kv_nvis, q_idx, q_nvis).
+
+    ``partial=True`` returns ``(o, lse)`` — the KV-subset-normalized
+    output and its log-sum-exp (``-inf`` on rows with nothing visible) —
+    for online-LSE merging across subsets; gradients flow through both.
     """
     if scale is None:
         scale = q.shape[-1] ** -0.5
@@ -95,9 +166,10 @@ def doc_flash_attention(
         block_q, block_k = tables.block_q, tables.block_k
     else:
         kv_idx, kv_nvis, q_idx, q_nvis = tables
-    return _attn(q, k, v, q_doc, q_pos, kv_doc, kv_pos,
-                 kv_idx, kv_nvis, q_idx, q_nvis,
-                 float(scale), block_q, block_k, interpret)
+    fn = _attn_partial if partial else _attn
+    return fn(q, k, v, q_doc, q_pos, kv_doc, kv_pos,
+              kv_idx, kv_nvis, q_idx, q_nvis,
+              float(scale), block_q, block_k, interpret)
 
 
 # ===================================================================== #
@@ -110,13 +182,18 @@ def doc_attention_xla(
     *,
     scale: float | None = None,
     q_chunk: int = 512,
-) -> jax.Array:
+    partial: bool = False,
+):
     """Chunked dense attention with the doc-mask semantics of ``ref.py``.
 
     Chunking over the query axis bounds the live logits tensor to
     ``(B, Hq, q_chunk, Tk)`` — the XLA analogue of flash attention's
     working-set control (full flash semantics are only needed on TPU where
     the Pallas kernel takes over).
+
+    ``partial=True`` returns the unnormalized online-softmax triple
+    ``(o, m, l)`` in f32 (``m = -1e30`` on rows with nothing visible) for
+    online-LSE merging across KV subsets; differentiable by plain JAX AD.
     """
     B, Hq, Tq, D = q.shape
     _, Hkv, Tk, _ = k.shape
@@ -135,6 +212,14 @@ def doc_attention_xla(
         qc = qc.astype(jnp.float32).reshape(B, Hkv, G, q_chunk, D)
         s = jnp.einsum("bhgqd,bhkd->bhgqk", qc, kf) * scale
         mask = doc_mask(qdc, qpc, kv_doc, kv_pos)
+        if partial:
+            s = jnp.where(mask[:, None, None], s, da.NEG)
+            m = jnp.max(s, axis=-1)
+            p = jnp.where(mask[:, None, None], jnp.exp(s - m[..., None]), 0.0)
+            l = jnp.sum(p, axis=-1)
+            o = jnp.einsum("bhgqk,bhkd->bhgqd", p, vf)
+            return (o.reshape(B, Hq, q_chunk, D),
+                    m.reshape(B, Hq, q_chunk), l.reshape(B, Hq, q_chunk))
         s = jnp.where(mask[:, None, None], s, -jnp.inf)
         m = jnp.max(s, axis=-1, keepdims=True)
         m_safe = jnp.where(jnp.isfinite(m), m, 0.0)
@@ -146,10 +231,17 @@ def doc_attention_xla(
 
     if nq == 1:
         out = one_chunk((q, q_doc, q_pos))
+        if partial:
+            return out
     else:
         qs = q.reshape(B, Hq, nq, q_chunk, D).transpose(2, 0, 1, 3, 4)
         qds = q_doc.reshape(B, nq, q_chunk).transpose(1, 0, 2)
         qps = q_pos.reshape(B, nq, q_chunk).transpose(1, 0, 2)
-        outs = jax.lax.map(one_chunk, (qs, qds, qps))   # (nq, B, Hq, qc, D)
+        outs = jax.lax.map(one_chunk, (qs, qds, qps))   # (nq, B, Hq, qc, *)
+        if partial:
+            o, m, l = outs
+            return (o.transpose(1, 2, 0, 3, 4).reshape(B, Hq, Tq, D),
+                    m.transpose(1, 2, 0, 3).reshape(B, Hq, Tq),
+                    l.transpose(1, 2, 0, 3).reshape(B, Hq, Tq))
         out = outs.transpose(1, 2, 0, 3, 4).reshape(B, Hq, Tq, D)
     return out.astype(q.dtype)

@@ -68,7 +68,11 @@ def default_buf_len(seq_len: int, cp: int) -> int:
 # --------------------------------------------------------------------- #
 def train_input_specs(cfg: ModelConfig, shape: ShapeConfig, cp: int,
                       *, strategy: str = "flashcp",
-                      buf_len: int | None = None) -> dict[str, Any]:
+                      buf_len: int | None = None,
+                      attention_impl: str = "xla",
+                      overlap: str = "chunked",
+                      block_q: int = 128,
+                      block_k: int = 128) -> dict[str, Any]:
     B, C = shape.global_batch, shape.seq_len
     N = cp
     buf = buf_len or default_buf_len(C, N)
@@ -84,6 +88,16 @@ def train_input_specs(cfg: ModelConfig, shape: ShapeConfig, cp: int,
         s["send_idx"] = jax.ShapeDtypeStruct((B, N, buf), i32)
         s["gath_doc"] = jax.ShapeDtypeStruct((B, N * buf), i32)
         s["gath_pos"] = jax.ShapeDtypeStruct((B, N * buf), i32)
+    if attention_impl == "pallas" and cfg.uses_attention:
+        from repro.core.cp_attention import resolve_overlap
+        from repro.planner import visit_table_shapes
+        exec_strat = exec_strategy_of(strategy)
+        shapes = visit_table_shapes(
+            B, N, C // N, buf, strategy=exec_strat,
+            overlap=resolve_overlap(exec_strat, attention_impl, overlap),
+            block_q=block_q, block_k=block_k)
+        s.update({k: jax.ShapeDtypeStruct(v, i32)
+                  for k, v in shapes.items()})
     if cfg.frontend == "audio_frames":
         s["frame_embeds"] = jax.ShapeDtypeStruct((B, C, cfg.d_model), bf16)
         del s["tokens"]
@@ -124,9 +138,9 @@ class StepBundle:
 
 
 def _plan_keys(batch):
-    return {k: batch[k] for k in
-            ("doc", "pos", "send_idx", "gath_doc", "gath_pos")
-            if k in batch}
+    return {k: batch[k] for k in batch
+            if k in ("doc", "pos", "send_idx", "gath_doc", "gath_pos")
+            or k.startswith("tab_")}
 
 
 def _abstract_state(cfg: ModelConfig, rng=None):
@@ -140,7 +154,9 @@ def _abstract_state(cfg: ModelConfig, rng=None):
 # --------------------------------------------------------------------- #
 def build_train_step(cfg: ModelConfig, mesh, run: RunConfig,
                      shape: ShapeConfig, *, abstract: bool = True,
-                     q_chunk: int = 512) -> StepBundle:
+                     q_chunk: int = 512, block_q: int = 128,
+                     block_k: int = 128,
+                     interpret: bool = False) -> StepBundle:
     plan_strategy = effective_strategy(cfg, run.cp_strategy)
     exec_strategy = exec_strategy_of(plan_strategy)
     baxes = batch_axes_of(mesh)
@@ -151,6 +167,8 @@ def build_train_step(cfg: ModelConfig, mesh, run: RunConfig,
             mesh, _plan_keys(batch), strategy=exec_strategy,
             impl=run.attention_impl, batch_axes=baxes,
             head_dim=cfg.resolved_head_dim, q_chunk=q_chunk,
+            overlap=run.cp_overlap, interpret=interpret,
+            block_q=block_q, block_k=block_k,
             kv_comm_dtype=run.kv_comm_dtype)
 
         (loss, metrics), grads = jax.value_and_grad(
@@ -171,7 +189,10 @@ def build_train_step(cfg: ModelConfig, mesh, run: RunConfig,
         return params, opt_state, out_metrics
 
     params_s, opt_s = _abstract_state(cfg)
-    batch_s = train_input_specs(cfg, shape, cp, strategy=plan_strategy)
+    batch_s = train_input_specs(cfg, shape, cp, strategy=plan_strategy,
+                                attention_impl=run.attention_impl,
+                                overlap=run.cp_overlap,
+                                block_q=block_q, block_k=block_k)
     p_shard = param_shardings(mesh, params_s)
     o_shard = param_shardings(mesh, opt_s)
     b_spec = batch_specs(mesh, {k: v.shape for k, v in batch_s.items()})
@@ -189,7 +210,9 @@ def build_train_step(cfg: ModelConfig, mesh, run: RunConfig,
 
 
 def build_prefill_step(cfg: ModelConfig, mesh, run: RunConfig,
-                       shape: ShapeConfig, *, q_chunk: int = 512) -> StepBundle:
+                       shape: ShapeConfig, *, q_chunk: int = 512,
+                       block_q: int = 128, block_k: int = 128,
+                       interpret: bool = False) -> StepBundle:
     plan_strategy = effective_strategy(cfg, run.cp_strategy)
     exec_strategy = exec_strategy_of(plan_strategy)
     baxes = batch_axes_of(mesh)
@@ -200,13 +223,18 @@ def build_prefill_step(cfg: ModelConfig, mesh, run: RunConfig,
             mesh, _plan_keys(batch), strategy=exec_strategy,
             impl=run.attention_impl, batch_axes=baxes,
             head_dim=cfg.resolved_head_dim, q_chunk=q_chunk,
+            overlap=run.cp_overlap, interpret=interpret,
+            block_q=block_q, block_k=block_k,
             kv_comm_dtype=run.kv_comm_dtype)
         logits, _ = forward(params, cfg, ctx, batch, remat=run.remat)
         # serving prefill returns the last-position logits per sequence
         return logits[:, -1, :]
 
     params_s, _ = _abstract_state(cfg)
-    batch_s = train_input_specs(cfg, shape, cp, strategy=plan_strategy)
+    batch_s = train_input_specs(cfg, shape, cp, strategy=plan_strategy,
+                                attention_impl=run.attention_impl,
+                                overlap=run.cp_overlap,
+                                block_q=block_q, block_k=block_k)
     batch_s.pop("labels")
     p_shard = param_shardings(mesh, params_s)
     b_spec = batch_specs(mesh, {k: v.shape for k, v in batch_s.items()})
@@ -235,9 +263,8 @@ def build_decode_step(cfg: ModelConfig, mesh, run: RunConfig,
     c_shard = cache_specs(mesh, specs["cache"])
     b = baxes if len(baxes) > 1 else (baxes[0] if baxes else None)
     B = specs["batch"]["pos_t"].shape[0]
-    import numpy as _np
-    need = int(_np.prod([mesh.shape[a] for a in
-                         (b if isinstance(b, tuple) else (b,))])) if b else 1
+    need = int(np.prod([mesh.shape[a] for a in
+                        (b if isinstance(b, tuple) else (b,))])) if b else 1
     Bk = b if (b and B % need == 0) else None
     b_shard = {k: NamedSharding(mesh, P(*([Bk] + [None] * (v.ndim - 1))))
                for k, v in specs["batch"].items()}

@@ -75,7 +75,12 @@ def train(args) -> dict:
         dataset=args.dataset, context_len=args.seq_len,
         batch_per_host=args.batch, cp_size=cp, strategy=strategy,
         vocab_size=cfg.vocab_size, seed=run.seed,
-        buf_len=None if cp == 1 else None, align=1 if cp == 1 else 16)
+        buf_len=None if cp == 1 else None,
+        # pallas tables need block-divisible rank slices
+        align=128 if run.attention_impl == "pallas"
+        else (1 if cp == 1 else 16),
+        emit_tables=(run.attention_impl == "pallas" and cfg.uses_attention),
+        table_overlap=run.cp_overlap)
 
     bundle = build_train_step(cfg, mesh, run, shape, q_chunk=args.q_chunk)
     p_shard, o_shard, b_shard, _ = bundle.in_shardings

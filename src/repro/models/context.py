@@ -172,14 +172,20 @@ def make_local_context(doc: jax.Array, pos: jax.Array,
     """Single-device context: full-sequence doc-masked attention."""
     from repro.kernels import ops as kops
 
+    tabs_cache: list = []   # visit tables depend only on (doc, pos): built
+    # once on first use instead of per attn call
+
     def attn(q, k, v):
         if attention_impl == "pallas":
-            import numpy as np
-            from repro.kernels.doc_attention import build_block_tables
-            tabs = build_block_tables(np.asarray(doc), np.asarray(pos),
-                                      np.asarray(doc), np.asarray(pos))
+            if not tabs_cache:
+                import numpy as np
+                from repro.kernels.doc_attention import build_block_tables
+                tabs_cache.append(build_block_tables(
+                    np.asarray(doc), np.asarray(pos),
+                    np.asarray(doc), np.asarray(pos)))
             return kops.doc_flash_attention(q, k, v, doc, pos, doc, pos,
-                                            tabs, interpret=interpret)
+                                            tabs_cache[0],
+                                            interpret=interpret)
         return kops.doc_attention_xla(q, k, v, doc, pos, doc, pos,
                                       q_chunk=q_chunk)
 

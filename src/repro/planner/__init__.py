@@ -31,8 +31,9 @@ from .heuristic import HeuristicStats, flashcp_plan, zigzag_doc_shards
 from .baselines import (BASELINE_PLANNERS, contiguous_plan, llama3_plan,
                         per_doc_plan, ring_zigzag_plan)
 from .ilp import BnBResult, bnb_plan
-from .encode import (PlanEncoding, encode_plan, encode_plan_batch,
-                     pick_buffer_bucket, plan_shape_hints, trivial_plan)
+from .encode import (PlanEncoding, emit_visit_tables, encode_plan,
+                     encode_plan_batch, pick_buffer_bucket,
+                     plan_shape_hints, trivial_plan, visit_table_shapes)
 from .cache import CacheStats, PlanCache
 from .parallel import PlannerPool, get_pool, plan_many
 
@@ -46,6 +47,7 @@ __all__ = [
     "ring_zigzag_plan",
     "BnBResult", "bnb_plan",
     "PlanEncoding", "encode_plan", "encode_plan_batch",
+    "emit_visit_tables", "visit_table_shapes",
     "pick_buffer_bucket", "plan_shape_hints", "trivial_plan",
     "CacheStats", "PlanCache",
     "PlannerPool", "get_pool", "plan_many",

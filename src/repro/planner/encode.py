@@ -31,13 +31,16 @@ throwaway pre-encoding pass per sample.
 from __future__ import annotations
 
 import dataclasses
+import hashlib
 import os
+from collections import OrderedDict
 
 import numpy as np
 
 from .plan import Shard, ShardArrays, ShardingPlan
 
 __all__ = ["PlanEncoding", "encode_plan", "encode_plan_batch",
+           "emit_visit_tables", "visit_table_shapes",
            "pick_buffer_bucket", "plan_shape_hints", "trivial_plan"]
 
 
@@ -273,3 +276,230 @@ def encode_plan_batch(
     else:
         encs = [one(b) for b in range(B)]
     return stack, encs
+
+
+# --------------------------------------------------------------------- #
+# Pallas visit-table emission (planner side)
+# --------------------------------------------------------------------- #
+def _table_style(strategy: str) -> str:
+    if strategy in ("flashcp", "contiguous"):
+        return "flashcp"
+    if strategy in ("allgather", "llama3", "per_doc", "ring", "ring_zigzag"):
+        return "allgather"
+    raise ValueError(f"no visit-table style for strategy {strategy!r}")
+
+
+def _widen_tables(idx: np.ndarray, nvis: np.ndarray, width: int):
+    """Pad visit lists to a wider static width (repeat-last no-op slots)."""
+    V = idx.shape[-1]
+    if width <= V:
+        return idx
+    last = np.take_along_axis(
+        idx, np.maximum(nvis - 1, 0)[..., None], -1)
+    pad = np.broadcast_to(last, (*idx.shape[:-1], width - V))
+    return np.concatenate([idx, pad], axis=-1)
+
+
+def _bucketed(idx, nvis, nblocks, pad_to):
+    if pad_to == "full":
+        return _widen_tables(idx, nvis, nblocks)
+    if pad_to == "bucket":
+        return _widen_tables(idx, nvis, min(_next_pow2(idx.shape[-1], 8),
+                                            nblocks))
+    return idx
+
+
+def _build_group(q_doc, q_pos, kv_doc, kv_pos, out_shape, *, block_q,
+                 block_k, pad_to):
+    """One batched build_block_tables call over flattened (rows, T) pairs,
+    reshaped to ``out_shape`` leading dims."""
+    from repro.kernels.doc_attention import build_block_tables
+
+    rows = int(np.prod(out_shape))
+    t = build_block_tables(
+        q_doc.reshape(rows, -1), q_pos.reshape(rows, -1),
+        kv_doc.reshape(rows, -1), kv_pos.reshape(rows, -1),
+        block_q=block_q, block_k=block_k)
+    nq, nk = t.kv_nvis.shape[-1], t.q_nvis.shape[-1]
+    kv_idx = _bucketed(t.kv_idx, t.kv_nvis, nk, pad_to)
+    q_idx = _bucketed(t.q_idx, t.q_nvis, nq, pad_to)
+    return (kv_idx.reshape(*out_shape, nq, -1),
+            t.kv_nvis.reshape(*out_shape, nq),
+            q_idx.reshape(*out_shape, nk, -1),
+            t.q_nvis.reshape(*out_shape, nk))
+
+
+_TABLE_CACHE: OrderedDict[bytes, dict] = OrderedDict()
+_TABLE_CACHE_MAX = 8
+
+
+def emit_visit_tables(
+    doc: np.ndarray,
+    pos: np.ndarray,
+    gath_doc: np.ndarray | None = None,
+    gath_pos: np.ndarray | None = None,
+    *,
+    num_workers: int,
+    strategy: str = "flashcp",
+    overlap: str = "chunked",
+    block_q: int = 128,
+    block_k: int = 128,
+    pad_to: str = "bucket",
+    cache: bool = True,
+) -> dict[str, np.ndarray]:
+    """Per-rank Pallas visit tables for a batch-encoded plan.
+
+    ``doc``/``pos`` are the stacked plan-order (B, C_pad) arrays of
+    :func:`encode_plan_batch`; ``gath_doc``/``gath_pos`` the (B, N*buf)
+    Eq.-5 buffer metadata (flashcp styles only).  One table set is built
+    per (sample, rank) — and per hop for ``overlap="chunked"`` — with a
+    single batched :func:`build_block_tables` call per group, so the cost
+    is one vectorized pass regardless of CP size.
+
+    Returns ``tab_*`` plan arrays matching what
+    :func:`repro.core.cp_attention.make_cp_context` consumes:
+
+    * ``overlap="none"``   — ``tab_{kv_idx,kv_nvis,q_idx,q_nvis}``
+      (B, N, ...) for the monolithic concat layout (flashcp: ``[local |
+      gathered-with-self-masked]``; allgather: full sequence).
+    * ``overlap="chunked"`` — ``tab_loc_*`` (B, N, ...) for the local-KV
+      partial plus ``tab_hop_*`` (B, N, N-1, ...) where hop h of rank r
+      attends the payload of rank (r - 1 - h) mod N, matching the
+      chunked engine's ppermute rotation.
+
+    Visit widths are padded to a pow2 bucket (``pad_to="bucket"``) so at
+    most log2 distinct executables exist; ``"full"`` pads to the
+    worst-case width of :func:`visit_table_shapes` for AOT-spec-exact
+    shapes.  Results are memoized on the metadata content (PlanCache-hit
+    batches re-emit for free).
+    """
+    doc = np.ascontiguousarray(doc, np.int32)
+    pos = np.ascontiguousarray(pos, np.int32)
+    style = _table_style(strategy)
+    if style == "flashcp":
+        assert gath_doc is not None and gath_pos is not None, \
+            "flashcp tables need the Eq.5 buffer metadata"
+        gath_doc = np.ascontiguousarray(gath_doc, np.int32)
+        gath_pos = np.ascontiguousarray(gath_pos, np.int32)
+
+    key = None
+    if cache:
+        h = hashlib.blake2b(digest_size=16)
+        for a in (doc, pos, gath_doc, gath_pos):
+            h.update(b"|" if a is None else a.tobytes())
+        h.update(f"{num_workers}/{style}/{overlap}/{block_q}/{block_k}/"
+                 f"{pad_to}".encode())
+        key = h.digest()
+        hit = _TABLE_CACHE.get(key)
+        if hit is not None:
+            _TABLE_CACHE.move_to_end(key)
+            return dict(hit)
+
+    B, C = doc.shape
+    N = num_workers
+    t_loc = C // N
+    ld = doc.reshape(B, N, t_loc)
+    lp = pos.reshape(B, N, t_loc)
+    kw = dict(block_q=block_q, block_k=block_k, pad_to=pad_to)
+
+    if overlap == "none":
+        if style == "flashcp":
+            L = gath_doc.shape[-1]
+            buf = L // N
+            gd = np.broadcast_to(gath_doc[:, None], (B, N, L)).copy()
+            seg = np.arange(L) // buf
+            gd[:, seg == np.arange(N)[:, None]] = -2     # self-masked
+            gp = np.broadcast_to(gath_pos[:, None], (B, N, L))
+            kd = np.concatenate([ld, gd], axis=-1)
+            kp = np.concatenate([lp, gp], axis=-1)
+        else:
+            kd = np.broadcast_to(doc[:, None], (B, N, C))
+            kp = np.broadcast_to(pos[:, None], (B, N, C))
+        kv_idx, kv_nvis, q_idx, q_nvis = _build_group(
+            ld, lp, kd, kp, (B, N), **kw)
+        out = {"tab_kv_idx": kv_idx, "tab_kv_nvis": kv_nvis,
+               "tab_q_idx": q_idx, "tab_q_nvis": q_nvis}
+    elif overlap == "chunked":
+        out = {}
+        for k, a in zip(("tab_loc_kv_idx", "tab_loc_kv_nvis",
+                         "tab_loc_q_idx", "tab_loc_q_nvis"),
+                        _build_group(ld, lp, ld, lp, (B, N), **kw)):
+            out[k] = a
+        H = N - 1
+        if style == "flashcp":
+            L = gath_doc.shape[-1]
+            segs_d = gath_doc.reshape(B, N, L // N)
+            segs_p = gath_pos.reshape(B, N, L // N)
+        else:
+            segs_d, segs_p = ld, lp
+        src = (np.arange(N)[:, None] - 1
+               - np.arange(max(H, 1))[None, :]) % N     # (N, H)
+        hop_kd = segs_d[:, src][:, :, :H]               # (B, N, H, seg)
+        hop_kp = segs_p[:, src][:, :, :H]
+        hop_qd = np.broadcast_to(ld[:, :, None], (B, N, max(H, 1), t_loc)
+                                 )[:, :, :H]
+        hop_qp = np.broadcast_to(lp[:, :, None], (B, N, max(H, 1), t_loc)
+                                 )[:, :, :H]
+        if H > 0:
+            for k, a in zip(("tab_hop_kv_idx", "tab_hop_kv_nvis",
+                             "tab_hop_q_idx", "tab_hop_q_nvis"),
+                            _build_group(hop_qd, hop_qp, hop_kd, hop_kp,
+                                         (B, N, H), **kw)):
+                out[k] = a
+        else:
+            # zero-hop (N == 1) placeholders, width-matched to
+            # visit_table_shapes so AOT specs agree
+            nq = t_loc // block_q
+            nk = segs_d.shape[-1] // block_k
+            out.update({
+                "tab_hop_kv_idx": np.zeros((B, N, 0, nq, nk), np.int32),
+                "tab_hop_kv_nvis": np.zeros((B, N, 0, nq), np.int32),
+                "tab_hop_q_idx": np.zeros((B, N, 0, nk, nq), np.int32),
+                "tab_hop_q_nvis": np.zeros((B, N, 0, nk), np.int32),
+            })
+    else:
+        raise ValueError(f"unknown overlap mode {overlap!r}")
+
+    if cache and key is not None:
+        _TABLE_CACHE[key] = dict(out)
+        while len(_TABLE_CACHE) > _TABLE_CACHE_MAX:
+            _TABLE_CACHE.popitem(last=False)
+    return out
+
+
+def visit_table_shapes(
+    B: int,
+    num_workers: int,
+    t_loc: int,
+    buf_len: int,
+    *,
+    strategy: str = "flashcp",
+    overlap: str = "chunked",
+    block_q: int = 128,
+    block_k: int = 128,
+) -> dict[str, tuple]:
+    """Worst-case-width static shapes of :func:`emit_visit_tables` output
+    (dry-run / AOT input specs; ``pad_to="full"`` emission matches them).
+    """
+    N = num_workers
+    nq = t_loc // block_q
+    style = _table_style(strategy)
+    if overlap == "none":
+        kv_len = t_loc + N * buf_len if style == "flashcp" else N * t_loc
+        nk = kv_len // block_k
+        return {"tab_kv_idx": (B, N, nq, nk), "tab_kv_nvis": (B, N, nq),
+                "tab_q_idx": (B, N, nk, nq), "tab_q_nvis": (B, N, nk)}
+    H = N - 1
+    seg = buf_len if style == "flashcp" else t_loc
+    nk_loc = t_loc // block_k
+    nk_hop = seg // block_k
+    return {
+        "tab_loc_kv_idx": (B, N, nq, nk_loc),
+        "tab_loc_kv_nvis": (B, N, nq),
+        "tab_loc_q_idx": (B, N, nk_loc, nq),
+        "tab_loc_q_nvis": (B, N, nk_loc),
+        "tab_hop_kv_idx": (B, N, H, nq, nk_hop),
+        "tab_hop_kv_nvis": (B, N, H, nq),
+        "tab_hop_q_idx": (B, N, H, nk_hop, nq),
+        "tab_hop_q_nvis": (B, N, H, nk_hop),
+    }

@@ -124,6 +124,9 @@ def batch_specs(mesh: Mesh, batch_shapes: dict) -> dict:
             specs[key] = P(Bk, "model", None)
         elif key in ("gath_doc", "gath_pos"):
             specs[key] = P(Bk, None)
+        elif key.startswith("tab_"):
+            # per-rank Pallas visit tables: rank dim over the CP axis
+            specs[key] = P(*([Bk, "model"] + [None] * (ndim - 2)))
         else:
             specs[key] = P(*([Bk] + [None] * (ndim - 1)))
     return specs

@@ -132,10 +132,13 @@ def main():
 
         kv_dtype = "int8" if impl == "xla-int8" else "native"
         real_impl = "xla" if impl == "xla-int8" else impl
+        # the hand-built tables here use the monolithic concat layout;
+        # chunked-overlap pallas is covered by overlap_check.py
+        ov = "none" if impl == "pallas" else "chunked"
         with set_mesh(mesh):
             ctx = make_cp_context(
                 mesh, arrays, strategy=exec_strategy, impl=real_impl,
-                batch_axes=("data",), head_dim=D, q_chunk=64,
+                batch_axes=("data",), head_dim=D, q_chunk=64, overlap=ov,
                 interpret=(impl == "pallas"), tables=tables,
                 block_q=16, block_k=16, kv_comm_dtype=kv_dtype)
 

@@ -1,0 +1,53 @@
+"""Pallas-impl CP train/prefill steps lower AOT (regression for the dead
+path where step builders never threaded visit tables into
+``make_cp_context(impl="pallas")``).
+
+Run in a subprocess with 8 simulated CPU devices; interpret-mode kernels
+so the Pallas calls lower on the CPU backend.
+"""
+
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "..", "src"))
+
+import dataclasses
+
+from repro.compat import make_mesh, set_mesh
+from repro.configs import get_config
+from repro.configs.base import RunConfig, ShapeConfig, reduce_for_smoke
+from repro.launch.steps import build_prefill_step, build_train_step
+
+SHAPE = ShapeConfig("smoke", seq_len=1024, global_batch=2, kind="train")
+
+
+def main():
+    cfg = reduce_for_smoke(get_config("starcoder2_3b"))
+    mesh = make_mesh((2, 4), ("data", "model"))
+
+    for overlap in ("chunked", "none"):
+        run = RunConfig(arch=cfg.name, shape="smoke", cp_strategy="flashcp",
+                        attention_impl="pallas", cp_overlap=overlap,
+                        remat=False)
+        with set_mesh(mesh):
+            bundle = build_train_step(cfg, mesh, run, SHAPE,
+                                      interpret=True)
+            lowered = bundle.lower()
+            text = lowered.as_text()
+            assert "custom_call" in text or "while" in text
+            print(f"OK train_step pallas overlap={overlap} "
+                  f"({len(text)} chars)")
+
+            pbundle = build_prefill_step(cfg, mesh, run, SHAPE,
+                                         interpret=True)
+            pbundle.lower()
+            print(f"OK prefill_step pallas overlap={overlap}")
+
+    print("STEPS_PALLAS_LOWER_PASS")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,378 @@
+"""Overlapped CP execution engine: merge-substrate properties, kernel
+partial modes, vectorized visit-table parity, the planner table emitter,
+the exposed-communication schedule model, and the multi-device /
+AOT-lowering subprocess checks."""
+
+import os
+import subprocess
+import sys
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core.cp_attention import (NEG, finalize_partial, merge_partials)
+from repro.kernels.doc_attention import build_block_tables
+from repro.kernels.ops import doc_attention_xla, doc_flash_attention
+from repro.kernels.ref import mha_reference
+from repro.launch.hlo_analysis import schedule_model
+from repro.planner import emit_visit_tables, visit_table_shapes
+
+HERE = os.path.dirname(__file__)
+RNG = np.random.default_rng(0)
+
+
+def _sorted_layout(B, T, lens, pad=0):
+    d = np.concatenate([np.full(l, i, np.int32) for i, l in enumerate(lens)]
+                       + ([np.full(pad, -1, np.int32)] if pad else []))
+    p = np.concatenate([np.arange(l, dtype=np.int32) for l in lens]
+                       + ([np.zeros(pad, np.int32)] if pad else []))
+    assert d.shape[0] == T
+    return np.tile(d, (B, 1)), np.tile(p, (B, 1))
+
+
+def _rand_layout(B, Tq, Tk, n_docs, seed=0, q_pad=0, kv_pad=0):
+    rng = np.random.default_rng(seed)
+    kv_doc = np.sort(rng.integers(0, n_docs, (B, Tk)).astype(np.int32), 1)
+    kv_pos = np.zeros_like(kv_doc)
+    for b in range(B):
+        for d in np.unique(kv_doc[b]):
+            m = kv_doc[b] == d
+            kv_pos[b, m] = np.arange(m.sum())
+    idx = np.sort(rng.choice(Tk, Tq, replace=False))
+    q_doc, q_pos = kv_doc[:, idx].copy(), kv_pos[:, idx].copy()
+    if q_pad:
+        q_doc[:, -q_pad:] = -1
+    if kv_pad:
+        kv_doc[:, -kv_pad:] = -1
+    return q_doc, q_pos, kv_doc, kv_pos
+
+
+# --------------------------------------------------------------------- #
+# merge substrate
+# --------------------------------------------------------------------- #
+def _random_partials(rng, n, shape, with_empty=True):
+    parts = []
+    for i in range(n):
+        o = rng.standard_normal((*shape, 8)).astype(np.float32)
+        m = rng.uniform(-3, 3, shape).astype(np.float32)
+        l = rng.uniform(0.1, 4.0, shape).astype(np.float32)
+        if with_empty and i % 3 == 2:      # empty partial (nothing visible)
+            o = np.zeros_like(o)
+            m = np.full(shape, NEG, np.float32)
+            l = np.zeros(shape, np.float32)
+        parts.append((jnp.asarray(o), jnp.asarray(m), jnp.asarray(l)))
+    return parts
+
+
+def test_merge_order_invariance():
+    """Online-LSE merging is associative/commutative to fp tolerance:
+    any merge order yields the same finalized output."""
+    rng = np.random.default_rng(1)
+    for trial in range(10):
+        n = int(rng.integers(2, 7))
+        parts = _random_partials(rng, n, (2, 3, 5))
+        base = np.asarray(finalize_partial(merge_partials(parts),
+                                           jnp.float32))
+        for _ in range(4):
+            order = rng.permutation(n)
+            out = np.asarray(finalize_partial(
+                merge_partials([parts[i] for i in order]), jnp.float32))
+            np.testing.assert_allclose(out, base, atol=1e-5, rtol=1e-5)
+
+
+def test_merge_all_empty_is_zero():
+    rng = np.random.default_rng(2)
+    parts = _random_partials(rng, 3, (1, 2, 4))
+    empty = [(jnp.zeros_like(o), jnp.full_like(m, NEG), jnp.zeros_like(l))
+             for o, m, l in parts]
+    out = np.asarray(finalize_partial(merge_partials(empty), jnp.float32))
+    assert np.all(out == 0)
+
+
+def test_merge_mixed_forms_match_single_pass():
+    """The normalized (o, lse, 1) Pallas form and the raw (o, m, l) XLA
+    form merge interchangeably to the unsplit reference."""
+    qd, qp, kd, kp = _rand_layout(2, 64, 64, 3, seed=3)
+    q = jnp.asarray(RNG.standard_normal((2, 4, 64, 16)).astype(np.float32))
+    k = jnp.asarray(RNG.standard_normal((2, 2, 64, 16)).astype(np.float32))
+    v = jnp.asarray(RNG.standard_normal((2, 2, 64, 16)).astype(np.float32))
+    jqd, jqp, jkd, jkp = map(jnp.asarray, (qd, qp, kd, kp))
+    ref = mha_reference(q, k, v, jqd, jqp, jkd, jkp)
+
+    S = 32
+    xla_part = doc_attention_xla(q, k[:, :, :S], v[:, :, :S], jqd, jqp,
+                                 jkd[:, :S], jkp[:, :S], q_chunk=16,
+                                 partial=True)
+    tabs = build_block_tables(qd, qp, kd[:, S:], kp[:, S:], block_q=16,
+                              block_k=16)
+    o, lse = doc_flash_attention(q, k[:, :, S:], v[:, :, S:], jqd, jqp,
+                                 jkd[:, S:], jkp[:, S:], tabs,
+                                 interpret=True, partial=True)
+    m = jnp.maximum(lse, NEG)
+    pl_part = (o.astype(jnp.float32), m, jnp.ones_like(m))
+    out = finalize_partial(merge_partials([xla_part, pl_part]), q.dtype)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               atol=2e-5, rtol=2e-5)
+
+
+# --------------------------------------------------------------------- #
+# kernel partial modes (fwd + grad, incl. the d-lse backward path)
+# --------------------------------------------------------------------- #
+@pytest.mark.parametrize("impl", ["xla", "pallas"])
+def test_partial_mode_matches_oracle(impl):
+    qd, qp, kd, kp = _rand_layout(2, 64, 64, 4, seed=4, q_pad=3)
+    q = jnp.asarray(RNG.standard_normal((2, 4, 64, 16)).astype(np.float32))
+    k = jnp.asarray(RNG.standard_normal((2, 2, 64, 16)).astype(np.float32))
+    v = jnp.asarray(RNG.standard_normal((2, 2, 64, 16)).astype(np.float32))
+    jqd, jqp, jkd, jkp = map(jnp.asarray, (qd, qp, kd, kp))
+
+    def merged(q, k, v):
+        parts = []
+        for lo, hi in ((0, 32), (32, 64)):
+            if impl == "pallas":
+                tabs = build_block_tables(qd, qp, kd[:, lo:hi],
+                                          kp[:, lo:hi], block_q=16,
+                                          block_k=16)
+                o, lse = doc_flash_attention(
+                    q, k[:, :, lo:hi], v[:, :, lo:hi], jqd, jqp,
+                    jkd[:, lo:hi], jkp[:, lo:hi], tabs, interpret=True,
+                    partial=True)
+                m = jnp.maximum(lse, NEG)
+                parts.append((o.astype(jnp.float32), m, jnp.ones_like(m)))
+            else:
+                parts.append(doc_attention_xla(
+                    q, k[:, :, lo:hi], v[:, :, lo:hi], jqd, jqp,
+                    jkd[:, lo:hi], jkp[:, lo:hi], q_chunk=16,
+                    partial=True))
+        return finalize_partial(merge_partials(parts), q.dtype)
+
+    ref = mha_reference(q, k, v, jqd, jqp, jkd, jkp)
+    np.testing.assert_allclose(np.asarray(merged(q, k, v)),
+                               np.asarray(ref), atol=2e-5, rtol=2e-5)
+
+    g = jax.grad(lambda *a: jnp.sum(merged(*a).astype(jnp.float32) ** 2),
+                 (0, 1, 2))(q, k, v)
+    gr = jax.grad(lambda *a: jnp.sum(
+        mha_reference(*a, jqd, jqp, jkd, jkp).astype(jnp.float32) ** 2),
+        (0, 1, 2))(q, k, v)
+    for a, b, nm in zip(g, gr, "qkv"):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   atol=5e-4, rtol=5e-4,
+                                   err_msg=f"{impl} d{nm}")
+
+
+# --------------------------------------------------------------------- #
+# vectorized build_block_tables vs the legacy builder
+# --------------------------------------------------------------------- #
+def _assert_tables_equal(a, b, msg):
+    for n in ("kv_idx", "kv_nvis", "q_idx", "q_nvis"):
+        np.testing.assert_array_equal(getattr(a, n), getattr(b, n),
+                                      err_msg=f"{msg}:{n}")
+    assert abs(a.visited_frac - b.visited_frac) < 1e-12, msg
+    assert abs(a.full_frac - b.full_frac) < 1e-12, msg
+
+
+def test_block_tables_vectorized_matches_legacy_random():
+    """Dense-fallback path (unsorted layouts): exact equality."""
+    rng = np.random.default_rng(5)
+    for trial in range(15):
+        B = int(rng.integers(1, 3))
+        kd = rng.integers(-1, 5, (B, 128)).astype(np.int32)
+        kp = rng.integers(0, 60, (B, 128)).astype(np.int32)
+        qd = rng.integers(-1, 5, (B, 64)).astype(np.int32)
+        qp = rng.integers(0, 60, (B, 64)).astype(np.int32)
+        a = build_block_tables(qd, qp, kd, kp, block_q=16, block_k=16)
+        b = build_block_tables(qd, qp, kd, kp, block_q=16, block_k=16,
+                               legacy=True)
+        _assert_tables_equal(a, b, f"rand{trial}")
+
+
+def test_block_tables_vectorized_matches_legacy_sorted():
+    """Interval fast path (plan-ordered layouts, incl. padding)."""
+    rng = np.random.default_rng(6)
+    for trial in range(15):
+        nd = int(rng.integers(1, 8))
+        lens = rng.multinomial(256 - 16, np.ones(nd) / nd)
+        lens = [int(x) for x in lens if x] or [240]
+        lens[-1] += 240 - sum(lens)
+        d, p = _sorted_layout(2, 256, lens, pad=16)
+        a = build_block_tables(d, p, d, p, block_q=16, block_k=16)
+        b = build_block_tables(d, p, d, p, block_q=16, block_k=16,
+                               legacy=True)
+        _assert_tables_equal(a, b, f"sorted{trial}")
+
+
+def test_block_tables_vectorized_matches_legacy_segmented():
+    """Concat layouts (flashcp [local | buffers], incl. -2 self mask)
+    autosplit into monotone segments and stay exact."""
+    d1, p1 = _sorted_layout(1, 128, [70, 58])
+    d2, p2 = _sorted_layout(1, 128, [50, 60], pad=18)
+    kd = np.concatenate([d1, np.full_like(d2, -2), d2], axis=1)
+    kp = np.concatenate([p1, p2, p2], axis=1)
+    a = build_block_tables(d1, p1, kd, kp, block_q=16, block_k=16)
+    b = build_block_tables(d1, p1, kd, kp, block_q=16, block_k=16,
+                           legacy=True)
+    _assert_tables_equal(a, b, "segmented")
+
+
+# --------------------------------------------------------------------- #
+# planner table emitter
+# --------------------------------------------------------------------- #
+def _enc(cp, lens=(70, 23, 100, 40, 23), B=2):
+    from repro.core.baselines import BASELINE_PLANNERS
+    from repro.planner import encode_plan_batch
+    plans = [BASELINE_PLANNERS["flashcp"](np.asarray(lens, np.int64), cp)
+             for _ in range(B)]
+    return encode_plan_batch(plans, align=16)
+
+
+def test_emitter_mono_matches_per_rank_build():
+    cp = 4
+    stack, encs = _enc(cp)
+    tabs = emit_visit_tables(stack["doc"], stack["pos"],
+                             stack["gath_doc"], stack["gath_pos"],
+                             num_workers=cp, strategy="flashcp",
+                             overlap="none", block_q=16, block_k=16,
+                             pad_to="exact")
+    t_loc = encs[0].t_loc
+    buf = encs[0].buf_len
+    B = stack["doc"].shape[0]
+    for b in range(B):
+        for j in range(cp):
+            qd = stack["doc"][b, j * t_loc:(j + 1) * t_loc][None]
+            qp = stack["pos"][b, j * t_loc:(j + 1) * t_loc][None]
+            gd = stack["gath_doc"][b].copy()
+            gd[j * buf:(j + 1) * buf] = -2
+            kd = np.concatenate([qd[0], gd])[None]
+            kp = np.concatenate([qp[0], stack["gath_pos"][b]])[None]
+            ref = build_block_tables(qd, qp, kd, kp, block_q=16,
+                                     block_k=16)
+            got_nvis = tabs["tab_kv_nvis"][b, j]
+            np.testing.assert_array_equal(got_nvis, ref.kv_nvis[0])
+            V = ref.kv_idx.shape[-1]
+            np.testing.assert_array_equal(
+                tabs["tab_kv_idx"][b, j][:, :V], ref.kv_idx[0])
+
+
+def test_emitter_chunked_hop_mapping():
+    """Hop h of rank r must be the table of (q_r, payload of rank
+    (r - 1 - h) mod N) — the ppermute rotation the engine performs."""
+    cp = 4
+    stack, encs = _enc(cp)
+    tabs = emit_visit_tables(stack["doc"], stack["pos"],
+                             stack["gath_doc"], stack["gath_pos"],
+                             num_workers=cp, strategy="flashcp",
+                             overlap="chunked", block_q=16, block_k=16,
+                             pad_to="exact")
+    t_loc = encs[0].t_loc
+    buf = encs[0].buf_len
+    b = 0
+    for r in range(cp):
+        qd = stack["doc"][b, r * t_loc:(r + 1) * t_loc][None]
+        qp = stack["pos"][b, r * t_loc:(r + 1) * t_loc][None]
+        for h in range(cp - 1):
+            src = (r - 1 - h) % cp
+            kd = stack["gath_doc"][b, src * buf:(src + 1) * buf][None]
+            kp = stack["gath_pos"][b, src * buf:(src + 1) * buf][None]
+            ref = build_block_tables(qd, qp, kd, kp, block_q=16,
+                                     block_k=16)
+            np.testing.assert_array_equal(tabs["tab_hop_kv_nvis"][b, r, h],
+                                          ref.kv_nvis[0])
+            V = ref.kv_idx.shape[-1]
+            np.testing.assert_array_equal(
+                tabs["tab_hop_kv_idx"][b, r, h][:, :V], ref.kv_idx[0])
+
+
+def test_emitter_full_pad_matches_spec_shapes():
+    cp = 4
+    stack, encs = _enc(cp)
+    B = stack["doc"].shape[0]
+    for overlap in ("none", "chunked"):
+        tabs = emit_visit_tables(stack["doc"], stack["pos"],
+                                 stack["gath_doc"], stack["gath_pos"],
+                                 num_workers=cp, strategy="flashcp",
+                                 overlap=overlap, block_q=16, block_k=16,
+                                 pad_to="full")
+        shapes = visit_table_shapes(B, cp, encs[0].t_loc, encs[0].buf_len,
+                                    strategy="flashcp", overlap=overlap,
+                                    block_q=16, block_k=16)
+        for key, shape in shapes.items():
+            assert tabs[key].shape == shape, (key, tabs[key].shape, shape)
+
+
+def test_emitter_cache_hits():
+    cp = 2
+    stack, _ = _enc(cp)
+    kw = dict(num_workers=cp, strategy="flashcp", overlap="chunked",
+              block_q=16, block_k=16)
+    a = emit_visit_tables(stack["doc"], stack["pos"], stack["gath_doc"],
+                          stack["gath_pos"], **kw)
+    b = emit_visit_tables(stack["doc"], stack["pos"], stack["gath_doc"],
+                          stack["gath_pos"], **kw)
+    for key in a:
+        assert a[key] is b[key], f"cache miss on identical metadata: {key}"
+
+
+# --------------------------------------------------------------------- #
+# exposed-communication schedule model
+# --------------------------------------------------------------------- #
+_BLOCKING_HLO = """\
+ENTRY %main (p0: f32[1024,1024], p1: f32[1024,1024]) -> f32[1024,1024] {
+  %p0 = f32[1024,1024] parameter(0)
+  %p1 = f32[1024,1024] parameter(1)
+  %ag = f32[1024,1024] all-gather(%p0), replica_groups={{0,1,2,3}}
+  %d0 = f32[1024,1024] dot(%ag, %p1), lhs_contracting_dims={1}
+  ROOT %d1 = f32[1024,1024] dot(%d0, %p1), lhs_contracting_dims={1}
+}
+"""
+
+_OVERLAPPED_HLO = """\
+ENTRY %main (p0: f32[1024,1024], p1: f32[1024,1024]) -> f32[1024,1024] {
+  %p0 = f32[1024,1024] parameter(0)
+  %p1 = f32[1024,1024] parameter(1)
+  %cp = f32[1024,1024] collective-permute(%p0), source_target_pairs={{0,1}}
+  %d0 = f32[1024,1024] dot(%p0, %p1), lhs_contracting_dims={1}
+  ROOT %d1 = f32[1024,1024] dot(%cp, %d0), lhs_contracting_dims={1}
+}
+"""
+
+
+def test_schedule_model_blocking_vs_overlapped():
+    blocking = schedule_model(_BLOCKING_HLO)
+    overlapped = schedule_model(_OVERLAPPED_HLO)
+    # blocking: the gather gates all compute -> fully exposed
+    assert blocking.exposed_comm_s == pytest.approx(
+        blocking.comm_busy_s, rel=1e-6)
+    # overlapped: the permute flies under the first dot -> hidden
+    assert overlapped.exposed_comm_s < 0.2 * overlapped.comm_busy_s
+    assert blocking.collective_count == 1
+    assert overlapped.collective_count == 1
+
+
+# --------------------------------------------------------------------- #
+# multi-device + AOT subprocess checks
+# --------------------------------------------------------------------- #
+def _run(script: str) -> str:
+    env = dict(os.environ)
+    env.pop("XLA_FLAGS", None)
+    proc = subprocess.run(
+        [sys.executable, os.path.join(HERE, "multidevice", script)],
+        capture_output=True, text=True, timeout=1200, env=env)
+    assert proc.returncode == 0, \
+        f"{script} failed:\nSTDOUT:\n{proc.stdout[-4000:]}\n" \
+        f"STDERR:\n{proc.stderr[-4000:]}"
+    return proc.stdout
+
+
+@pytest.mark.slow
+def test_overlap_parity_all_strategies():
+    out = _run("overlap_check.py")
+    assert "OVERLAP_CHECK_PASS" in out
+
+
+@pytest.mark.slow
+def test_pallas_train_step_lowers_aot():
+    out = _run("steps_pallas_lower.py")
+    assert "STEPS_PALLAS_LOWER_PASS" in out
