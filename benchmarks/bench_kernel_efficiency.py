@@ -1,7 +1,8 @@
-"""Paper Fig. 3 — kernel efficiency vs sharding granularity.
+"""Paper Fig. 3 — kernel efficiency vs sharding granularity — plus the
+``kernel`` suite measuring the flattened work-queue schedule.
 
-Two input patterns at the same total length: one long document vs many
-short documents (the paper uses 1x128K vs 16x8K).  Three views:
+Fig. 3 (``run``): two input patterns at the same total length, one long
+document vs many short documents (the paper uses 1x128K vs 16x8K):
 
   * measured CPU latency of the XLA attention path (relative effect);
   * visit-table occupancy of the Pallas kernel (visited/full fractions —
@@ -10,10 +11,28 @@ short documents (the paper uses 1x128K vs 16x8K).  Three views:
 
 Scaled to 1x16K vs 16x1K so the CPU measurement is tractable; the
 structure (not the absolute size) drives the effect.
+
+Kernel-scheduling suite (``run_kernel``, ``BENCH_kernel.json``): the
+rect-vs-flat grid comparison of ISSUE 3 on uniform vs heavy-tail doc
+mixes —
+
+  * **grid steps executed** per head at 131072 tokens (host table
+    accounting: rect = nq * V_max rows-x-padded-width; flat = the actual
+    visit count + empty-row sentinels + pow2 tail);
+  * **padding-waste ratio** (fraction of launched steps that do no
+    work) for both schedules, and the flat/rect step-reduction factor;
+  * **wall time** of both schedules in interpret mode at a reduced size
+    (every grid step pays a fixed interpreter cost, so step reduction
+    shows up directly; the TPU win tracks the same step counts) plus
+    host table-build time at full size;
+  * fwd + grad **parity** between the two schedules (allclose at f32
+    tolerance — same visit set, different accumulation order).
 """
 
 from __future__ import annotations
 
+import json
+import os
 import time
 
 import numpy as np
@@ -26,6 +45,9 @@ from repro.kernels.doc_attention import build_block_tables
 from repro.kernels.ops import doc_attention_xla
 
 from .cost_model import HW, ModelDims, step_breakdown
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+KERNEL_JSON = os.path.join(ROOT, "BENCH_kernel.json")
 
 
 def _measure(doc_lens, T, H, D, iters=3):
@@ -73,4 +95,165 @@ def run() -> list[str]:
     model = step_breakdown(plan, dims, train=False)
     rows.append(f"fig3_perdoc_cp8_16x1k,,shards={len(plan.shards)};"
                 f"v5e_attn_us={model['attn_s']*1e6:.1f}")
+    return rows
+
+
+# ===================================================================== #
+# kernel-scheduling suite: rect vs flat work-queue grids
+# ===================================================================== #
+def _mix_layout(doc_lens):
+    lens = np.asarray(doc_lens, np.int64)
+    doc = np.repeat(np.arange(len(lens), dtype=np.int32), lens)[None]
+    pos = np.concatenate([np.arange(l, dtype=np.int32)
+                          for l in lens])[None]
+    return doc, pos
+
+
+def _mixes(T):
+    """Uniform vs heavy-tail doc mixes at total length T (the skew FlashCP
+    plans around: one document owns half the context, a tail of short
+    docs the rest)."""
+    n_uni = 16
+    heavy = [T // 2] + [T // 64] * 32
+    assert sum(heavy) == T
+    return {
+        "uniform": [T // n_uni] * n_uni,
+        "heavy_tail": heavy,
+    }
+
+
+def _step_stats(doc, pos, block):
+    t0 = time.perf_counter()
+    tabs = build_block_tables(doc, pos, doc, pos, block_q=block,
+                              block_k=block)
+    build_us = (time.perf_counter() - t0) * 1e6
+    t1 = time.perf_counter()
+    g = tabs.grid_steps()       # forces the lazy work-queue flatten
+    queue_us = (time.perf_counter() - t1) * 1e6
+    return tabs, {
+        "rect_steps": g["rect_fwd"],
+        "flat_steps": g["flat_fwd"],
+        "visits": g["visits"],
+        "step_reduction_x": g["rect_fwd"] / max(g["flat_fwd"], 1),
+        "padding_waste_rect": 1.0 - g["visits"] / max(g["rect_fwd"], 1),
+        "padding_waste_flat": 1.0 - g["visits"] / max(g["flat_fwd"], 1),
+        "table_build_us": build_us,         # rect tables (all consumers)
+        "queue_flatten_us": queue_us,       # extra cost of grid="flat"
+    }
+
+
+def _interpret_wall(doc, pos, tabs, *, iters):
+    """Interpret-mode kernel wall per schedule (fixed per-step cost makes
+    this a faithful proxy for the step-count effect)."""
+    from repro.kernels.ops import doc_flash_attention
+
+    H, D = 2, 64
+    T = doc.shape[1]
+    rng = np.random.default_rng(0)
+    q = jnp.asarray(rng.standard_normal((1, H, T, D)).astype(np.float32))
+    k = jnp.asarray(rng.standard_normal((1, H, T, D)).astype(np.float32))
+    v = jnp.asarray(rng.standard_normal((1, H, T, D)).astype(np.float32))
+    jd, jp = jnp.asarray(doc), jnp.asarray(pos)
+
+    out = {}
+    outs = {}
+    for grid in ("rect", "flat"):
+        f = jax.jit(lambda q, k, v, g=grid: doc_flash_attention(
+            q, k, v, jd, jp, jd, jp, tabs.as_jax() if g == "rect"
+            else tabs.flat_as_jax(), grid=g, block_q=tabs.block_q,
+            block_k=tabs.block_k, interpret=True))
+        outs[grid] = f(q, k, v).block_until_ready()
+        ts = []
+        for _ in range(iters):
+            t0 = time.perf_counter()
+            f(q, k, v).block_until_ready()
+            ts.append(time.perf_counter() - t0)
+        out[f"{grid}_us"] = min(ts) * 1e6
+    out["speedup_x"] = out["rect_us"] / max(out["flat_us"], 1e-9)
+    out["max_abs_diff"] = float(jnp.max(jnp.abs(
+        outs["flat"] - outs["rect"])))
+    return out
+
+
+def _parity(block):
+    """fwd + grad flat-vs-rect agreement on a small random doc layout."""
+    from repro.kernels.ops import doc_flash_attention
+
+    rng = np.random.default_rng(1)
+    B, Hq, Hkv, T, D = 1, 4, 2, 512, 16
+    doc = np.sort(rng.integers(0, 5, (B, T)).astype(np.int32), 1)
+    pos = np.zeros_like(doc)
+    for d in np.unique(doc):
+        m = doc[0] == d
+        pos[0, m] = np.arange(m.sum())
+    tabs = build_block_tables(doc, pos, doc, pos, block_q=block,
+                              block_k=block)
+    q = jnp.asarray(rng.standard_normal((B, Hq, T, D)).astype(np.float32))
+    k = jnp.asarray(rng.standard_normal((B, Hkv, T, D)).astype(np.float32))
+    v = jnp.asarray(rng.standard_normal((B, Hkv, T, D)).astype(np.float32))
+    jd, jp = jnp.asarray(doc), jnp.asarray(pos)
+
+    res = {}
+    for grid in ("rect", "flat"):
+        def f(q, k, v, g=grid):
+            return jnp.sum(doc_flash_attention(
+                q, k, v, jd, jp, jd, jp, tabs, grid=g,
+                interpret=True) ** 2)
+        loss, grads = jax.value_and_grad(f, (0, 1, 2))(q, k, v)
+        res[grid] = (loss, grads)
+    fwd_diff = abs(float(res["flat"][0]) - float(res["rect"][0])) \
+        / max(abs(float(res["rect"][0])), 1e-9)
+    grad_diff = max(float(jnp.max(jnp.abs(a - b)))
+                    for a, b in zip(res["flat"][1], res["rect"][1]))
+    return {"fwd_rel_diff": fwd_diff, "grad_max_abs_diff": grad_diff,
+            "pass": bool(fwd_diff < 1e-5 and grad_diff < 5e-4)}
+
+
+def run_kernel(smoke: bool = False):
+    """``kernel`` suite: emits CSV rows and writes BENCH_kernel.json."""
+    block = 128
+    T_steps = 16_384 if smoke else 131_072      # step accounting size
+    T_wall = 1_024 if smoke else 4_096          # interpret-wall size
+    iters = 1 if smoke else 3
+
+    results = {"config": {"block": block, "tokens": T_steps,
+                          "wall_tokens": T_wall, "smoke": smoke}}
+    rows = []
+    mixes = {}
+    for name, lens in _mixes(T_steps).items():
+        doc, pos = _mix_layout(lens)
+        _, stats = _step_stats(doc, pos, block)
+        stats["num_docs"] = len(lens)
+        mixes[name] = stats
+        rows.append(f"kernel_{name}_steps_rect,,{stats['rect_steps']}")
+        rows.append(f"kernel_{name}_steps_flat,,{stats['flat_steps']}")
+        rows.append(f"kernel_{name}_step_reduction,,"
+                    f"{stats['step_reduction_x']:.2f}x")
+        rows.append(f"kernel_{name}_padding_waste_rect,,"
+                    f"{stats['padding_waste_rect']:.3f}")
+        rows.append(f"kernel_{name}_padding_waste_flat,,"
+                    f"{stats['padding_waste_flat']:.3f}")
+        rows.append(f"kernel_{name}_table_build,"
+                    f"{stats['table_build_us']:.0f},")
+    results["mixes"] = mixes
+
+    wall = {"tokens": T_wall}
+    for name, lens in _mixes(T_wall).items():
+        doc, pos = _mix_layout(lens)
+        tabs, _ = _step_stats(doc, pos, block)
+        wall[name] = _interpret_wall(doc, pos, tabs, iters=iters)
+        rows.append(f"kernel_{name}_interpret_rect,"
+                    f"{wall[name]['rect_us']:.0f},")
+        rows.append(f"kernel_{name}_interpret_flat,"
+                    f"{wall[name]['flat_us']:.0f},")
+        rows.append(f"kernel_{name}_interpret_speedup,,"
+                    f"{wall[name]['speedup_x']:.2f}x")
+    results["interpret_wall"] = wall
+
+    results["parity"] = _parity(block)
+    rows.append(f"kernel_parity_pass,,{results['parity']['pass']}")
+
+    with open(KERNEL_JSON, "w") as f:
+        json.dump(results, f, indent=1)
+    rows.append(f"kernel_json,,{KERNEL_JSON}")
     return rows

@@ -8,14 +8,21 @@ row is a ratio/summary).  Suites:
   fig6   latency breakdown (comm/attn/other) + comm-reduction headline
   fig7   context-window sweep
   table2 exact (B&B) vs heuristic optimality
-  extra  planner runtime
+  planner  planner runtime
   overlap blocking vs chunked CP execution + visit-table builder
+  kernel  rect vs flat work-queue kernel grids (BENCH_kernel.json)
 
 Usage: PYTHONPATH=src python -m benchmarks.run [suite ...]
+       PYTHONPATH=src python -m benchmarks.run --suite kernel [--smoke]
+
+``--smoke`` runs size-reduced variants of the suites that support it
+(CI tier-2 uses ``--suite kernel --smoke``).
 """
 
 from __future__ import annotations
 
+import argparse
+import inspect
 import sys
 import time
 
@@ -33,12 +40,29 @@ def main() -> None:
         "table2": bench_ilp_vs_heuristic.run,
         "planner": bench_planner_runtime.run,
         "overlap": bench_overlap.run,
+        "kernel": bench_kernel_efficiency.run_kernel,
     }
-    want = sys.argv[1:] or list(suites)
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("names", nargs="*", metavar="suite",
+                    help="suites to run (positional form)")
+    ap.add_argument("--suite", action="append", default=[],
+                    choices=list(suites), help="suite to run (repeatable)")
+    ap.add_argument("--smoke", action="store_true",
+                    help="size-reduced run for suites that support it")
+    args = ap.parse_args()
+
+    want = args.suite + args.names or list(suites)
+    unknown = [n for n in want if n not in suites]
+    if unknown:
+        ap.error(f"unknown suite(s) {unknown}; choose from {list(suites)}")
     print("name,us_per_call,derived")
     for name in want:
+        fn = suites[name]
+        kwargs = {}
+        if args.smoke and "smoke" in inspect.signature(fn).parameters:
+            kwargs["smoke"] = True
         t0 = time.time()
-        for row in suites[name]():
+        for row in fn(**kwargs):
             print(row, flush=True)
         print(f"suite_{name}_wallclock,{(time.time()-t0)*1e6:.0f},",
               flush=True)

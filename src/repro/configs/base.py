@@ -153,6 +153,10 @@ class RunConfig:
     # chunked = overlapped KV exchange (ppermute hops merged via online
     # LSE); none = the monolithic blocking-collective islands
     cp_overlap: Literal["chunked", "none"] = "chunked"
+    # Pallas kernel schedule: flat = flattened 1D work-queue grid (one
+    # step per actual visit, LPT row order); rect = the padded
+    # rectangular visit grid (parity baseline)
+    kernel_grid: Literal["flat", "rect"] = "flat"
     target_imbalance: float = 1.05
     # optimizer
     lr: float = 3e-4

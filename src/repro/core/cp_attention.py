@@ -27,7 +27,11 @@ strategies differ only in *which* KV subsets exist and how they move:
 Any strategy runs the Pallas block-sparse kernel per subset when
 ``impl="pallas"`` and per-rank visit tables are threaded in (the planner
 emits them — :func:`repro.planner.encode.emit_visit_tables`; the data
-pipeline forwards them as ``tab_*`` plan arrays).
+pipeline forwards them as ``tab_*`` plan arrays).  ``grid`` picks the
+kernel schedule: ``"flat"`` walks the flattened work-queue tables (one
+grid step per actual visit), ``"rect"`` the padded rectangular layout
+(parity baseline); the table key families differ accordingly
+(``*_{kv,q}_{idx,nvis}`` vs ``*_{fq,rq}_{row,col,flags}``).
 
 A self-ownership subtlety of the compact buffer: the monolithic all-gather
 includes this rank's own contribution, which is *also* present as local
@@ -50,6 +54,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.compat import axis_size, shard_map
+from repro.table_layout import GRID_TABLE_HALF, table_keys
 from jax.sharding import PartitionSpec as P
 
 from repro.models.context import ExecContext, local_ssm_scan
@@ -121,7 +126,7 @@ def finalize_partial(part, dtype):
 
 def _partial_masked_attention(q, k, v, q_doc, q_pos, kv_doc, kv_pos, *,
                               impl, scale, q_chunk, interpret, tables=None,
-                              block_q=128, block_k=128):
+                              block_q=128, block_k=128, grid="rect"):
     """Merge-ready partial against one KV subset, on either kernel.
 
     The Pallas kernel emits the normalized ``(o, lse)`` form, re-expressed
@@ -138,7 +143,7 @@ def _partial_masked_attention(q, k, v, q_doc, q_pos, kv_doc, kv_pos, *,
         o, lse = kops.doc_flash_attention(
             q, k, v, q_doc, q_pos, kv_doc, kv_pos, tables, scale=scale,
             interpret=interpret, block_q=block_q, block_k=block_k,
-            partial=True)
+            grid=grid, partial=True)
         m = jnp.maximum(lse, NEG)
         return o.astype(jnp.float32), m, jnp.ones_like(m)
     return kops.doc_attention_xla(q, k, v, q_doc, q_pos, kv_doc, kv_pos,
@@ -147,14 +152,15 @@ def _partial_masked_attention(q, k, v, q_doc, q_pos, kv_doc, kv_pos, *,
 
 def _masked_attention(q, k, v, q_doc, q_pos, kv_doc, kv_pos, *, impl,
                       q_chunk, interpret, tables=None, block_q=128,
-                      block_k=128):
+                      block_k=128, grid="rect"):
     from repro.kernels import ops as kops
 
     if impl == "pallas":
         assert tables is not None, "pallas CP attention needs host tables"
         return kops.doc_flash_attention(q, k, v, q_doc, q_pos, kv_doc,
                                         kv_pos, tables, interpret=interpret,
-                                        block_q=block_q, block_k=block_k)
+                                        block_q=block_q, block_k=block_k,
+                                        grid=grid)
     return kops.doc_attention_xla(q, k, v, q_doc, q_pos, kv_doc, kv_pos,
                                   q_chunk=q_chunk)
 
@@ -299,7 +305,7 @@ def _hop_xs_of(hop_tabs):
 
 def _flashcp_island(q, k, v, doc, pos, send_idx, gath_doc, gath_pos,
                     *, impl, q_chunk, interpret, tables=None, block_q=128,
-                    block_k=128, kv_comm_dtype="native"):
+                    block_k=128, grid="rect", kv_comm_dtype="native"):
     b = q.shape[0]
     N = axis_size(CP_AXIS)
     me = jax.lax.axis_index(CP_AXIS)
@@ -330,13 +336,15 @@ def _flashcp_island(q, k, v, doc, pos, send_idx, gath_doc, gath_pos,
                      for t in tables)
     return _masked_attention(q, kv_k, kv_v, doc, pos, kv_doc, kv_pos,
                              impl=impl, q_chunk=q_chunk, interpret=interpret,
-                             tables=tabs, block_q=block_q, block_k=block_k)
+                             tables=tabs, block_q=block_q, block_k=block_k,
+                             grid=grid)
 
 
 def _flashcp_island_chunked(q, k, v, doc, pos, send_idx, gath_doc, gath_pos,
                             *, impl, scale, q_chunk, interpret,
                             loc_tables=None, hop_tables=None, block_q=128,
-                            block_k=128, kv_comm_dtype="native"):
+                            block_k=128, grid="rect",
+                            kv_comm_dtype="native"):
     """Overlapped sharding-aware exchange: the compacted Eq.-5 buffer
     moves in N-1 ppermute hops; each arriving buffer attends while the
     next hop is in flight, and local-KV attention overlaps hop 0.  After
@@ -356,7 +364,7 @@ def _flashcp_island_chunked(q, k, v, doc, pos, send_idx, gath_doc, gath_pos,
 
     attend = functools.partial(
         _partial_masked_attention, impl=impl, scale=scale, q_chunk=q_chunk,
-        interpret=interpret, block_q=block_q, block_k=block_k)
+        interpret=interpret, block_q=block_q, block_k=block_k, grid=grid)
     init = attend(q, k, v, doc, pos, doc, pos,
                   tables=_unpack_rank_tables(loc_tables))
 
@@ -370,7 +378,7 @@ def _flashcp_island_chunked(q, k, v, doc, pos, send_idx, gath_doc, gath_pos,
 
 
 def _allgather_island(q, k, v, doc, pos, *, impl, q_chunk, interpret,
-                      tables=None, block_q=128, block_k=128,
+                      tables=None, block_q=128, block_k=128, grid="rect",
                       kv_comm_dtype="native"):
     if kv_comm_dtype == "int8":
         kg = _quantized_gather(k, CP_AXIS)
@@ -383,12 +391,12 @@ def _allgather_island(q, k, v, doc, pos, *, impl, q_chunk, interpret,
     return _masked_attention(q, kg, vg, doc, pos, gdoc, gpos, impl=impl,
                              q_chunk=q_chunk, interpret=interpret,
                              tables=_unpack_rank_tables(tables),
-                             block_q=block_q, block_k=block_k)
+                             block_q=block_q, block_k=block_k, grid=grid)
 
 
 def _gather_island_chunked(q, k, v, doc, pos, *, impl, scale, q_chunk,
                            interpret, loc_tables=None, hop_tables=None,
-                           block_q=128, block_k=128,
+                           block_q=128, block_k=128, grid="rect",
                            kv_comm_dtype="native"):
     """Overlapped full-KV exchange (allgather strategies, ring): the full
     local KV ring-rotates in N-1 hops on the merge substrate — identical
@@ -396,7 +404,7 @@ def _gather_island_chunked(q, k, v, doc, pos, *, impl, scale, q_chunk,
     per-hop attention."""
     attend = functools.partial(
         _partial_masked_attention, impl=impl, scale=scale, q_chunk=q_chunk,
-        interpret=interpret, block_q=block_q, block_k=block_k)
+        interpret=interpret, block_q=block_q, block_k=block_k, grid=grid)
     init = attend(q, k, v, doc, pos, doc, pos,
                   tables=_unpack_rank_tables(loc_tables))
 
@@ -526,11 +534,9 @@ def _ssm_island(a, x):
 # ===================================================================== #
 # context factory
 # ===================================================================== #
-MONO_TABLE_KEYS = ("tab_kv_idx", "tab_kv_nvis", "tab_q_idx", "tab_q_nvis")
-LOC_TABLE_KEYS = ("tab_loc_kv_idx", "tab_loc_kv_nvis",
-                  "tab_loc_q_idx", "tab_loc_q_nvis")
-HOP_TABLE_KEYS = ("tab_hop_kv_idx", "tab_hop_kv_nvis",
-                  "tab_hop_q_idx", "tab_hop_q_nvis")
+MONO_TABLE_KEYS = table_keys("tab_", "rect")
+LOC_TABLE_KEYS = table_keys("tab_loc_", "rect")
+HOP_TABLE_KEYS = table_keys("tab_hop_", "rect")
 
 
 def make_cp_context(
@@ -547,6 +553,7 @@ def make_cp_context(
     tables: tuple | None = None,
     block_q: int = 128,
     block_k: int = 128,
+    grid: str = "rect",
     kv_comm_dtype: str = "native",
 ) -> ExecContext:
     """Build the ExecContext driving a CP training/prefill step.
@@ -558,18 +565,23 @@ def make_cp_context(
 
     ``overlap="chunked"`` (default) runs the overlapped chunked-KV
     exchange engine; ``overlap="none"`` the original monolithic islands.
-    ``impl="pallas"`` requires matching visit tables: monolithic islands
-    take the 4-tuple layout (``tables=`` or ``tab_*`` plan arrays),
-    the chunked engine per-rank local + per-hop tables (``tab_loc_*`` /
-    ``tab_hop_*`` plan arrays).
+    ``impl="pallas"`` requires visit tables matching ``grid``: the
+    rectangular 4-tuple layout for ``grid="rect"`` (``tables=`` or
+    ``tab_*`` plan arrays) or the flattened work-queue 6-tuple layout
+    for ``grid="flat"`` (``tab_*{fq,rq}_*`` plan arrays); the chunked
+    engine takes per-rank local + per-hop sets either way (``tab_loc_*``
+    / ``tab_hop_*``).
     """
     overlap = resolve_overlap(strategy, impl, overlap)
+    if grid not in ("rect", "flat"):
+        raise ValueError(f"unknown kernel grid {grid!r}")
     doc = plan_arrays["doc"]
     pos = plan_arrays["pos"]
     b = tuple(batch_axes) if isinstance(batch_axes, (tuple, list)) \
         else (batch_axes,)
     B = b[0] if len(b) == 1 else b      # P dim entry: name or tuple of names
     scale = head_dim ** -0.5
+    n_tab = 2 * GRID_TABLE_HALF[grid]   # arrays per table set
 
     qkv_spec = P(B, None, CP_AXIS, None)
     tok_spec = P(B, CP_AXIS)
@@ -585,23 +597,26 @@ def make_cp_context(
     def _chunked_tables(what):
         if impl != "pallas":
             return ()
-        loc = _plan_tables(LOC_TABLE_KEYS)
-        hop = _plan_tables(HOP_TABLE_KEYS)
+        loc = _plan_tables(table_keys("tab_loc_", grid))
+        hop = _plan_tables(table_keys("tab_hop_", grid))
         if loc is None or hop is None:
             raise ValueError(
                 f"pallas {what} with overlap='chunked' needs per-rank "
-                "local + per-hop visit tables (tab_loc_*/tab_hop_* plan "
-                "arrays; see repro.planner.encode.emit_visit_tables)")
+                f"local + per-hop grid={grid!r} visit tables "
+                "(tab_loc_*/tab_hop_* plan arrays; see "
+                "repro.planner.encode.emit_visit_tables)")
         return loc + hop
 
     def _mono_tables(what):
         if impl != "pallas":
             return ()
-        mono = tables if tables is not None else _plan_tables(MONO_TABLE_KEYS)
+        mono = tables if tables is not None \
+            else _plan_tables(table_keys("tab_", grid))
         if mono is None:
             raise ValueError(
-                f"pallas {what} needs visit tables (tables= or tab_* plan "
-                "arrays; see repro.planner.encode.emit_visit_tables)")
+                f"pallas {what} needs grid={grid!r} visit tables "
+                "(tables= or tab_* plan arrays; see "
+                "repro.planner.encode.emit_visit_tables)")
         return tuple(mono)
 
     if strategy in ("flashcp", "contiguous"):
@@ -616,8 +631,9 @@ def make_cp_context(
                 return _flashcp_island_chunked(
                     q, k, v, d_, p_, si, gd, gp, impl=impl, scale=scale,
                     q_chunk=q_chunk, interpret=interpret,
-                    loc_tables=tt[:4] or None, hop_tables=tt[4:] or None,
-                    block_q=block_q, block_k=block_k,
+                    loc_tables=tt[:n_tab] or None,
+                    hop_tables=tt[n_tab:] or None,
+                    block_q=block_q, block_k=block_k, grid=grid,
                     kv_comm_dtype=kv_comm_dtype)
         else:
             tabs = _mono_tables("flashcp")
@@ -626,7 +642,7 @@ def make_cp_context(
                 return _flashcp_island(
                     q, k, v, d_, p_, si, gd, gp, impl=impl, q_chunk=q_chunk,
                     interpret=interpret, tables=tt or None,
-                    block_q=block_q, block_k=block_k,
+                    block_q=block_q, block_k=block_k, grid=grid,
                     kv_comm_dtype=kv_comm_dtype)
 
         in_specs = base_specs + _table_specs(tabs)
@@ -647,8 +663,9 @@ def make_cp_context(
                 return _gather_island_chunked(
                     q, k, v, d_, p_, impl=impl, scale=scale,
                     q_chunk=q_chunk, interpret=interpret,
-                    loc_tables=tt[:4] or None, hop_tables=tt[4:] or None,
-                    block_q=block_q, block_k=block_k,
+                    loc_tables=tt[:n_tab] or None,
+                    hop_tables=tt[n_tab:] or None,
+                    block_q=block_q, block_k=block_k, grid=grid,
                     kv_comm_dtype=kv_comm_dtype)
         elif is_ring:
             tabs = ()
@@ -661,7 +678,7 @@ def make_cp_context(
                 return _allgather_island(
                     q, k, v, d_, p_, impl=impl, q_chunk=q_chunk,
                     interpret=interpret, tables=tt or None,
-                    block_q=block_q, block_k=block_k,
+                    block_q=block_q, block_k=block_k, grid=grid,
                     kv_comm_dtype=kv_comm_dtype)
 
         in_specs = [qkv_spec, qkv_spec, qkv_spec, tok_spec, tok_spec] \

@@ -60,6 +60,7 @@ class PipelineConfig:
     # Pallas visit-table emission (attention_impl="pallas" steps)
     emit_tables: bool = False
     table_overlap: str = "chunked"   # matches RunConfig.cp_overlap
+    table_grid: str = "flat"         # matches RunConfig.kernel_grid
     table_block_q: int = 128
     table_block_k: int = 128
 
@@ -137,8 +138,8 @@ def make_batch(cfg: PipelineConfig, step: int, dp_rank: int = 0,
             stack["gath_doc"] if style_needs_gath else None,
             stack["gath_pos"] if style_needs_gath else None,
             num_workers=cfg.cp_size, strategy=exec_style,
-            overlap=overlap, block_q=cfg.table_block_q,
-            block_k=cfg.table_block_k))
+            overlap=overlap, grid=cfg.table_grid,
+            block_q=cfg.table_block_q, block_k=cfg.table_block_k))
     batch["tokens"] = tokens
     batch["labels"] = labels
     batch["stats"] = {

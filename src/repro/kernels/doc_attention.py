@@ -4,15 +4,30 @@ block-level sparsity (the compute hot-spot of FlashCP training).
 TPU adaptation of the paper's kernel-efficiency insight (§2.3, Fig. 3):
 instead of CUDA varlen batching, we exploit the *structure* FlashCP's
 planner creates — whole documents laid out contiguously — with
-splash-attention-style **visit tables**:
+splash-attention-style **visit tables**: the host enumerates, per query
+block, exactly the KV blocks that contain any visible (same-document,
+causal) key, and the kernel fetches KV via scalar-prefetched ``index_map``
+lookups, so *skipped blocks are never fetched from HBM, let alone
+computed*.
 
-* the host enumerates, per query block, exactly the KV blocks that contain
-  any visible (same-document, causal) key;
-* the kernel's grid iterates only those visits; the KV ``index_map`` reads
-  the visit table via scalar prefetch, so *skipped blocks are never fetched
-  from HBM, let alone computed*;
-* padded visit slots repeat the previous block index, which Pallas's
-  revisiting pipeline turns into a no-op fetch.
+Two grid schedules walk those tables (``grid=`` on every kernel entry):
+
+* ``grid="rect"`` — the original rectangular launch ``(B, H, nq, V)``
+  where ``V`` is the *maximum* per-row visit count.  Padded visit slots
+  repeat the previous block index (a no-op refetch under Pallas's
+  revisiting pipeline) and are compute-gated by the per-row counts, but
+  every padded slot still costs a grid step: on imbalanced document
+  mixes the longest row's ``V`` taxes all ``B * nq`` rows.
+* ``grid="flat"`` — a **flattened 1D work queue**: the host emits the
+  CSR-style visit list itself, one grid step per *actual* visit, with
+  per-step ``(row, col)`` owner metadata and FIRST/LAST/VALID flags
+  marking block-row boundaries (``build_work_queue``).  Rows are sorted
+  by descending visit count (greedy LPT — long rows schedule first, so
+  a core-split grid stays balanced on skewed doc mixes), each row's
+  steps stay contiguous (the accumulator scratch carries one row at a
+  time), and zero-visit rows get a single sentinel step that writes
+  their zero output.  Padding waste is erased: total steps equal the
+  visit count (plus one sentinel per empty row and a pow2 tail bucket).
 
 Whole-doc placement ⇒ long contiguous visible ranges ⇒ few partial blocks
 and maximal MXU occupancy — exactly the paper's "kernel efficiency" axis,
@@ -25,7 +40,8 @@ padding.  Visibility: same doc AND q_pos >= kv_pos.
 
 The pure-jnp oracle lives in ``ref.py``; jit'd wrappers + custom VJP in
 ``ops.py``.  All kernels are validated against the oracle with
-``interpret=True`` sweeps in tests/test_kernels.py.
+``interpret=True`` sweeps in tests/test_kernels.py; flat-vs-rect parity
+and queue/permutation properties live in tests/test_workqueue.py.
 """
 
 from __future__ import annotations
@@ -39,14 +55,20 @@ import numpy as np
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.table_layout import GRID_TABLE_HALF
+
 __all__ = [
     "BlockTables",
     "build_block_tables",
+    "build_work_queue",
     "flash_fwd",
     "flash_bwd_dq",
     "flash_bwd_dkv",
     "DEFAULT_BLOCK_Q",
     "DEFAULT_BLOCK_K",
+    "FLAG_FIRST",
+    "FLAG_LAST",
+    "FLAG_VALID",
 ]
 
 DEFAULT_BLOCK_Q = 128
@@ -54,6 +76,11 @@ DEFAULT_BLOCK_K = 128
 NEG = -1e30  # finite -inf stand-in inside kernels (no nan from inf-inf)
 
 KIND_SKIP, KIND_PARTIAL, KIND_FULL = 0, 1, 2
+
+# work-queue step flags (build_work_queue / the grid="flat" kernels)
+FLAG_FIRST = 1   # first step of its block-row: reset the accumulators
+FLAG_LAST = 2    # last step of its block-row: finalize + write outputs
+FLAG_VALID = 4   # a real visit (unset on empty-row sentinels / pad tail)
 
 
 # ===================================================================== #
@@ -63,10 +90,21 @@ KIND_SKIP, KIND_PARTIAL, KIND_FULL = 0, 1, 2
 class BlockTables:
     """Scalar-prefetch tables driving the sparse grid.
 
-    fwd:  for each (b, q-block): the KV blocks to visit.
-    bwd:  for each (b, kv-block): the Q blocks that visit it (reverse map).
-    Padded slots repeat the last valid index (cheap revisits) and are gated
-    by the ``*_nvis`` counts.
+    Rectangular layout (``grid="rect"``):
+      fwd:  for each (b, q-block): the KV blocks to visit.
+      bwd:  for each (b, kv-block): the Q blocks that visit it (reverse
+      map).  Padded slots repeat the last valid index (cheap revisits)
+      and are gated by the ``*_nvis`` counts.
+
+    Flattened work-queue layout (``grid="flat"``): per sample, the same
+    visit sets as a CSR step list — ``fq_*`` walks q-block rows (fwd +
+    dQ), ``rq_*`` kv-block rows (dKV).  ``*_row``/``*_col`` are the
+    per-step owner block and visited block; ``*_flags`` carries the
+    FIRST/LAST/VALID row-boundary bits.  Rows are LPT-ordered
+    (descending visit count) and zero-visit rows hold one !VALID
+    sentinel step so their output still gets written.  The queues are
+    derived lazily from the rectangular tables on first access
+    (rect-only consumers never pay the flatten cost).
     """
 
     kv_idx: np.ndarray    # (B, nq, Vk) int32
@@ -78,10 +116,59 @@ class BlockTables:
     # occupancy stats — the kernel-efficiency metric used by benchmarks
     visited_frac: float   # visited blocks / all blocks
     full_frac: float      # fully-visible blocks / visited blocks
+    # lazily-built flattened work queues (same visit sets, 1D schedule)
+    _queues: tuple = dataclasses.field(default=None, repr=False)
+
+    def _flat(self):
+        if self._queues is None:
+            self._queues = (*build_work_queue(self.kv_idx, self.kv_nvis),
+                            *build_work_queue(self.q_idx, self.q_nvis))
+        return self._queues
+
+    @property
+    def fq_row(self):     # (B, Sf) int32 owner q block per step
+        return self._flat()[0]
+
+    @property
+    def fq_col(self):     # (B, Sf) int32 visited KV block
+        return self._flat()[1]
+
+    @property
+    def fq_flags(self):   # (B, Sf) int32 FIRST|LAST|VALID bits
+        return self._flat()[2]
+
+    @property
+    def rq_row(self):     # (B, Sr) int32 owner KV block per step
+        return self._flat()[3]
+
+    @property
+    def rq_col(self):     # (B, Sr) int32 visiting Q block
+        return self._flat()[4]
+
+    @property
+    def rq_flags(self):   # (B, Sr) int32
+        return self._flat()[5]
 
     def as_jax(self):
         return (jnp.asarray(self.kv_idx), jnp.asarray(self.kv_nvis),
                 jnp.asarray(self.q_idx), jnp.asarray(self.q_nvis))
+
+    def flat_as_jax(self):
+        """The 6-tuple the ``grid="flat"`` kernels consume."""
+        return tuple(jnp.asarray(a) for a in self._flat())
+
+    def grid_steps(self) -> dict[str, int]:
+        """Executed grid-step counts per (head, ) of both schedules — the
+        padding-waste accounting the kernel-efficiency bench reports."""
+        B, nq, Vk = self.kv_idx.shape
+        _, nk, Vq = self.q_idx.shape
+        return {
+            "rect_fwd": B * nq * Vk,
+            "rect_rev": B * nk * Vq,
+            "flat_fwd": int(self.fq_row.shape[0] * self.fq_row.shape[1]),
+            "flat_rev": int(self.rq_row.shape[0] * self.rq_row.shape[1]),
+            "visits": int(self.kv_nvis.sum()),
+        }
 
 
 def _pad_lists(lists: list[list[int]], width: int) -> np.ndarray:
@@ -91,6 +178,56 @@ def _pad_lists(lists: list[list[int]], width: int) -> np.ndarray:
             out[i, : len(l)] = l
             out[i, len(l):] = l[-1]  # repeat-last padding => no-op refetch
     return out
+
+
+def build_work_queue(idx: np.ndarray, nvis: np.ndarray, *,
+                     pad_to_steps: int | None = None):
+    """Flatten rectangular visit tables into the 1D work-queue schedule.
+
+    ``idx`` (B, R, V) / ``nvis`` (B, R) are one direction of a
+    :class:`BlockTables` (kv_idx/kv_nvis for the fwd+dQ queue,
+    q_idx/q_nvis for the dKV reverse queue).  Returns ``(row, col,
+    flags)``, each (B, S) int32, where per sample the steps are the
+    row-major visit list re-ordered so rows run in descending visit
+    count (greedy LPT — the longest block-rows schedule first) with each
+    row's visits contiguous and in ascending block order.  Rows with
+    zero visits contribute one sentinel step (``FLAG_VALID`` unset,
+    FIRST|LAST set) so the kernel still zero-initializes and writes
+    their output block.  Samples are padded to a common ``S`` (and to
+    ``pad_to_steps`` if given) by repeating the final step with flags 0
+    — a no-op refetch that never re-triggers init/finalize.
+    """
+    idx = np.asarray(idx, np.int32)
+    nvis = np.asarray(nvis)
+    B, R, V = idx.shape
+    nv = nvis.astype(np.int64)
+    counts = np.maximum(nv, 1)              # sentinel step for empty rows
+    s_real = counts.sum(axis=1)
+    S = int(s_real.max()) if B else 1
+    if pad_to_steps is not None:
+        assert pad_to_steps >= S, (pad_to_steps, S)
+        S = pad_to_steps
+    row = np.zeros((B, S), np.int32)
+    col = np.zeros((B, S), np.int32)
+    flags = np.zeros((B, S), np.int32)
+    for b in range(B):
+        order = np.argsort(-nv[b], kind="stable")
+        oc = counts[b][order]
+        total = int(s_real[b])
+        excl = np.cumsum(oc) - oc
+        owner = np.repeat(order, oc).astype(np.int64)
+        offs = np.arange(total, dtype=np.int64) - np.repeat(excl, oc)
+        valid = offs < nv[b][owner]
+        row[b, :total] = owner
+        col[b, :total] = idx[b][owner, np.minimum(offs, V - 1)]
+        flags[b, :total] = (
+            FLAG_FIRST * (offs == 0)
+            + FLAG_LAST * (offs == counts[b][owner] - 1)
+            + FLAG_VALID * valid)
+        if total < S:                        # repeat-last no-op pad tail
+            row[b, total:] = row[b, total - 1]
+            col[b, total:] = col[b, total - 1]
+    return row, col, flags
 
 
 _BIG = np.int32(1 << 30)     # invalid-token sentinel in int32 summaries
@@ -392,8 +529,46 @@ def _dot_f32(a, b):
 
 
 # ===================================================================== #
-# forward kernel
+# forward kernel: shared row bodies + the two grid schedules
 # ===================================================================== #
+def _fwd_init(acc_ref, m_ref, l_ref):
+    acc_ref[...] = jnp.zeros_like(acc_ref)
+    m_ref[...] = jnp.full_like(m_ref, NEG)
+    l_ref[...] = jnp.zeros_like(l_ref)
+
+
+def _fwd_visit(q_ref, k_ref, v_ref, qd_ref, qp_ref, kd_ref, kp_ref,
+               acc_ref, m_ref, l_ref, scale):
+    q = q_ref[0, 0].astype(jnp.float32)
+    k = k_ref[0, 0]
+    s = _dot_f32(q, k.T.astype(jnp.float32)) * scale          # (bq, bk) f32
+    vis = _visible(qd_ref, qp_ref, kd_ref, kp_ref)
+    s = jnp.where(vis, s, NEG)
+
+    m_prev = m_ref[:, :1]
+    l_prev = l_ref[:, :1]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+    alpha = jnp.exp(m_prev - m_new)                            # NEG-NEG -> 1
+    p = jnp.where(vis, jnp.exp(s - m_new), 0.0)
+    l_new = l_prev * alpha + jnp.sum(p, axis=1, keepdims=True)
+    vv = v_ref[0, 0]
+    pv = _dot_f32(p.astype(vv.dtype), vv)
+    acc_ref[...] = acc_ref[...] * alpha + pv
+    m_ref[...] = jnp.broadcast_to(m_new, m_ref.shape)
+    l_ref[...] = jnp.broadcast_to(l_new, l_ref.shape)
+
+
+def _fwd_finalize(out_ref, lse_ref, acc_ref, m_ref, l_ref):
+    l = l_ref[:, :1]
+    m = m_ref[:, :1]
+    out = jnp.where(l > 0, acc_ref[...] / jnp.maximum(l, 1e-30), 0.0)
+    out_ref[0, 0] = out.astype(out_ref.dtype)
+    lse = jnp.where(l[:, 0] > 0,
+                    m[:, 0] + jnp.log(jnp.maximum(l[:, 0], 1e-30)),
+                    -jnp.inf)
+    lse_ref[0, 0] = lse
+
+
 def _fwd_kernel(kv_idx_ref, kv_nvis_ref,           # scalar prefetch
                 q_ref, k_ref, v_ref,
                 qd_ref, qp_ref, kd_ref, kp_ref,    # metadata tiles
@@ -404,81 +579,148 @@ def _fwd_kernel(kv_idx_ref, kv_nvis_ref,           # scalar prefetch
 
     @pl.when(vi == 0)
     def _init():
-        acc_ref[...] = jnp.zeros_like(acc_ref)
-        m_ref[...] = jnp.full_like(m_ref, NEG)
-        l_ref[...] = jnp.zeros_like(l_ref)
+        _fwd_init(acc_ref, m_ref, l_ref)
 
     @pl.when(vi < kv_nvis_ref[b, qi])
     def _visit():
-        q = q_ref[0, 0].astype(jnp.float32)
-        k = k_ref[0, 0]
-        s = _dot_f32(q, k.T.astype(jnp.float32)) * scale      # (bq, bk) f32
-        vis = _visible(qd_ref, qp_ref, kd_ref, kp_ref)
-        s = jnp.where(vis, s, NEG)
-
-        m_prev = m_ref[:, :1]
-        l_prev = l_ref[:, :1]
-        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
-        alpha = jnp.exp(m_prev - m_new)                        # NEG-NEG -> 1
-        p = jnp.where(vis, jnp.exp(s - m_new), 0.0)
-        l_new = l_prev * alpha + jnp.sum(p, axis=1, keepdims=True)
-        vv = v_ref[0, 0]
-        pv = _dot_f32(p.astype(vv.dtype), vv)
-        acc_ref[...] = acc_ref[...] * alpha + pv
-        m_ref[...] = jnp.broadcast_to(m_new, m_ref.shape)
-        l_ref[...] = jnp.broadcast_to(l_new, l_ref.shape)
+        _fwd_visit(q_ref, k_ref, v_ref, qd_ref, qp_ref, kd_ref, kp_ref,
+                   acc_ref, m_ref, l_ref, scale)
 
     @pl.when(vi == num_visits - 1)
     def _finalize():
-        l = l_ref[:, :1]
-        m = m_ref[:, :1]
-        out = jnp.where(l > 0, acc_ref[...] / jnp.maximum(l, 1e-30), 0.0)
-        out_ref[0, 0] = out.astype(out_ref.dtype)
-        lse = jnp.where(l[:, 0] > 0,
-                        m[:, 0] + jnp.log(jnp.maximum(l[:, 0], 1e-30)),
-                        -jnp.inf)
-        lse_ref[0, 0] = lse
+        _fwd_finalize(out_ref, lse_ref, acc_ref, m_ref, l_ref)
+
+
+def _fwd_kernel_flat(row_ref, col_ref, flags_ref,  # scalar prefetch (B, S)
+                     q_ref, k_ref, v_ref,
+                     qd_ref, qp_ref, kd_ref, kp_ref,
+                     out_ref, lse_ref,
+                     acc_ref, m_ref, l_ref,
+                     *, scale: float):
+    """Work-queue schedule: one grid step per actual visit.  Row
+    boundaries arrive as prefetched FIRST/LAST flags instead of the
+    rectangular grid's ``vi == 0`` / ``vi == V-1`` positions; sentinel
+    and pad steps clear VALID so they fetch (a repeat) but never
+    compute."""
+    b, _, s = (pl.program_id(i) for i in range(3))
+    flags = flags_ref[b, s]
+
+    @pl.when((flags & FLAG_FIRST) != 0)
+    def _init():
+        _fwd_init(acc_ref, m_ref, l_ref)
+
+    @pl.when((flags & FLAG_VALID) != 0)
+    def _visit():
+        _fwd_visit(q_ref, k_ref, v_ref, qd_ref, qp_ref, kd_ref, kp_ref,
+                   acc_ref, m_ref, l_ref, scale)
+
+    @pl.when((flags & FLAG_LAST) != 0)
+    def _finalize():
+        _fwd_finalize(out_ref, lse_ref, acc_ref, m_ref, l_ref)
+
+
+def _check_grid(grid: str, tables) -> tuple:
+    tables = tuple(tables)
+    want = GRID_TABLE_HALF.get(grid)
+    if want is None:
+        raise ValueError(f"unknown kernel grid {grid!r}")
+    if len(tables) != want:
+        raise ValueError(
+            f"grid={grid!r} kernels take {want} table arrays, got "
+            f"{len(tables)}")
+    return tables
 
 
 def flash_fwd(q, k, v, q_doc, q_pos, kv_doc, kv_pos,
-              kv_idx, kv_nvis, *,
+              tables, *,
               scale: float, block_q: int = DEFAULT_BLOCK_Q,
-              block_k: int = DEFAULT_BLOCK_K, interpret: bool = False):
+              block_k: int = DEFAULT_BLOCK_K, grid: str = "rect",
+              interpret: bool = False):
+    """Forward pass.  ``tables`` is ``(kv_idx, kv_nvis)`` for
+    ``grid="rect"``, ``(fq_row, fq_col, fq_flags)`` for ``grid="flat"``.
+    """
     B, Hq, Tq, D = q.shape
     _, Hkv, Tk, _ = k.shape
     group = Hq // Hkv
     nq = Tq // block_q
-    V = kv_idx.shape[-1]
+    tables = _check_grid(grid, tables)
 
-    def kv_block(b, h, qi, vi, kv_idx, kv_nvis):
-        return (b, h // group, kv_idx[b, qi, vi], 0)
+    if grid == "flat":
+        row_t, col_t, flags_t = tables
+        S = row_t.shape[-1]
 
-    def kv_meta(b, h, qi, vi, kv_idx, kv_nvis):
-        return (b, kv_idx[b, qi, vi])
+        def q_map(b, h, s, row, col, flags):
+            return (b, h, row[b, s], 0)
 
-    grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=2,
-        grid=(B, Hq, nq, V),
-        in_specs=[
-            pl.BlockSpec((1, 1, block_q, D), lambda b, h, qi, vi, *s: (b, h, qi, 0)),
-            pl.BlockSpec((1, 1, block_k, D), kv_block),
-            pl.BlockSpec((1, 1, block_k, D), kv_block),
-            pl.BlockSpec((1, block_q), lambda b, h, qi, vi, *s: (b, qi)),
-            pl.BlockSpec((1, block_q), lambda b, h, qi, vi, *s: (b, qi)),
-            pl.BlockSpec((1, block_k), kv_meta),
-            pl.BlockSpec((1, block_k), kv_meta),
-        ],
-        out_specs=[
-            pl.BlockSpec((1, 1, block_q, D), lambda b, h, qi, vi, *s: (b, h, qi, 0)),
-            pl.BlockSpec((1, 1, block_q), lambda b, h, qi, vi, *s: (b, h, qi)),
-        ],
-        scratch_shapes=[
-            pltpu.VMEM((block_q, D), jnp.float32),
-            pltpu.VMEM((block_q, 128), jnp.float32),
-            pltpu.VMEM((block_q, 128), jnp.float32),
-        ],
-    )
-    kernel = functools.partial(_fwd_kernel, scale=scale, num_visits=V)
+        def kv_map(b, h, s, row, col, flags):
+            return (b, h // group, col[b, s], 0)
+
+        def q_meta(b, h, s, row, col, flags):
+            return (b, row[b, s])
+
+        def kv_meta(b, h, s, row, col, flags):
+            return (b, col[b, s])
+
+        grid_spec = pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=3,
+            grid=(B, Hq, S),
+            in_specs=[
+                pl.BlockSpec((1, 1, block_q, D), q_map),
+                pl.BlockSpec((1, 1, block_k, D), kv_map),
+                pl.BlockSpec((1, 1, block_k, D), kv_map),
+                pl.BlockSpec((1, block_q), q_meta),
+                pl.BlockSpec((1, block_q), q_meta),
+                pl.BlockSpec((1, block_k), kv_meta),
+                pl.BlockSpec((1, block_k), kv_meta),
+            ],
+            out_specs=[
+                pl.BlockSpec((1, 1, block_q, D), q_map),
+                pl.BlockSpec((1, 1, block_q),
+                             lambda b, h, s, row, col, flags:
+                             (b, h, row[b, s])),
+            ],
+            scratch_shapes=[
+                pltpu.VMEM((block_q, D), jnp.float32),
+                pltpu.VMEM((block_q, 128), jnp.float32),
+                pltpu.VMEM((block_q, 128), jnp.float32),
+            ],
+        )
+        kernel = functools.partial(_fwd_kernel_flat, scale=scale)
+        inputs = (row_t, col_t, flags_t)
+    else:
+        kv_idx, kv_nvis = tables
+        V = kv_idx.shape[-1]
+
+        def kv_block(b, h, qi, vi, kv_idx, kv_nvis):
+            return (b, h // group, kv_idx[b, qi, vi], 0)
+
+        def kv_meta(b, h, qi, vi, kv_idx, kv_nvis):
+            return (b, kv_idx[b, qi, vi])
+
+        grid_spec = pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,
+            grid=(B, Hq, nq, V),
+            in_specs=[
+                pl.BlockSpec((1, 1, block_q, D), lambda b, h, qi, vi, *s: (b, h, qi, 0)),
+                pl.BlockSpec((1, 1, block_k, D), kv_block),
+                pl.BlockSpec((1, 1, block_k, D), kv_block),
+                pl.BlockSpec((1, block_q), lambda b, h, qi, vi, *s: (b, qi)),
+                pl.BlockSpec((1, block_q), lambda b, h, qi, vi, *s: (b, qi)),
+                pl.BlockSpec((1, block_k), kv_meta),
+                pl.BlockSpec((1, block_k), kv_meta),
+            ],
+            out_specs=[
+                pl.BlockSpec((1, 1, block_q, D), lambda b, h, qi, vi, *s: (b, h, qi, 0)),
+                pl.BlockSpec((1, 1, block_q), lambda b, h, qi, vi, *s: (b, h, qi)),
+            ],
+            scratch_shapes=[
+                pltpu.VMEM((block_q, D), jnp.float32),
+                pltpu.VMEM((block_q, 128), jnp.float32),
+                pltpu.VMEM((block_q, 128), jnp.float32),
+            ],
+        )
+        kernel = functools.partial(_fwd_kernel, scale=scale, num_visits=V)
+        inputs = (kv_idx, kv_nvis)
     out, lse = pl.pallas_call(
         kernel,
         grid_spec=grid_spec,
@@ -487,13 +729,31 @@ def flash_fwd(q, k, v, q_doc, q_pos, kv_doc, kv_pos,
             jax.ShapeDtypeStruct((B, Hq, Tq), jnp.float32),
         ],
         interpret=interpret,
-    )(kv_idx, kv_nvis, q, k, v, q_doc, q_pos, kv_doc, kv_pos)
+    )(*inputs, q, k, v, q_doc, q_pos, kv_doc, kv_pos)
     return out, lse
 
 
 # ===================================================================== #
-# backward: dQ  (grid over q blocks x visits)
+# backward: dQ  (q-block rows; rect grid over visits or flat work queue)
 # ===================================================================== #
+def _dq_visit(q_ref, k_ref, v_ref, do_ref, lse_ref, dl_ref,
+              qd_ref, qp_ref, kd_ref, kp_ref, dq_acc, scale):
+    q = q_ref[0, 0].astype(jnp.float32)
+    k = k_ref[0, 0]
+    v = v_ref[0, 0]
+    do = do_ref[0, 0].astype(jnp.float32)
+    lse = lse_ref[0, 0][:, None]                      # (bq, 1)
+    lse_safe = jnp.where(jnp.isfinite(lse), lse, 0.0)
+    delta = dl_ref[0, 0][:, None]
+
+    s = _dot_f32(q, k.T.astype(jnp.float32)) * scale
+    vis = _visible(qd_ref, qp_ref, kd_ref, kp_ref)
+    p = jnp.where(vis, jnp.exp(s - lse_safe), 0.0)
+    dp = _dot_f32(do, v.T.astype(jnp.float32))
+    ds = p * (dp - delta) * scale
+    dq_acc[...] += _dot_f32(ds.astype(k.dtype), k)
+
+
 def _dq_kernel(kv_idx_ref, kv_nvis_ref,
                q_ref, k_ref, v_ref, do_ref, lse_ref, dl_ref,
                qd_ref, qp_ref, kd_ref, kp_ref,
@@ -508,76 +768,153 @@ def _dq_kernel(kv_idx_ref, kv_nvis_ref,
 
     @pl.when(vi < kv_nvis_ref[b, qi])
     def _visit():
-        q = q_ref[0, 0].astype(jnp.float32)
-        k = k_ref[0, 0]
-        v = v_ref[0, 0]
-        do = do_ref[0, 0].astype(jnp.float32)
-        lse = lse_ref[0, 0][:, None]                      # (bq, 1)
-        lse_safe = jnp.where(jnp.isfinite(lse), lse, 0.0)
-        delta = dl_ref[0, 0][:, None]
-
-        s = _dot_f32(q, k.T.astype(jnp.float32)) * scale
-        vis = _visible(qd_ref, qp_ref, kd_ref, kp_ref)
-        p = jnp.where(vis, jnp.exp(s - lse_safe), 0.0)
-        dp = _dot_f32(do, v.T.astype(jnp.float32))
-        ds = p * (dp - delta) * scale
-        dq_acc[...] += _dot_f32(ds.astype(k.dtype), k)
+        _dq_visit(q_ref, k_ref, v_ref, do_ref, lse_ref, dl_ref,
+                  qd_ref, qp_ref, kd_ref, kp_ref, dq_acc, scale)
 
     @pl.when(vi == num_visits - 1)
     def _finalize():
         dq_ref[0, 0] = dq_acc[...].astype(dq_ref.dtype)
 
 
+def _dq_kernel_flat(row_ref, col_ref, flags_ref,
+                    q_ref, k_ref, v_ref, do_ref, lse_ref, dl_ref,
+                    qd_ref, qp_ref, kd_ref, kp_ref,
+                    dq_ref,
+                    dq_acc,
+                    *, scale: float):
+    b, _, s = (pl.program_id(i) for i in range(3))
+    flags = flags_ref[b, s]
+
+    @pl.when((flags & FLAG_FIRST) != 0)
+    def _init():
+        dq_acc[...] = jnp.zeros_like(dq_acc)
+
+    @pl.when((flags & FLAG_VALID) != 0)
+    def _visit():
+        _dq_visit(q_ref, k_ref, v_ref, do_ref, lse_ref, dl_ref,
+                  qd_ref, qp_ref, kd_ref, kp_ref, dq_acc, scale)
+
+    @pl.when((flags & FLAG_LAST) != 0)
+    def _finalize():
+        dq_ref[0, 0] = dq_acc[...].astype(dq_ref.dtype)
+
+
 def flash_bwd_dq(q, k, v, do, lse, delta, q_doc, q_pos, kv_doc, kv_pos,
-                 kv_idx, kv_nvis, *, scale: float,
+                 tables, *, scale: float,
                  block_q: int = DEFAULT_BLOCK_Q,
-                 block_k: int = DEFAULT_BLOCK_K, interpret: bool = False):
+                 block_k: int = DEFAULT_BLOCK_K, grid: str = "rect",
+                 interpret: bool = False):
+    """dQ pass; ``tables`` as in :func:`flash_fwd` (the same q-block
+    work queue drives both)."""
     B, Hq, Tq, D = q.shape
     _, Hkv, Tk, _ = k.shape
     group = Hq // Hkv
     nq = Tq // block_q
-    V = kv_idx.shape[-1]
+    tables = _check_grid(grid, tables)
 
-    def kv_block(b, h, qi, vi, kv_idx, kv_nvis):
-        return (b, h // group, kv_idx[b, qi, vi], 0)
+    if grid == "flat":
+        row_t, col_t, flags_t = tables
+        S = row_t.shape[-1]
 
-    def kv_meta(b, h, qi, vi, kv_idx, kv_nvis):
-        return (b, kv_idx[b, qi, vi])
+        def q_map(b, h, s, row, col, flags):
+            return (b, h, row[b, s], 0)
 
-    def q_block(b, h, qi, vi, *s):
-        return (b, h, qi, 0)
+        def q_vec(b, h, s, row, col, flags):
+            return (b, h, row[b, s])
 
-    grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=2,
-        grid=(B, Hq, nq, V),
-        in_specs=[
-            pl.BlockSpec((1, 1, block_q, D), q_block),
-            pl.BlockSpec((1, 1, block_k, D), kv_block),
-            pl.BlockSpec((1, 1, block_k, D), kv_block),
-            pl.BlockSpec((1, 1, block_q, D), q_block),
-            pl.BlockSpec((1, 1, block_q), lambda b, h, qi, vi, *s: (b, h, qi)),
-            pl.BlockSpec((1, 1, block_q), lambda b, h, qi, vi, *s: (b, h, qi)),
-            pl.BlockSpec((1, block_q), lambda b, h, qi, vi, *s: (b, qi)),
-            pl.BlockSpec((1, block_q), lambda b, h, qi, vi, *s: (b, qi)),
-            pl.BlockSpec((1, block_k), kv_meta),
-            pl.BlockSpec((1, block_k), kv_meta),
-        ],
-        out_specs=[pl.BlockSpec((1, 1, block_q, D), q_block)],
-        scratch_shapes=[pltpu.VMEM((block_q, D), jnp.float32)],
-    )
-    kernel = functools.partial(_dq_kernel, scale=scale, num_visits=V)
+        def kv_map(b, h, s, row, col, flags):
+            return (b, h // group, col[b, s], 0)
+
+        def q_meta(b, h, s, row, col, flags):
+            return (b, row[b, s])
+
+        def kv_meta(b, h, s, row, col, flags):
+            return (b, col[b, s])
+
+        grid_spec = pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=3,
+            grid=(B, Hq, S),
+            in_specs=[
+                pl.BlockSpec((1, 1, block_q, D), q_map),
+                pl.BlockSpec((1, 1, block_k, D), kv_map),
+                pl.BlockSpec((1, 1, block_k, D), kv_map),
+                pl.BlockSpec((1, 1, block_q, D), q_map),
+                pl.BlockSpec((1, 1, block_q), q_vec),
+                pl.BlockSpec((1, 1, block_q), q_vec),
+                pl.BlockSpec((1, block_q), q_meta),
+                pl.BlockSpec((1, block_q), q_meta),
+                pl.BlockSpec((1, block_k), kv_meta),
+                pl.BlockSpec((1, block_k), kv_meta),
+            ],
+            out_specs=[pl.BlockSpec((1, 1, block_q, D), q_map)],
+            scratch_shapes=[pltpu.VMEM((block_q, D), jnp.float32)],
+        )
+        kernel = functools.partial(_dq_kernel_flat, scale=scale)
+        inputs = (row_t, col_t, flags_t)
+    else:
+        kv_idx, kv_nvis = tables
+        V = kv_idx.shape[-1]
+
+        def kv_block(b, h, qi, vi, kv_idx, kv_nvis):
+            return (b, h // group, kv_idx[b, qi, vi], 0)
+
+        def kv_meta(b, h, qi, vi, kv_idx, kv_nvis):
+            return (b, kv_idx[b, qi, vi])
+
+        def q_block(b, h, qi, vi, *s):
+            return (b, h, qi, 0)
+
+        grid_spec = pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,
+            grid=(B, Hq, nq, V),
+            in_specs=[
+                pl.BlockSpec((1, 1, block_q, D), q_block),
+                pl.BlockSpec((1, 1, block_k, D), kv_block),
+                pl.BlockSpec((1, 1, block_k, D), kv_block),
+                pl.BlockSpec((1, 1, block_q, D), q_block),
+                pl.BlockSpec((1, 1, block_q), lambda b, h, qi, vi, *s: (b, h, qi)),
+                pl.BlockSpec((1, 1, block_q), lambda b, h, qi, vi, *s: (b, h, qi)),
+                pl.BlockSpec((1, block_q), lambda b, h, qi, vi, *s: (b, qi)),
+                pl.BlockSpec((1, block_q), lambda b, h, qi, vi, *s: (b, qi)),
+                pl.BlockSpec((1, block_k), kv_meta),
+                pl.BlockSpec((1, block_k), kv_meta),
+            ],
+            out_specs=[pl.BlockSpec((1, 1, block_q, D), q_block)],
+            scratch_shapes=[pltpu.VMEM((block_q, D), jnp.float32)],
+        )
+        kernel = functools.partial(_dq_kernel, scale=scale, num_visits=V)
+        inputs = (kv_idx, kv_nvis)
     (dq,) = pl.pallas_call(
         kernel,
         grid_spec=grid_spec,
         out_shape=[jax.ShapeDtypeStruct((B, Hq, Tq, D), q.dtype)],
         interpret=interpret,
-    )(kv_idx, kv_nvis, q, k, v, do, lse, delta, q_doc, q_pos, kv_doc, kv_pos)
+    )(*inputs, q, k, v, do, lse, delta, q_doc, q_pos, kv_doc, kv_pos)
     return dq
 
 
 # ===================================================================== #
-# backward: dK, dV  (grid over kv blocks x reverse visits x GQA group)
+# backward: dK, dV  (kv-block rows x GQA group; rect grid or flat queue)
 # ===================================================================== #
+def _dkv_visit(q_ref, k_ref, v_ref, do_ref, lse_ref, dl_ref,
+               qd_ref, qp_ref, kd_ref, kp_ref, dk_acc, dv_acc, scale):
+    q = q_ref[0, 0].astype(jnp.float32)
+    k = k_ref[0, 0]
+    v = v_ref[0, 0]
+    do = do_ref[0, 0].astype(jnp.float32)
+    lse = lse_ref[0, 0][:, None]
+    lse_safe = jnp.where(jnp.isfinite(lse), lse, 0.0)
+    delta = dl_ref[0, 0][:, None]
+
+    s = _dot_f32(q, k.T.astype(jnp.float32)) * scale    # (bq, bk)
+    vis = _visible(qd_ref, qp_ref, kd_ref, kp_ref)
+    p = jnp.where(vis, jnp.exp(s - lse_safe), 0.0)
+    dv_acc[...] += _dot_f32(p.T.astype(do.dtype), do)
+    dp = _dot_f32(do, v.T.astype(jnp.float32))
+    ds = p * (dp - delta) * scale
+    dk_acc[...] += _dot_f32(ds.T.astype(q.dtype), q)
+
+
 def _dkv_kernel(q_idx_ref, q_nvis_ref,
                 q_ref, k_ref, v_ref, do_ref, lse_ref, dl_ref,
                 qd_ref, qp_ref, kd_ref, kp_ref,
@@ -593,21 +930,8 @@ def _dkv_kernel(q_idx_ref, q_nvis_ref,
 
     @pl.when(vqi < q_nvis_ref[b, ki])
     def _visit():
-        q = q_ref[0, 0].astype(jnp.float32)
-        k = k_ref[0, 0]
-        v = v_ref[0, 0]
-        do = do_ref[0, 0].astype(jnp.float32)
-        lse = lse_ref[0, 0][:, None]
-        lse_safe = jnp.where(jnp.isfinite(lse), lse, 0.0)
-        delta = dl_ref[0, 0][:, None]
-
-        s = _dot_f32(q, k.T.astype(jnp.float32)) * scale    # (bq, bk)
-        vis = _visible(qd_ref, qp_ref, kd_ref, kp_ref)
-        p = jnp.where(vis, jnp.exp(s - lse_safe), 0.0)
-        dv_acc[...] += _dot_f32(p.T.astype(do.dtype), do)
-        dp = _dot_f32(do, v.T.astype(jnp.float32))
-        ds = p * (dp - delta) * scale
-        dk_acc[...] += _dot_f32(ds.T.astype(q.dtype), q)
+        _dkv_visit(q_ref, k_ref, v_ref, do_ref, lse_ref, dl_ref,
+                   qd_ref, qp_ref, kd_ref, kp_ref, dk_acc, dv_acc, scale)
 
     @pl.when((vqi == num_visits - 1) & (gi == group - 1))
     def _finalize():
@@ -615,60 +939,137 @@ def _dkv_kernel(q_idx_ref, q_nvis_ref,
         dv_ref[0, 0] = dv_acc[...].astype(dv_ref.dtype)
 
 
+def _dkv_kernel_flat(row_ref, col_ref, flags_ref,
+                     q_ref, k_ref, v_ref, do_ref, lse_ref, dl_ref,
+                     qd_ref, qp_ref, kd_ref, kp_ref,
+                     dk_ref, dv_ref,
+                     dk_acc, dv_acc,
+                     *, scale: float, group: int):
+    b, _, s, gi = (pl.program_id(i) for i in range(4))
+    flags = flags_ref[b, s]
+
+    @pl.when(((flags & FLAG_FIRST) != 0) & (gi == 0))
+    def _init():
+        dk_acc[...] = jnp.zeros_like(dk_acc)
+        dv_acc[...] = jnp.zeros_like(dv_acc)
+
+    @pl.when((flags & FLAG_VALID) != 0)
+    def _visit():
+        _dkv_visit(q_ref, k_ref, v_ref, do_ref, lse_ref, dl_ref,
+                   qd_ref, qp_ref, kd_ref, kp_ref, dk_acc, dv_acc, scale)
+
+    @pl.when(((flags & FLAG_LAST) != 0) & (gi == group - 1))
+    def _finalize():
+        dk_ref[0, 0] = dk_acc[...].astype(dk_ref.dtype)
+        dv_ref[0, 0] = dv_acc[...].astype(dv_ref.dtype)
+
+
 def flash_bwd_dkv(q, k, v, do, lse, delta, q_doc, q_pos, kv_doc, kv_pos,
-                  q_idx, q_nvis, *, scale: float,
+                  tables, *, scale: float,
                   block_q: int = DEFAULT_BLOCK_Q,
-                  block_k: int = DEFAULT_BLOCK_K, interpret: bool = False):
+                  block_k: int = DEFAULT_BLOCK_K, grid: str = "rect",
+                  interpret: bool = False):
+    """dK/dV pass.  ``tables`` is the *reverse* map: ``(q_idx, q_nvis)``
+    for ``grid="rect"``, ``(rq_row, rq_col, rq_flags)`` for
+    ``grid="flat"`` (rows are KV blocks, cols the visiting Q blocks)."""
     B, Hq, Tq, D = q.shape
     _, Hkv, Tk, _ = k.shape
     group = Hq // Hkv
     nk = Tk // block_k
-    Vq = q_idx.shape[-1]
+    tables = _check_grid(grid, tables)
 
-    def head(gi):
-        return gi  # helper for clarity below
+    if grid == "flat":
+        row_t, col_t, flags_t = tables
+        S = row_t.shape[-1]
 
-    def q_block(b, hkv, ki, vqi, gi, q_idx, q_nvis):
-        return (b, hkv * group + gi, q_idx[b, ki, vqi], 0)
+        def q_block(b, hkv, s, gi, row, col, flags):
+            return (b, hkv * group + gi, col[b, s], 0)
 
-    def q_vec(b, hkv, ki, vqi, gi, q_idx, q_nvis):
-        return (b, hkv * group + gi, q_idx[b, ki, vqi])
+        def q_vec(b, hkv, s, gi, row, col, flags):
+            return (b, hkv * group + gi, col[b, s])
 
-    def q_meta(b, hkv, ki, vqi, gi, q_idx, q_nvis):
-        return (b, q_idx[b, ki, vqi])
+        def q_meta(b, hkv, s, gi, row, col, flags):
+            return (b, col[b, s])
 
-    def kv_block(b, hkv, ki, vqi, gi, *s):
-        return (b, hkv, ki, 0)
+        def kv_block(b, hkv, s, gi, row, col, flags):
+            return (b, hkv, row[b, s], 0)
 
-    def kv_meta(b, hkv, ki, vqi, gi, *s):
-        return (b, ki)
+        def kv_meta(b, hkv, s, gi, row, col, flags):
+            return (b, row[b, s])
 
-    grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=2,
-        grid=(B, Hkv, nk, Vq, group),
-        in_specs=[
-            pl.BlockSpec((1, 1, block_q, D), q_block),
-            pl.BlockSpec((1, 1, block_k, D), kv_block),
-            pl.BlockSpec((1, 1, block_k, D), kv_block),
-            pl.BlockSpec((1, 1, block_q, D), q_block),
-            pl.BlockSpec((1, 1, block_q), q_vec),
-            pl.BlockSpec((1, 1, block_q), q_vec),
-            pl.BlockSpec((1, block_q), q_meta),
-            pl.BlockSpec((1, block_q), q_meta),
-            pl.BlockSpec((1, block_k), kv_meta),
-            pl.BlockSpec((1, block_k), kv_meta),
-        ],
-        out_specs=[
-            pl.BlockSpec((1, 1, block_k, D), kv_block),
-            pl.BlockSpec((1, 1, block_k, D), kv_block),
-        ],
-        scratch_shapes=[
-            pltpu.VMEM((block_k, D), jnp.float32),
-            pltpu.VMEM((block_k, D), jnp.float32),
-        ],
-    )
-    kernel = functools.partial(_dkv_kernel, scale=scale, num_visits=Vq,
-                               group=group)
+        grid_spec = pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=3,
+            grid=(B, Hkv, S, group),
+            in_specs=[
+                pl.BlockSpec((1, 1, block_q, D), q_block),
+                pl.BlockSpec((1, 1, block_k, D), kv_block),
+                pl.BlockSpec((1, 1, block_k, D), kv_block),
+                pl.BlockSpec((1, 1, block_q, D), q_block),
+                pl.BlockSpec((1, 1, block_q), q_vec),
+                pl.BlockSpec((1, 1, block_q), q_vec),
+                pl.BlockSpec((1, block_q), q_meta),
+                pl.BlockSpec((1, block_q), q_meta),
+                pl.BlockSpec((1, block_k), kv_meta),
+                pl.BlockSpec((1, block_k), kv_meta),
+            ],
+            out_specs=[
+                pl.BlockSpec((1, 1, block_k, D), kv_block),
+                pl.BlockSpec((1, 1, block_k, D), kv_block),
+            ],
+            scratch_shapes=[
+                pltpu.VMEM((block_k, D), jnp.float32),
+                pltpu.VMEM((block_k, D), jnp.float32),
+            ],
+        )
+        kernel = functools.partial(_dkv_kernel_flat, scale=scale,
+                                   group=group)
+        inputs = (row_t, col_t, flags_t)
+    else:
+        q_idx, q_nvis = tables
+        Vq = q_idx.shape[-1]
+
+        def q_block(b, hkv, ki, vqi, gi, q_idx, q_nvis):
+            return (b, hkv * group + gi, q_idx[b, ki, vqi], 0)
+
+        def q_vec(b, hkv, ki, vqi, gi, q_idx, q_nvis):
+            return (b, hkv * group + gi, q_idx[b, ki, vqi])
+
+        def q_meta(b, hkv, ki, vqi, gi, q_idx, q_nvis):
+            return (b, q_idx[b, ki, vqi])
+
+        def kv_block(b, hkv, ki, vqi, gi, *s):
+            return (b, hkv, ki, 0)
+
+        def kv_meta(b, hkv, ki, vqi, gi, *s):
+            return (b, ki)
+
+        grid_spec = pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,
+            grid=(B, Hkv, nk, Vq, group),
+            in_specs=[
+                pl.BlockSpec((1, 1, block_q, D), q_block),
+                pl.BlockSpec((1, 1, block_k, D), kv_block),
+                pl.BlockSpec((1, 1, block_k, D), kv_block),
+                pl.BlockSpec((1, 1, block_q, D), q_block),
+                pl.BlockSpec((1, 1, block_q), q_vec),
+                pl.BlockSpec((1, 1, block_q), q_vec),
+                pl.BlockSpec((1, block_q), q_meta),
+                pl.BlockSpec((1, block_q), q_meta),
+                pl.BlockSpec((1, block_k), kv_meta),
+                pl.BlockSpec((1, block_k), kv_meta),
+            ],
+            out_specs=[
+                pl.BlockSpec((1, 1, block_k, D), kv_block),
+                pl.BlockSpec((1, 1, block_k, D), kv_block),
+            ],
+            scratch_shapes=[
+                pltpu.VMEM((block_k, D), jnp.float32),
+                pltpu.VMEM((block_k, D), jnp.float32),
+            ],
+        )
+        kernel = functools.partial(_dkv_kernel, scale=scale, num_visits=Vq,
+                                   group=group)
+        inputs = (q_idx, q_nvis)
     dk, dv = pl.pallas_call(
         kernel,
         grid_spec=grid_spec,
@@ -677,5 +1078,5 @@ def flash_bwd_dkv(q, k, v, do, lse, delta, q_doc, q_pos, kv_doc, kv_pos,
             jax.ShapeDtypeStruct((B, Hkv, Tk, D), v.dtype),
         ],
         interpret=interpret,
-    )(q_idx, q_nvis, q, k, v, do, lse, delta, q_doc, q_pos, kv_doc, kv_pos)
+    )(*inputs, q, k, v, do, lse, delta, q_doc, q_pos, kv_doc, kv_pos)
     return dk, dv

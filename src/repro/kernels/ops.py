@@ -2,7 +2,10 @@
 
 * ``doc_flash_attention`` — the Pallas kernel pair (fwd + custom-VJP bwd)
   from :mod:`repro.kernels.doc_attention`.  TPU is the target; pass
-  ``interpret=True`` to validate on CPU.
+  ``interpret=True`` to validate on CPU.  ``grid`` selects the kernel
+  schedule: ``"rect"`` launches the padded rectangular visit grid,
+  ``"flat"`` the flattened 1D work queue (one grid step per actual
+  visit; see the kernel module docstring).
 * ``doc_attention_xla``  — chunked pure-XLA implementation with identical
   semantics.  Used for CPU training runs and for the multi-pod dry-run
   (Pallas TPU kernels cannot lower on the CPU backend); differentiable by
@@ -35,6 +38,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.table_layout import GRID_TABLE_HALF
+
 from . import doc_attention as da
 from .ref import doc_mask
 
@@ -45,43 +50,69 @@ def _float0_zero(x):
     return np.zeros(x.shape, dtype=jax.dtypes.float0)
 
 
+def _split_tables(tables: tuple, grid: str):
+    """(fwd/dQ tables, dKV reverse tables) halves of the combined tuple.
+
+    rect: (kv_idx, kv_nvis | q_idx, q_nvis)
+    flat: (fq_row, fq_col, fq_flags | rq_row, rq_col, rq_flags)
+    """
+    half = GRID_TABLE_HALF[grid]
+    if len(tables) != 2 * half:
+        raise ValueError(
+            f"grid={grid!r} needs {2 * half} table arrays, got "
+            f"{len(tables)}")
+    return tables[:half], tables[half:]
+
+
 # ===================================================================== #
 # Pallas path
 # ===================================================================== #
-@functools.partial(jax.custom_vjp, nondiff_argnums=(11, 12, 13, 14))
-def _attn(q, k, v, q_doc, q_pos, kv_doc, kv_pos, kv_idx, kv_nvis, q_idx,
-          q_nvis, scale, block_q, block_k, interpret):
+@functools.partial(jax.custom_vjp, nondiff_argnums=(8, 9, 10, 11, 12))
+def _attn(q, k, v, q_doc, q_pos, kv_doc, kv_pos, tables,
+          scale, block_q, block_k, grid, interpret):
+    fwd_t, _ = _split_tables(tables, grid)
     out, _ = da.flash_fwd(
-        q, k, v, q_doc, q_pos, kv_doc, kv_pos, kv_idx, kv_nvis,
-        scale=scale, block_q=block_q, block_k=block_k, interpret=interpret)
+        q, k, v, q_doc, q_pos, kv_doc, kv_pos, fwd_t,
+        scale=scale, block_q=block_q, block_k=block_k, grid=grid,
+        interpret=interpret)
     return out
 
 
-def _attn_fwd(q, k, v, q_doc, q_pos, kv_doc, kv_pos, kv_idx, kv_nvis, q_idx,
-              q_nvis, scale, block_q, block_k, interpret):
+def _attn_fwd(q, k, v, q_doc, q_pos, kv_doc, kv_pos, tables,
+              scale, block_q, block_k, grid, interpret):
+    fwd_t, _ = _split_tables(tables, grid)
     out, lse = da.flash_fwd(
-        q, k, v, q_doc, q_pos, kv_doc, kv_pos, kv_idx, kv_nvis,
-        scale=scale, block_q=block_q, block_k=block_k, interpret=interpret)
-    res = (q, k, v, out, lse, q_doc, q_pos, kv_doc, kv_pos,
-           kv_idx, kv_nvis, q_idx, q_nvis)
+        q, k, v, q_doc, q_pos, kv_doc, kv_pos, fwd_t,
+        scale=scale, block_q=block_q, block_k=block_k, grid=grid,
+        interpret=interpret)
+    res = (q, k, v, out, lse, q_doc, q_pos, kv_doc, kv_pos, tables)
     return out, res
 
 
-def _attn_bwd(scale, block_q, block_k, interpret, res, do):
-    (q, k, v, out, lse, q_doc, q_pos, kv_doc, kv_pos,
-     kv_idx, kv_nvis, q_idx, q_nvis) = res
+def _flash_bwd(res, do, dlse, *, scale, block_q, block_k, grid, interpret):
+    """Shared dq/dkv backward; ``dlse`` folds an (o, lse)-mode lse
+    cotangent into delta (None for plain attention)."""
+    (q, k, v, out, lse, q_doc, q_pos, kv_doc, kv_pos, tables) = res
+    fwd_t, rev_t = _split_tables(tables, grid)
     delta = jnp.sum(do.astype(jnp.float32) * out.astype(jnp.float32), axis=-1)
+    if dlse is not None:
+        delta = delta - dlse.astype(jnp.float32)
     dq = da.flash_bwd_dq(
         q, k, v, do, lse, delta, q_doc, q_pos, kv_doc, kv_pos,
-        kv_idx, kv_nvis, scale=scale, block_q=block_q, block_k=block_k,
+        fwd_t, scale=scale, block_q=block_q, block_k=block_k, grid=grid,
         interpret=interpret)
     dk, dv = da.flash_bwd_dkv(
         q, k, v, do, lse, delta, q_doc, q_pos, kv_doc, kv_pos,
-        q_idx, q_nvis, scale=scale, block_q=block_q, block_k=block_k,
+        rev_t, scale=scale, block_q=block_q, block_k=block_k, grid=grid,
         interpret=interpret)
     zeros = tuple(_float0_zero(x) for x in
-                  (q_doc, q_pos, kv_doc, kv_pos, kv_idx, kv_nvis, q_idx, q_nvis))
-    return (dq, dk, dv) + zeros
+                  (q_doc, q_pos, kv_doc, kv_pos))
+    return (dq, dk, dv) + zeros + (tuple(_float0_zero(t) for t in tables),)
+
+
+def _attn_bwd(scale, block_q, block_k, grid, interpret, res, do):
+    return _flash_bwd(res, do, None, scale=scale, block_q=block_q,
+                      block_k=block_k, grid=grid, interpret=interpret)
 
 
 _attn.defvjp(_attn_fwd, _attn_bwd)
@@ -90,26 +121,24 @@ _attn.defvjp(_attn_fwd, _attn_bwd)
 # ===================================================================== #
 # Pallas partial mode: (o, lse) with exact gradients through both
 # ===================================================================== #
-@functools.partial(jax.custom_vjp, nondiff_argnums=(11, 12, 13, 14))
-def _attn_partial(q, k, v, q_doc, q_pos, kv_doc, kv_pos, kv_idx, kv_nvis,
-                  q_idx, q_nvis, scale, block_q, block_k, interpret):
+@functools.partial(jax.custom_vjp, nondiff_argnums=(8, 9, 10, 11, 12))
+def _attn_partial(q, k, v, q_doc, q_pos, kv_doc, kv_pos, tables,
+                  scale, block_q, block_k, grid, interpret):
+    fwd_t, _ = _split_tables(tables, grid)
     return da.flash_fwd(
-        q, k, v, q_doc, q_pos, kv_doc, kv_pos, kv_idx, kv_nvis,
-        scale=scale, block_q=block_q, block_k=block_k, interpret=interpret)
+        q, k, v, q_doc, q_pos, kv_doc, kv_pos, fwd_t,
+        scale=scale, block_q=block_q, block_k=block_k, grid=grid,
+        interpret=interpret)
 
 
-def _attn_partial_fwd(q, k, v, q_doc, q_pos, kv_doc, kv_pos, kv_idx,
-                      kv_nvis, q_idx, q_nvis, scale, block_q, block_k,
-                      interpret):
-    out, lse = da.flash_fwd(
-        q, k, v, q_doc, q_pos, kv_doc, kv_pos, kv_idx, kv_nvis,
-        scale=scale, block_q=block_q, block_k=block_k, interpret=interpret)
-    res = (q, k, v, out, lse, q_doc, q_pos, kv_doc, kv_pos,
-           kv_idx, kv_nvis, q_idx, q_nvis)
-    return (out, lse), res
+def _attn_partial_fwd(q, k, v, q_doc, q_pos, kv_doc, kv_pos, tables,
+                      scale, block_q, block_k, grid, interpret):
+    out, res = _attn_fwd(q, k, v, q_doc, q_pos, kv_doc, kv_pos, tables,
+                         scale, block_q, block_k, grid, interpret)
+    return (out, res[4]), res
 
 
-def _attn_partial_bwd(scale, block_q, block_k, interpret, res, cts):
+def _attn_partial_bwd(scale, block_q, block_k, grid, interpret, res, cts):
     """Backward of the (o, lse) pair with the standard flash kernels.
 
     With p = exp(s - lse): d s = p * (do . v - delta) + p * dlse, so the
@@ -118,21 +147,8 @@ def _attn_partial_bwd(scale, block_q, block_k, interpret, res, cts):
     outputs.  (d lse / d v = 0, which the dkv kernel respects for free.)
     """
     do, dlse = cts
-    (q, k, v, out, lse, q_doc, q_pos, kv_doc, kv_pos,
-     kv_idx, kv_nvis, q_idx, q_nvis) = res
-    delta = jnp.sum(do.astype(jnp.float32) * out.astype(jnp.float32), axis=-1)
-    delta = delta - dlse.astype(jnp.float32)
-    dq = da.flash_bwd_dq(
-        q, k, v, do, lse, delta, q_doc, q_pos, kv_doc, kv_pos,
-        kv_idx, kv_nvis, scale=scale, block_q=block_q, block_k=block_k,
-        interpret=interpret)
-    dk, dv = da.flash_bwd_dkv(
-        q, k, v, do, lse, delta, q_doc, q_pos, kv_doc, kv_pos,
-        q_idx, q_nvis, scale=scale, block_q=block_q, block_k=block_k,
-        interpret=interpret)
-    zeros = tuple(_float0_zero(x) for x in
-                  (q_doc, q_pos, kv_doc, kv_pos, kv_idx, kv_nvis, q_idx, q_nvis))
-    return (dq, dk, dv) + zeros
+    return _flash_bwd(res, do, dlse, scale=scale, block_q=block_q,
+                      block_k=block_k, grid=grid, interpret=interpret)
 
 
 _attn_partial.defvjp(_attn_partial_fwd, _attn_partial_bwd)
@@ -147,13 +163,17 @@ def doc_flash_attention(
     scale: float | None = None,
     block_q: int = da.DEFAULT_BLOCK_Q,
     block_k: int = da.DEFAULT_BLOCK_K,
+    grid: str = "rect",
     interpret: bool = False,
     partial: bool = False,
 ) -> jax.Array:
     """Document-masked causal flash attention (Pallas TPU kernel).
 
-    ``tables`` is a :class:`~repro.kernels.doc_attention.BlockTables` or the
-    4-tuple of its arrays (kv_idx, kv_nvis, q_idx, q_nvis).
+    ``tables`` is a :class:`~repro.kernels.doc_attention.BlockTables` or
+    the matching array tuple for ``grid``: the rectangular 4-tuple
+    ``(kv_idx, kv_nvis, q_idx, q_nvis)`` for ``grid="rect"``, the
+    flattened work-queue 6-tuple ``(fq_row, fq_col, fq_flags, rq_row,
+    rq_col, rq_flags)`` for ``grid="flat"``.
 
     ``partial=True`` returns ``(o, lse)`` — the KV-subset-normalized
     output and its log-sum-exp (``-inf`` on rows with nothing visible) —
@@ -162,14 +182,13 @@ def doc_flash_attention(
     if scale is None:
         scale = q.shape[-1] ** -0.5
     if isinstance(tables, da.BlockTables):
-        kv_idx, kv_nvis, q_idx, q_nvis = tables.as_jax()
         block_q, block_k = tables.block_q, tables.block_k
+        tables = tables.flat_as_jax() if grid == "flat" else tables.as_jax()
     else:
-        kv_idx, kv_nvis, q_idx, q_nvis = tables
+        tables = tuple(tables)
     fn = _attn_partial if partial else _attn
-    return fn(q, k, v, q_doc, q_pos, kv_doc, kv_pos,
-              kv_idx, kv_nvis, q_idx, q_nvis,
-              float(scale), block_q, block_k, interpret)
+    return fn(q, k, v, q_doc, q_pos, kv_doc, kv_pos, tables,
+              float(scale), block_q, block_k, grid, interpret)
 
 
 # ===================================================================== #

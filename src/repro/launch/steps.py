@@ -71,6 +71,7 @@ def train_input_specs(cfg: ModelConfig, shape: ShapeConfig, cp: int,
                       buf_len: int | None = None,
                       attention_impl: str = "xla",
                       overlap: str = "chunked",
+                      grid: str = "flat",
                       block_q: int = 128,
                       block_k: int = 128) -> dict[str, Any]:
     B, C = shape.global_batch, shape.seq_len
@@ -95,7 +96,7 @@ def train_input_specs(cfg: ModelConfig, shape: ShapeConfig, cp: int,
         shapes = visit_table_shapes(
             B, N, C // N, buf, strategy=exec_strat,
             overlap=resolve_overlap(exec_strat, attention_impl, overlap),
-            block_q=block_q, block_k=block_k)
+            block_q=block_q, block_k=block_k, grid=grid)
         s.update({k: jax.ShapeDtypeStruct(v, i32)
                   for k, v in shapes.items()})
     if cfg.frontend == "audio_frames":
@@ -168,7 +169,7 @@ def build_train_step(cfg: ModelConfig, mesh, run: RunConfig,
             impl=run.attention_impl, batch_axes=baxes,
             head_dim=cfg.resolved_head_dim, q_chunk=q_chunk,
             overlap=run.cp_overlap, interpret=interpret,
-            block_q=block_q, block_k=block_k,
+            block_q=block_q, block_k=block_k, grid=run.kernel_grid,
             kv_comm_dtype=run.kv_comm_dtype)
 
         (loss, metrics), grads = jax.value_and_grad(
@@ -192,6 +193,7 @@ def build_train_step(cfg: ModelConfig, mesh, run: RunConfig,
     batch_s = train_input_specs(cfg, shape, cp, strategy=plan_strategy,
                                 attention_impl=run.attention_impl,
                                 overlap=run.cp_overlap,
+                                grid=run.kernel_grid,
                                 block_q=block_q, block_k=block_k)
     p_shard = param_shardings(mesh, params_s)
     o_shard = param_shardings(mesh, opt_s)
@@ -224,7 +226,7 @@ def build_prefill_step(cfg: ModelConfig, mesh, run: RunConfig,
             impl=run.attention_impl, batch_axes=baxes,
             head_dim=cfg.resolved_head_dim, q_chunk=q_chunk,
             overlap=run.cp_overlap, interpret=interpret,
-            block_q=block_q, block_k=block_k,
+            block_q=block_q, block_k=block_k, grid=run.kernel_grid,
             kv_comm_dtype=run.kv_comm_dtype)
         logits, _ = forward(params, cfg, ctx, batch, remat=run.remat)
         # serving prefill returns the last-position logits per sequence
@@ -234,6 +236,7 @@ def build_prefill_step(cfg: ModelConfig, mesh, run: RunConfig,
     batch_s = train_input_specs(cfg, shape, cp, strategy=plan_strategy,
                                 attention_impl=run.attention_impl,
                                 overlap=run.cp_overlap,
+                                grid=run.kernel_grid,
                                 block_q=block_q, block_k=block_k)
     batch_s.pop("labels")
     p_shard = param_shardings(mesh, params_s)

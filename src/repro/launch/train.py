@@ -80,7 +80,7 @@ def train(args) -> dict:
         align=128 if run.attention_impl == "pallas"
         else (1 if cp == 1 else 16),
         emit_tables=(run.attention_impl == "pallas" and cfg.uses_attention),
-        table_overlap=run.cp_overlap)
+        table_overlap=run.cp_overlap, table_grid=run.kernel_grid)
 
     bundle = build_train_step(cfg, mesh, run, shape, q_chunk=args.q_chunk)
     p_shard, o_shard, b_shard, _ = bundle.in_shardings

@@ -168,8 +168,12 @@ def local_selective_scan(dt, A, Bm, Cm, xf, reset, *, chunk: int = 64,
 def make_local_context(doc: jax.Array, pos: jax.Array,
                        attention_impl: str = "xla",
                        interpret: bool = True,
-                       q_chunk: int = 512) -> ExecContext:
-    """Single-device context: full-sequence doc-masked attention."""
+                       q_chunk: int = 512,
+                       grid: str = "flat") -> ExecContext:
+    """Single-device context: full-sequence doc-masked attention.
+
+    ``grid`` picks the Pallas kernel schedule (flattened work queue by
+    default; ``"rect"`` for the rectangular baseline)."""
     from repro.kernels import ops as kops
 
     tabs_cache: list = []   # visit tables depend only on (doc, pos): built
@@ -184,7 +188,7 @@ def make_local_context(doc: jax.Array, pos: jax.Array,
                     np.asarray(doc), np.asarray(pos),
                     np.asarray(doc), np.asarray(pos)))
             return kops.doc_flash_attention(q, k, v, doc, pos, doc, pos,
-                                            tabs_cache[0],
+                                            tabs_cache[0], grid=grid,
                                             interpret=interpret)
         return kops.doc_attention_xla(q, k, v, doc, pos, doc, pos,
                                       q_chunk=q_chunk)

@@ -37,6 +37,8 @@ from collections import OrderedDict
 
 import numpy as np
 
+from repro.table_layout import FLAT_TABLE_NAMES, RECT_TABLE_NAMES
+
 from .plan import Shard, ShardArrays, ShardingPlan
 
 __all__ = ["PlanEncoding", "encode_plan", "encode_plan_batch",
@@ -309,10 +311,37 @@ def _bucketed(idx, nvis, nblocks, pad_to):
     return idx
 
 
+def _widen_queue(row, col, flags, width):
+    """Pad work queues to a wider static step count: repeat-last no-op
+    steps with flags 0 (never FIRST/LAST/VALID, so they neither compute
+    nor rewrite outputs — same semantics as build_work_queue's own pad
+    tail)."""
+    S = row.shape[-1]
+    if width <= S:
+        return row, col, flags
+    pad = width - S
+    tail = (*row.shape[:-1], pad)
+    return (np.concatenate([row, np.broadcast_to(row[..., -1:], tail)], -1),
+            np.concatenate([col, np.broadcast_to(col[..., -1:], tail)], -1),
+            np.concatenate([flags, np.zeros(tail, flags.dtype)], -1))
+
+
+def _queue_bucketed(row, col, flags, worst_steps, pad_to):
+    if pad_to == "full":
+        return _widen_queue(row, col, flags, worst_steps)
+    if pad_to == "bucket":
+        width = min(_next_pow2(row.shape[-1], 8), max(worst_steps, 1))
+        width = max(width, row.shape[-1])
+        return _widen_queue(row, col, flags, width)
+    return row, col, flags
+
+
 def _build_group(q_doc, q_pos, kv_doc, kv_pos, out_shape, *, block_q,
-                 block_k, pad_to):
+                 block_k, pad_to, grid="rect"):
     """One batched build_block_tables call over flattened (rows, T) pairs,
-    reshaped to ``out_shape`` leading dims."""
+    reshaped to ``out_shape`` leading dims.  Returns a dict of base-named
+    arrays: the rectangular 4 (``grid="rect"``/``"both"``) and/or the
+    flattened work-queue 6 (``grid="flat"``/``"both"``)."""
     from repro.kernels.doc_attention import build_block_tables
 
     rows = int(np.prod(out_shape))
@@ -321,12 +350,23 @@ def _build_group(q_doc, q_pos, kv_doc, kv_pos, out_shape, *, block_q,
         kv_doc.reshape(rows, -1), kv_pos.reshape(rows, -1),
         block_q=block_q, block_k=block_k)
     nq, nk = t.kv_nvis.shape[-1], t.q_nvis.shape[-1]
-    kv_idx = _bucketed(t.kv_idx, t.kv_nvis, nk, pad_to)
-    q_idx = _bucketed(t.q_idx, t.q_nvis, nq, pad_to)
-    return (kv_idx.reshape(*out_shape, nq, -1),
-            t.kv_nvis.reshape(*out_shape, nq),
-            q_idx.reshape(*out_shape, nk, -1),
-            t.q_nvis.reshape(*out_shape, nk))
+    out = {}
+    if grid in ("rect", "both"):
+        kv_idx = _bucketed(t.kv_idx, t.kv_nvis, nk, pad_to)
+        q_idx = _bucketed(t.q_idx, t.q_nvis, nq, pad_to)
+        out.update({
+            "kv_idx": kv_idx.reshape(*out_shape, nq, -1),
+            "kv_nvis": t.kv_nvis.reshape(*out_shape, nq),
+            "q_idx": q_idx.reshape(*out_shape, nk, -1),
+            "q_nvis": t.q_nvis.reshape(*out_shape, nk),
+        })
+    if grid in ("flat", "both"):
+        worst = nq * nk
+        fq = _queue_bucketed(t.fq_row, t.fq_col, t.fq_flags, worst, pad_to)
+        rq = _queue_bucketed(t.rq_row, t.rq_col, t.rq_flags, worst, pad_to)
+        for name, arr in zip(FLAT_TABLE_NAMES, (*fq, *rq)):
+            out[name] = arr.reshape(*out_shape, -1)
+    return out
 
 
 _TABLE_CACHE: OrderedDict[bytes, dict] = OrderedDict()
@@ -345,6 +385,7 @@ def emit_visit_tables(
     block_q: int = 128,
     block_k: int = 128,
     pad_to: str = "bucket",
+    grid: str = "rect",
     cache: bool = True,
 ) -> dict[str, np.ndarray]:
     """Per-rank Pallas visit tables for a batch-encoded plan.
@@ -367,15 +408,24 @@ def emit_visit_tables(
       attends the payload of rank (r - 1 - h) mod N, matching the
       chunked engine's ppermute rotation.
 
-    Visit widths are padded to a pow2 bucket (``pad_to="bucket"``) so at
-    most log2 distinct executables exist; ``"full"`` pads to the
-    worst-case width of :func:`visit_table_shapes` for AOT-spec-exact
-    shapes.  Results are memoized on the metadata content (PlanCache-hit
-    batches re-emit for free).
+    ``grid`` selects the kernel schedule the tables drive: ``"rect"``
+    emits the rectangular ``*_{kv,q}_{idx,nvis}`` layout, ``"flat"`` the
+    flattened work-queue ``*_{fq,rq}_{row,col,flags}`` layout
+    (:func:`repro.kernels.doc_attention.build_work_queue` — one step per
+    actual visit, LPT row order), ``"both"`` emits the two side by side
+    (the ``grid=`` RunConfig switch then picks at step-build time).
+
+    Visit widths / queue step counts are padded to a pow2 bucket
+    (``pad_to="bucket"``) so at most log2 distinct executables exist;
+    ``"full"`` pads to the worst-case width of :func:`visit_table_shapes`
+    for AOT-spec-exact shapes.  Results are memoized on the metadata
+    content (PlanCache-hit batches re-emit for free).
     """
     doc = np.ascontiguousarray(doc, np.int32)
     pos = np.ascontiguousarray(pos, np.int32)
     style = _table_style(strategy)
+    if grid not in ("rect", "flat", "both"):
+        raise ValueError(f"unknown table grid {grid!r}")
     if style == "flashcp":
         assert gath_doc is not None and gath_pos is not None, \
             "flashcp tables need the Eq.5 buffer metadata"
@@ -388,7 +438,7 @@ def emit_visit_tables(
         for a in (doc, pos, gath_doc, gath_pos):
             h.update(b"|" if a is None else a.tobytes())
         h.update(f"{num_workers}/{style}/{overlap}/{block_q}/{block_k}/"
-                 f"{pad_to}".encode())
+                 f"{pad_to}/{grid}".encode())
         key = h.digest()
         hit = _TABLE_CACHE.get(key)
         if hit is not None:
@@ -400,7 +450,7 @@ def emit_visit_tables(
     t_loc = C // N
     ld = doc.reshape(B, N, t_loc)
     lp = pos.reshape(B, N, t_loc)
-    kw = dict(block_q=block_q, block_k=block_k, pad_to=pad_to)
+    kw = dict(block_q=block_q, block_k=block_k, pad_to=pad_to, grid=grid)
 
     if overlap == "none":
         if style == "flashcp":
@@ -415,16 +465,11 @@ def emit_visit_tables(
         else:
             kd = np.broadcast_to(doc[:, None], (B, N, C))
             kp = np.broadcast_to(pos[:, None], (B, N, C))
-        kv_idx, kv_nvis, q_idx, q_nvis = _build_group(
-            ld, lp, kd, kp, (B, N), **kw)
-        out = {"tab_kv_idx": kv_idx, "tab_kv_nvis": kv_nvis,
-               "tab_q_idx": q_idx, "tab_q_nvis": q_nvis}
+        out = {f"tab_{name}": a for name, a in
+               _build_group(ld, lp, kd, kp, (B, N), **kw).items()}
     elif overlap == "chunked":
-        out = {}
-        for k, a in zip(("tab_loc_kv_idx", "tab_loc_kv_nvis",
-                         "tab_loc_q_idx", "tab_loc_q_nvis"),
-                        _build_group(ld, lp, ld, lp, (B, N), **kw)):
-            out[k] = a
+        out = {f"tab_loc_{name}": a for name, a in
+               _build_group(ld, lp, ld, lp, (B, N), **kw).items()}
         H = N - 1
         if style == "flashcp":
             L = gath_doc.shape[-1]
@@ -441,22 +486,25 @@ def emit_visit_tables(
         hop_qp = np.broadcast_to(lp[:, :, None], (B, N, max(H, 1), t_loc)
                                  )[:, :, :H]
         if H > 0:
-            for k, a in zip(("tab_hop_kv_idx", "tab_hop_kv_nvis",
-                             "tab_hop_q_idx", "tab_hop_q_nvis"),
-                            _build_group(hop_qd, hop_qp, hop_kd, hop_kp,
-                                         (B, N, H), **kw)):
-                out[k] = a
+            out.update({f"tab_hop_{name}": a for name, a in
+                        _build_group(hop_qd, hop_qp, hop_kd, hop_kp,
+                                     (B, N, H), **kw).items()})
         else:
             # zero-hop (N == 1) placeholders, width-matched to
             # visit_table_shapes so AOT specs agree
             nq = t_loc // block_q
             nk = segs_d.shape[-1] // block_k
-            out.update({
-                "tab_hop_kv_idx": np.zeros((B, N, 0, nq, nk), np.int32),
-                "tab_hop_kv_nvis": np.zeros((B, N, 0, nq), np.int32),
-                "tab_hop_q_idx": np.zeros((B, N, 0, nk, nq), np.int32),
-                "tab_hop_q_nvis": np.zeros((B, N, 0, nk), np.int32),
-            })
+            if grid in ("rect", "both"):
+                out.update({
+                    "tab_hop_kv_idx": np.zeros((B, N, 0, nq, nk), np.int32),
+                    "tab_hop_kv_nvis": np.zeros((B, N, 0, nq), np.int32),
+                    "tab_hop_q_idx": np.zeros((B, N, 0, nk, nq), np.int32),
+                    "tab_hop_q_nvis": np.zeros((B, N, 0, nk), np.int32),
+                })
+            if grid in ("flat", "both"):
+                out.update({f"tab_hop_{name}":
+                            np.zeros((B, N, 0, nq * nk), np.int32)
+                            for name in FLAT_TABLE_NAMES})
     else:
         raise ValueError(f"unknown overlap mode {overlap!r}")
 
@@ -464,6 +512,24 @@ def emit_visit_tables(
         _TABLE_CACHE[key] = dict(out)
         while len(_TABLE_CACHE) > _TABLE_CACHE_MAX:
             _TABLE_CACHE.popitem(last=False)
+    return out
+
+
+def _group_shapes(prefix: str, lead: tuple, nq: int, nk: int,
+                  grid: str) -> dict[str, tuple]:
+    out = {}
+    if grid in ("rect", "both"):
+        out.update({
+            f"{prefix}kv_idx": (*lead, nq, nk),
+            f"{prefix}kv_nvis": (*lead, nq),
+            f"{prefix}q_idx": (*lead, nk, nq),
+            f"{prefix}q_nvis": (*lead, nk),
+        })
+    if grid in ("flat", "both"):
+        # worst-case queue: every row visits every column (then no
+        # empty-row sentinels exist), so S_max = nq * nk both ways
+        out.update({f"{prefix}{name}": (*lead, nq * nk)
+                    for name in FLAT_TABLE_NAMES})
     return out
 
 
@@ -477,6 +543,7 @@ def visit_table_shapes(
     overlap: str = "chunked",
     block_q: int = 128,
     block_k: int = 128,
+    grid: str = "rect",
 ) -> dict[str, tuple]:
     """Worst-case-width static shapes of :func:`emit_visit_tables` output
     (dry-run / AOT input specs; ``pad_to="full"`` emission matches them).
@@ -487,19 +554,12 @@ def visit_table_shapes(
     if overlap == "none":
         kv_len = t_loc + N * buf_len if style == "flashcp" else N * t_loc
         nk = kv_len // block_k
-        return {"tab_kv_idx": (B, N, nq, nk), "tab_kv_nvis": (B, N, nq),
-                "tab_q_idx": (B, N, nk, nq), "tab_q_nvis": (B, N, nk)}
+        return _group_shapes("tab_", (B, N), nq, nk, grid)
     H = N - 1
     seg = buf_len if style == "flashcp" else t_loc
     nk_loc = t_loc // block_k
     nk_hop = seg // block_k
     return {
-        "tab_loc_kv_idx": (B, N, nq, nk_loc),
-        "tab_loc_kv_nvis": (B, N, nq),
-        "tab_loc_q_idx": (B, N, nk_loc, nq),
-        "tab_loc_q_nvis": (B, N, nk_loc),
-        "tab_hop_kv_idx": (B, N, H, nq, nk_hop),
-        "tab_hop_kv_nvis": (B, N, H, nq),
-        "tab_hop_q_idx": (B, N, H, nk_hop, nq),
-        "tab_hop_q_nvis": (B, N, H, nk_hop),
+        **_group_shapes("tab_loc_", (B, N), nq, nk_loc, grid),
+        **_group_shapes("tab_hop_", (B, N, H), nq, nk_hop, grid),
     }

@@ -1,11 +1,12 @@
 """Overlapped-vs-monolithic CP execution parity (run in a subprocess with
 8 simulated CPU devices — see tests/test_overlap.py).
 
-For {flashcp, allgather, ring} x {xla, pallas-interpret} x CP in {2, 4}
-on a multi-doc plan: the chunked-exchange engine must match the
-monolithic island (values AND gradients, tolerance-bounded), plan
-metadata must be bitwise identical between the two executions, and the
-monolithic reference itself is anchored to the single-device oracle.
+For {flashcp, allgather, ring} x {xla, pallas-interpret rect grid,
+pallas-interpret flat work-queue grid} x CP in {2, 4} on a multi-doc
+plan: the chunked-exchange engine must match the monolithic island
+(values AND gradients, tolerance-bounded), plan metadata must be bitwise
+identical between the two executions, and the monolithic reference
+itself is anchored to the single-device oracle.
 """
 
 import os
@@ -90,17 +91,18 @@ def main():
             ref_p = permute(ref, perm)
             needs_gath = strat == "flashcp"
 
-            def tables_for(overlap):
+            def tables_for(overlap, grid):
                 return emit_visit_tables(
                     stack["doc"], stack["pos"],
                     stack["gath_doc"] if needs_gath else None,
                     stack["gath_pos"] if needs_gath else None,
                     num_workers=cp, strategy=strat, overlap=overlap,
-                    block_q=BQ, block_k=BK)
+                    grid=grid, block_q=BQ, block_k=BK)
 
             base = {k_: jnp.asarray(v_) for k_, v_ in stack.items()}
             runs = {}
-            for impl in ("xla", "pallas"):
+            for impl, grid in (("xla", "rect"), ("pallas", "rect"),
+                               ("pallas", "flat")):
                 for overlap in ("none", "chunked"):
                     if impl == "pallas" and overlap == "none" \
                             and strat == "ring":
@@ -108,27 +110,27 @@ def main():
                     arrays = dict(base)
                     if impl == "pallas":
                         arrays.update({k_: jnp.asarray(v_) for k_, v_ in
-                                       tables_for(overlap).items()})
+                                       tables_for(overlap, grid).items()})
                     with set_mesh(mesh):
                         ctx = make_cp_context(
                             mesh, arrays, strategy=strat, impl=impl,
                             batch_axes=("data",), head_dim=D, q_chunk=64,
                             overlap=overlap, interpret=(impl == "pallas"),
-                            block_q=BQ, block_k=BK)
-                        runs[(impl, overlap)] = run_ctx(mesh, ctx, qp, kp,
-                                                        vp)
+                            block_q=BQ, block_k=BK, grid=grid)
+                        runs[(impl, grid, overlap)] = run_ctx(mesh, ctx, qp,
+                                                              kp, vp)
 
             # monolithic xla anchors to the single-device oracle
-            mono_out, mono_g = runs[("xla", "none")]
+            mono_out, mono_g = runs[("xla", "rect", "none")]
             np.testing.assert_allclose(mono_out, ref_p, atol=ATOL,
                                        rtol=ATOL,
                                        err_msg=f"{strat}/cp{cp} mono-vs-"
                                                "oracle")
-            # every other (impl, overlap) is parity-bounded against it
-            for (impl, overlap), (out, grads) in runs.items():
-                if (impl, overlap) == ("xla", "none"):
+            # every other (impl, grid, overlap) is parity-bounded
+            for (impl, grid, overlap), (out, grads) in runs.items():
+                if (impl, grid, overlap) == ("xla", "rect", "none"):
                     continue
-                tag = f"{strat}/cp{cp}/{impl}/{overlap}"
+                tag = f"{strat}/cp{cp}/{impl}/{grid}/{overlap}"
                 np.testing.assert_allclose(out, mono_out, atol=ATOL,
                                            rtol=ATOL, err_msg=tag)
                 for g, mg, nm in zip(grads, mono_g, "qkv"):

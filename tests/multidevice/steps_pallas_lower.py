@@ -29,22 +29,25 @@ def main():
     mesh = make_mesh((2, 4), ("data", "model"))
 
     for overlap in ("chunked", "none"):
-        run = RunConfig(arch=cfg.name, shape="smoke", cp_strategy="flashcp",
-                        attention_impl="pallas", cp_overlap=overlap,
-                        remat=False)
-        with set_mesh(mesh):
-            bundle = build_train_step(cfg, mesh, run, SHAPE,
-                                      interpret=True)
-            lowered = bundle.lower()
-            text = lowered.as_text()
-            assert "custom_call" in text or "while" in text
-            print(f"OK train_step pallas overlap={overlap} "
-                  f"({len(text)} chars)")
+        for grid in ("flat", "rect"):
+            run = RunConfig(arch=cfg.name, shape="smoke",
+                            cp_strategy="flashcp",
+                            attention_impl="pallas", cp_overlap=overlap,
+                            kernel_grid=grid, remat=False)
+            with set_mesh(mesh):
+                bundle = build_train_step(cfg, mesh, run, SHAPE,
+                                          interpret=True)
+                lowered = bundle.lower()
+                text = lowered.as_text()
+                assert "custom_call" in text or "while" in text
+                print(f"OK train_step pallas overlap={overlap} "
+                      f"grid={grid} ({len(text)} chars)")
 
-            pbundle = build_prefill_step(cfg, mesh, run, SHAPE,
-                                         interpret=True)
-            pbundle.lower()
-            print(f"OK prefill_step pallas overlap={overlap}")
+                pbundle = build_prefill_step(cfg, mesh, run, SHAPE,
+                                             interpret=True)
+                pbundle.lower()
+                print(f"OK prefill_step pallas overlap={overlap} "
+                      f"grid={grid}")
 
     print("STEPS_PALLAS_LOWER_PASS")
 

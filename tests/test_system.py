@@ -119,16 +119,28 @@ def test_dryrun_cell_records_schema():
 
 
 # --------------------------------------------------------------------- #
-@pytest.mark.xfail(
-    reason="pre-existing (seed) numeric drift between the jamba mamba "
-           "decode path and the chunked forward scan; tracked in "
-           "CHANGES.md, untouched by the planner refactor",
-    strict=False)
 def test_decode_matches_forward_logits():
     """Serving-path consistency: token-by-token decode with the KV/SSM
     caches must reproduce the teacher-forced forward logits at every
     position (binds attn_apply/attn_decode, rope positions, cache updates
-    and — for hybrid archs — the mamba train/decode paths together)."""
+    and — for hybrid archs — the mamba train/decode paths together).
+
+    Root cause of the former xfail (seed "jamba numeric drift"): it was
+    never kernel numerics — the attention decode path matches at ~2e-6
+    (starcoder below; flash_decode's f32 accumulation and softmax scale
+    are validated against the forward oracle in test_kernels.py) and so
+    does the mamba recurrence in isolation.  Jamba is *MoE*: the
+    teacher-forced forward routes all B*T tokens through
+    capacity-clipped dispatch jointly (capacity_factor=1.25 -> experts
+    overflow and *late tokens get dropped*), while one-token decode
+    steps route B tokens at a time and essentially never drop.  The
+    divergence is a documented semantic property of capacity-based
+    routing, not numeric drift — so the hybrid arch is checked with
+    capacity lifted to the drop-free regime, where decode must (and
+    does) match tightly; the divergence under the training capacity
+    factor is asserted too, pinning the root cause.
+    """
+    import dataclasses
     import numpy as np
     import jax
     import jax.numpy as jnp
@@ -136,9 +148,9 @@ def test_decode_matches_forward_logits():
     from repro.models import (decode_step, forward, init_cache, init_params,
                               make_local_context)
 
-    for arch in ("starcoder2_3b", "jamba_v0_1_52b"):
-        cfg = reduce_for_smoke(ARCHS[arch])
-        B, T = 2, 24
+    B, T = 2, 24
+
+    def worst_decode_diff(cfg):
         rng = np.random.default_rng(0)
         tokens = jnp.asarray(rng.integers(0, cfg.vocab_size, (B, T))
                              .astype(np.int32))
@@ -146,16 +158,29 @@ def test_decode_matches_forward_logits():
         pos = jnp.asarray(np.tile(np.arange(T, dtype=np.int32), (B, 1)))
         ctx = make_local_context(doc, pos, q_chunk=8)
         params = init_params(jax.random.PRNGKey(0), cfg)
-
         ref_logits, _ = forward(params, cfg, ctx, {"tokens": tokens},
                                 remat=False)
-
         cache = init_cache(cfg, B, T)
+        worst = 0.0
         for t in range(T):
             lg, cache = decode_step(params, cfg, cache,
                                     {"tokens": tokens[:, t]},
                                     jnp.full((B,), t, jnp.int32))
-            np.testing.assert_allclose(
-                np.asarray(lg), np.asarray(ref_logits[:, t]),
-                atol=2e-3, rtol=2e-3,
-                err_msg=f"{arch} decode step {t}")
+            worst = max(worst, float(np.max(np.abs(
+                np.asarray(lg) - np.asarray(ref_logits[:, t])))))
+        return worst
+
+    # attention-only arch: strict parity, no routing in the way
+    assert worst_decode_diff(reduce_for_smoke(ARCHS["starcoder2_3b"])) \
+        < 1e-4
+
+    # hybrid MoE arch: strict parity once capacity clipping can't drop
+    # tokens (cap >= all routed tokens)
+    jamba = reduce_for_smoke(ARCHS["jamba_v0_1_52b"])
+    dropfree = dataclasses.replace(jamba, capacity_factor=float(B * T))
+    assert worst_decode_diff(dropfree) < 1e-4
+
+    # ... and the divergence under the training capacity factor is real
+    # and capacity-induced (if this starts passing, routing went
+    # drop-free and the drop-free branch above is redundant)
+    assert worst_decode_diff(jamba) > 1e-2
