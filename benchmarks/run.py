@@ -11,6 +11,7 @@ row is a ratio/summary).  Suites:
   planner  planner runtime
   overlap blocking vs chunked CP execution + visit-table builder
   kernel  rect vs flat work-queue kernel grids (BENCH_kernel.json)
+  serve   flash-decode vs dense serving + chunked prefill (BENCH_serve.json)
 
 Usage: PYTHONPATH=src python -m benchmarks.run [suite ...]
        PYTHONPATH=src python -m benchmarks.run --suite kernel [--smoke]
@@ -30,7 +31,7 @@ import time
 def main() -> None:
     from . import (bench_breakdown, bench_context_window, bench_e2e_cp,
                    bench_ilp_vs_heuristic, bench_kernel_efficiency,
-                   bench_overlap, bench_planner_runtime)
+                   bench_overlap, bench_planner_runtime, bench_serve)
 
     suites = {
         "fig3": bench_kernel_efficiency.run,
@@ -41,6 +42,7 @@ def main() -> None:
         "planner": bench_planner_runtime.run,
         "overlap": bench_overlap.run,
         "kernel": bench_kernel_efficiency.run_kernel,
+        "serve": bench_serve.run,
     }
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("names", nargs="*", metavar="suite",

@@ -1,4 +1,4 @@
-"""Serving example: batched prefill + token-by-token decode with KV cache.
+"""Serving example: continuous-batching prefill + flash-decode engine.
 
     PYTHONPATH=src python examples/serve_decode.py --requests 4 --gen 16
 """
@@ -20,11 +20,16 @@ def main():
     ap.add_argument("--requests", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=64)
     ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument("--decode-impl", default="flash",
+                    choices=("flash", "dense"))
     args = ap.parse_args()
     out = serve(types.SimpleNamespace(
-        arch=args.arch, smoke=True, mesh="1x1", requests=args.requests,
-        prompt_len=args.prompt_len, gen=args.gen))
-    print("generated token matrix shape:", out["tokens"].shape)
+        arch=args.arch, smoke=True, requests=args.requests,
+        prompt_len=args.prompt_len, gen=args.gen,
+        decode_impl=args.decode_impl))
+    done = sorted(out["results"])
+    print(f"completed requests: {done}; "
+          f"tokens per request: {[len(out['tokens'][r]) for r in done]}")
 
 
 if __name__ == "__main__":

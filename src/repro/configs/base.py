@@ -150,6 +150,9 @@ class RunConfig:
     dataset: str = "wlb_llm"
     cp_strategy: Literal["flashcp", "llama3", "per_doc", "ring", "contiguous"] = "flashcp"
     attention_impl: Literal["xla", "pallas"] = "xla"
+    # decode attention: fused flash-decode kernel (default) vs the XLA
+    # dense-softmax parity oracle (models/attention.py::attn_decode)
+    decode_impl: Literal["flash", "dense"] = "flash"
     # chunked = overlapped KV exchange (ppermute hops merged via online
     # LSE); none = the monolithic blocking-collective islands
     cp_overlap: Literal["chunked", "none"] = "chunked"

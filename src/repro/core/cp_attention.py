@@ -60,7 +60,7 @@ from jax.sharding import PartitionSpec as P
 from repro.models.context import ExecContext, local_ssm_scan
 
 __all__ = ["make_cp_context", "resolve_overlap", "CP_AXIS",
-           "merge_partials", "finalize_partial"]
+           "merge_partials", "finalize_partial", "merge_partials_axis"]
 
 CP_AXIS = "model"
 NEG = -1e30
@@ -113,6 +113,20 @@ def merge_partials(parts):
     for p in parts:
         acc = p if acc is None else _merge_step(acc, p)
     return acc
+
+
+def merge_partials_axis(part, axis_name):
+    """Collective form of :func:`merge_partials`: fold one (o, m, l)
+    partial per rank across a mesh axis (inside shard_map/pmap).  The
+    global row max moves via pmax; every rank rescales to it and psums
+    the accumulator and the sum — the distributed flash-decode LSE merge
+    (serving: each rank attends its cache shard, then merges here)."""
+    o, m, l = part
+    m_g = jax.lax.pmax(m, axis_name)
+    c = jnp.exp(m - m_g)
+    o_g = jax.lax.psum(o * c[..., None], axis_name)
+    l_g = jax.lax.psum(l * c, axis_name)
+    return o_g, m_g, l_g
 
 
 def finalize_partial(part, dtype):

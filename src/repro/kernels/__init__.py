@@ -1,12 +1,13 @@
 from .doc_attention import (BlockTables, build_block_tables,
                             build_work_queue, flash_bwd_dkv,
                             flash_bwd_dq, flash_fwd)
-from .flash_decode import decode_reference, flash_decode
+from .flash_decode import (decode_reference, flash_decode,
+                           flash_decode_sharded)
 from .ops import doc_attention_xla, doc_flash_attention
 from .ref import doc_mask, mha_reference
 
 __all__ = ["BlockTables", "build_block_tables", "build_work_queue",
            "decode_reference",
-           "flash_decode", "flash_bwd_dkv",
+           "flash_decode", "flash_decode_sharded", "flash_bwd_dkv",
            "flash_bwd_dq", "flash_fwd", "doc_attention_xla",
            "doc_flash_attention", "doc_mask", "mha_reference"]

@@ -8,14 +8,29 @@ request are never fetched (ragged batches pay only for what they use).
 
 Layout: q (B, Hq, D); k, v (B, Hkv, S, D); lengths (B,) — position t
 attends to cache[0..t] inclusive (the current token's KV must already be
-written at position lengths[b]).  GQA: the kernel processes one KV head's
+written at position lengths[b]).  A negative length marks a request with
+no visible KV (e.g. an empty CP shard): nothing is fetched and the
+partial is the merge identity.  GQA: the kernel processes one KV head's
 whole query group per grid cell, so each cache block is read exactly once
 per KV head.
 
-Forward-only (inference); validated against ``ref.decode_reference`` in
-interpret mode (tests/test_kernels.py).  Under CP serving the cache is
-sequence-sharded: each rank runs this kernel on its shard and ranks merge
-with the standard LSE combine (the kernel returns (out, m, l) partials).
+Two output modes:
+
+* ``partial=False`` (default) — the normalized attention output
+  (B, Hq, D), zeros for empty rows.
+* ``partial=True`` — the merge-ready triple ``(o, m, l)``: the
+  *unnormalized* fp32 accumulator (B, Hq, D), the running row max
+  (B, Hq) and the running row sum (B, Hq).  Partials from disjoint KV
+  subsets combine with :func:`repro.core.cp_attention.merge_partials`
+  and normalize with ``finalize_partial`` — the same online-LSE
+  substrate the CP training islands run on.  Under CP serving the cache
+  is sequence-sharded: each rank runs the kernel on its shard (local
+  length = global length minus the shard offset, clamped) and ranks
+  merge with the standard LSE combine — :func:`flash_decode_sharded` is
+  the single-process form, ``merge_partials_axis`` the shard_map form.
+
+Forward-only (inference); validated against ``decode_reference`` in
+interpret mode (tests/test_kernels.py, tests/test_serve.py).
 """
 
 from __future__ import annotations
@@ -27,7 +42,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-__all__ = ["flash_decode", "decode_reference"]
+__all__ = ["flash_decode", "flash_decode_sharded", "decode_reference"]
 
 NEG = -1e30
 DEFAULT_BLOCK_K = 256
@@ -46,14 +61,19 @@ def decode_reference(q, k, v, lengths, *, scale=None):
     s = jnp.where(mask, s, -jnp.inf)
     p = jax.nn.softmax(s, axis=-1)
     out = jnp.einsum("bhgs,bhsd->bhgd", p, v.astype(jnp.float32))
+    out = jnp.where(lengths[:, None, None, None] >= 0, out, 0.0)
     return out.reshape(B, Hq, D).astype(q.dtype)
 
 
 def _decode_kernel(len_ref,                      # scalar prefetch
                    q_ref, k_ref, v_ref,
-                   o_ref,
-                   acc_ref, m_ref, l_ref,
-                   *, scale: float, block_k: int, num_blocks: int):
+                   *refs,
+                   scale: float, block_k: int, num_blocks: int,
+                   partial: bool):
+    if partial:
+        o_ref, om_ref, ol_ref, acc_ref, m_ref, l_ref = refs
+    else:
+        o_ref, acc_ref, m_ref, l_ref = refs
     b, h, kb = (pl.program_id(i) for i in range(3))
 
     @pl.when(kb == 0)
@@ -92,14 +112,26 @@ def _decode_kernel(len_ref,                      # scalar prefetch
 
     @pl.when(kb == num_blocks - 1)
     def _finalize():
-        l = l_ref[:, :1]
-        out = jnp.where(l > 0, acc_ref[...] / jnp.maximum(l, 1e-30), 0.0)
-        o_ref[0, 0] = out.astype(o_ref.dtype)
+        if partial:
+            o_ref[0, 0] = acc_ref[...].astype(o_ref.dtype)
+            om_ref[0, 0] = m_ref[...]
+            ol_ref[0, 0] = l_ref[...]
+        else:
+            l = l_ref[:, :1]
+            out = jnp.where(l > 0, acc_ref[...] / jnp.maximum(l, 1e-30),
+                            0.0)
+            o_ref[0, 0] = out.astype(o_ref.dtype)
 
 
 def flash_decode(q, k, v, lengths, *, scale=None,
-                 block_k: int = DEFAULT_BLOCK_K, interpret: bool = False):
-    """q (B, Hq, D); k, v (B, Hkv, S, D); lengths (B,) -> (B, Hq, D)."""
+                 block_k: int = DEFAULT_BLOCK_K, interpret: bool = False,
+                 partial: bool = False):
+    """q (B, Hq, D); k, v (B, Hkv, S, D); lengths (B,).
+
+    ``partial=False`` -> normalized output (B, Hq, D).
+    ``partial=True`` -> merge-ready ``(o, m, l)``: fp32 accumulator
+    (B, Hq, D), row max (B, Hq), row sum (B, Hq).
+    """
     B, Hq, D = q.shape
     _, Hkv, S, _ = k.shape
     G = Hq // Hkv
@@ -111,9 +143,20 @@ def flash_decode(q, k, v, lengths, *, scale=None,
 
     def kv_block(b, h, kb, len_ref):
         # clamp past-the-end blocks to the last needed block: Pallas's
-        # revisiting pipeline turns the repeat into a no-op fetch
-        last_needed = len_ref[b] // block_k
+        # revisiting pipeline turns the repeat into a no-op fetch.  The
+        # lower clamp covers negative lengths (nothing visible on this
+        # shard): the fetch lands on block 0 but _visit never fires.
+        last_needed = jnp.clip(len_ref[b] // block_k, 0, nk - 1)
         return (b, h, jnp.minimum(kb, last_needed), 0)
+
+    out_specs = [pl.BlockSpec((1, 1, G, D), lambda b, h, kb, s_: (b, h, 0, 0))]
+    out_shape = [jax.ShapeDtypeStruct((B, Hkv, G, D),
+                                      jnp.float32 if partial else q.dtype)]
+    if partial:
+        stat_spec = pl.BlockSpec((1, 1, G, 128),
+                                 lambda b, h, kb, s_: (b, h, 0, 0))
+        out_specs += [stat_spec, stat_spec]
+        out_shape += [jax.ShapeDtypeStruct((B, Hkv, G, 128), jnp.float32)] * 2
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=1,
@@ -123,8 +166,7 @@ def flash_decode(q, k, v, lengths, *, scale=None,
             pl.BlockSpec((1, 1, block_k, D), kv_block),
             pl.BlockSpec((1, 1, block_k, D), kv_block),
         ],
-        out_specs=pl.BlockSpec((1, 1, G, D),
-                               lambda b, h, kb, s_: (b, h, 0, 0)),
+        out_specs=out_specs if partial else out_specs[0],
         scratch_shapes=[
             pltpu.VMEM((G, D), jnp.float32),
             pltpu.VMEM((G, 128), jnp.float32),
@@ -132,11 +174,45 @@ def flash_decode(q, k, v, lengths, *, scale=None,
         ],
     )
     kernel = functools.partial(_decode_kernel, scale=float(scale),
-                               block_k=block_k, num_blocks=nk)
+                               block_k=block_k, num_blocks=nk,
+                               partial=partial)
     q4 = q.reshape(B, Hkv, G, D)
     out = pl.pallas_call(
         kernel, grid_spec=grid_spec,
-        out_shape=jax.ShapeDtypeStruct((B, Hkv, G, D), q.dtype),
+        out_shape=out_shape if partial else out_shape[0],
         interpret=interpret,
     )(lengths, q4, k, v)
-    return out.reshape(B, Hq, D)
+    if not partial:
+        return out.reshape(B, Hq, D)
+    o, m, l = out
+    return (o.reshape(B, Hq, D), m[..., 0].reshape(B, Hq),
+            l[..., 0].reshape(B, Hq))
+
+
+def flash_decode_sharded(q, k, v, lengths, *, shards: int, scale=None,
+                         block_k: int = DEFAULT_BLOCK_K,
+                         interpret: bool = False):
+    """Decode attention over a sequence-sharded cache, merged on the
+    online-LSE substrate.
+
+    The cache's S axis is split into ``shards`` contiguous segments
+    (shard s owns positions [s*S/N, (s+1)*S/N)); each segment runs
+    :func:`flash_decode` in partial mode against its *local* length
+    (global length minus the segment offset, clamped), and the partials
+    fold through ``merge_partials`` + ``finalize_partial`` — bit-for-bit
+    the combine a CP decode island performs across ranks, executed
+    in-process.  ``shards=1`` degenerates to one partial + finalize.
+    """
+    from repro.core.cp_attention import finalize_partial, merge_partials
+
+    _, _, S, _ = k.shape
+    assert S % shards == 0, (S, shards)
+    Sl = S // shards
+    parts = []
+    for s in range(shards):
+        local_len = jnp.clip(lengths - s * Sl, -1, Sl - 1)
+        parts.append(flash_decode(
+            q, k[:, :, s * Sl:(s + 1) * Sl], v[:, :, s * Sl:(s + 1) * Sl],
+            local_len, scale=scale, block_k=block_k, interpret=interpret,
+            partial=True))
+    return finalize_partial(merge_partials(parts), q.dtype)

@@ -1,14 +1,24 @@
-"""Serving driver: batched prefill + decode with a CP-sharded KV cache.
+"""Serving driver: continuous-batching prefill + flash-decode engine CLI.
 
-Demonstrates the inference side of the framework: requests are batched,
-prefilled through the CP forward pass, then decoded token-by-token with the
-distributed flash-decode attention (cache sequence axis sharded over the
-``model`` mesh axis; XLA partitions the LSE merge).
+Builds a :class:`repro.serve.ServeEngine`, submits a ragged mix of
+requests, and drains it: chunked cache-writing prefill (no prompt
+replay), per-slot ragged decode with the fused flash-decode kernel
+(``--decode-impl dense`` selects the XLA softmax parity oracle), greedy
+or temperature/top-k sampling, and slot admission/retirement mid-flight
+(more requests than ``--slots`` exercises continuous batching).
+
+Prefill and decode are timed and counted separately — the prompt tokens
+and the prefill-produced first token are *prefill* output; decode tok/s
+covers decode steps only.
 
 CPU-scale example:
 
     PYTHONPATH=src python -m repro.launch.serve --arch starcoder2_3b \
         --smoke --requests 4 --prompt-len 64 --gen 16
+
+``--attn-shards N`` splits the decode cache into N LSE-merged segments —
+the in-process form of the CP-sharded cache merge (the shard_map form is
+checked in tests/multidevice/decode_cp_check.py).
 """
 
 from __future__ import annotations
@@ -17,103 +27,93 @@ import argparse
 import time
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
-from repro.compat import set_mesh
 from repro.configs import get_config, reduce_for_smoke
-from repro.launch.mesh import make_local_mesh, make_production_mesh
-from repro.models import decode_step, init_cache, init_params
-from repro.models.context import make_local_context
-from repro.models.transformer import forward
-from repro.data.packing import doc_ids_and_positions
+from repro.serve import ServeEngine
 
 
 def serve(args) -> dict:
     cfg = get_config(args.arch)
     if args.smoke:
         cfg = reduce_for_smoke(cfg)
-    if args.mesh == "prod":
-        mesh = make_production_mesh()
-    else:
-        d, m = (int(x) for x in args.mesh.split("x"))
-        mesh = make_local_mesh(d, m)
 
     B = args.requests
     Tp = args.prompt_len
-    S = Tp + args.gen
-    rng = np.random.default_rng(0)
+    gen = args.gen
+    slots = getattr(args, "slots", 0) or min(B, 8)
+    ragged = getattr(args, "ragged", True)
+    rng = np.random.default_rng(getattr(args, "seed", 0))
 
-    with set_mesh(mesh):
-        params = init_params(jax.random.PRNGKey(0), cfg)
+    # ragged prompt mix: lengths in [Tp/4, Tp], one request at the full Tp
+    lens = np.full((B,), Tp, np.int64)
+    if ragged and B > 1:
+        lens[1:] = rng.integers(max(1, Tp // 4), Tp + 1, (B - 1,))
+    max_len = int(Tp + gen)
 
-        # ---- prefill: one packed doc per request ---------------------- #
-        doc, pos = doc_ids_and_positions(np.asarray([Tp]))
-        doc = jnp.asarray(np.tile(doc, (B, 1)).astype(np.int32))
-        pos = jnp.asarray(np.tile(pos, (B, 1)).astype(np.int32))
-        ctx = make_local_context(doc, pos, q_chunk=min(128, Tp))
-        batch = {"tokens": jnp.asarray(
-            rng.integers(0, cfg.vocab_size, (B, Tp)).astype(np.int32))}
+    eng = ServeEngine(
+        cfg, num_slots=slots, max_len=max_len,
+        prefill_chunk=getattr(args, "prefill_chunk", 64),
+        decode_impl=getattr(args, "decode_impl", "flash"),
+        attn_shards=getattr(args, "attn_shards", 1),
+        seed=getattr(args, "seed", 0))
+    eng.warmup(prompt_len=Tp)
+
+    temperature = getattr(args, "temperature", 0.0)
+    top_k = getattr(args, "top_k", 0)
+    for i in range(B):
+        frames = None
         if cfg.frontend == "audio_frames":
-            batch["frame_embeds"] = jnp.asarray(
-                rng.standard_normal((B, Tp, cfg.d_model)).astype(np.float32))
-        if cfg.frontend == "vit_patches":
-            batch["patch_embeds"] = jnp.zeros((B, Tp, cfg.d_model))
-            pm = np.zeros((B, Tp), bool)
-            pm[:, :min(cfg.num_patch_tokens, Tp)] = True
-            batch["patch_mask"] = jnp.asarray(pm)
+            # the request's *real* frame embeddings — these reach the KV
+            # cache through prefill (the old driver replayed zeros)
+            frames = rng.standard_normal(
+                (int(lens[i]), cfg.d_model)).astype(np.float32)
+        eng.submit(rng.integers(0, cfg.vocab_size, int(lens[i]))
+                   .astype(np.int32),
+                   max_new=gen, temperature=temperature, top_k=top_k,
+                   frames=frames)
 
-        t0 = time.time()
-        logits, _ = jax.jit(lambda p, b: forward(p, cfg, ctx, b,
-                                                 remat=False))(params, batch)
-        nxt = jnp.argmax(logits[:, -1, :], -1).astype(jnp.int32)
-        t_prefill = time.time() - t0
+    t0 = time.perf_counter()
+    results = eng.run()
+    wall = time.perf_counter() - t0
 
-        # ---- replay prompt into the cache then decode ----------------- #
-        cache = init_cache(cfg, B, S)
-        dec = jax.jit(lambda p, c, b, t: decode_step(p, cfg, c, b, t))
-
-        def db(tok, t):
-            b = {}
-            if cfg.frontend == "audio_frames":
-                b["frame_embeds"] = jnp.zeros((B, cfg.d_model))
-            else:
-                b["tokens"] = tok
-            return b
-
-        for t in range(Tp):
-            _, cache = dec(params, cache,
-                           db(batch["tokens"][:, t] if "tokens" in batch
-                              else None, t),
-                           jnp.full((B,), t, jnp.int32))
-
-        generated = [np.asarray(nxt)]
-        t0 = time.time()
-        tok = nxt
-        for t in range(Tp, S - 1):
-            logits, cache = dec(params, cache, db(tok, t),
-                                jnp.full((B,), t, jnp.int32))
-            tok = jnp.argmax(logits, -1).astype(jnp.int32)
-            generated.append(np.asarray(tok))
-        t_decode = time.time() - t0
-        n_gen = len(generated)
-
-    toks_s = B * n_gen / max(t_decode, 1e-9)
-    print(f"[serve] prefill {Tp} toks x {B} reqs in {t_prefill:.2f}s; "
-          f"decoded {n_gen} steps x {B} reqs in {t_decode:.2f}s "
-          f"({toks_s:.1f} tok/s)")
-    return {"prefill_s": t_prefill, "decode_s": t_decode,
-            "tokens": np.stack(generated, 1)}
+    s = eng.stats
+    tp = eng.throughput()
+    print(f"[serve] {cfg.name}: {B} requests ({slots} slots, "
+          f"prompts {lens.min()}..{lens.max()}, gen {gen}, "
+          f"decode_impl={eng.decode_impl})")
+    print(f"[serve] prefill: {s['prefill_tokens']} prompt tokens in "
+          f"{s['prefill_steps']} chunk steps + "
+          f"{s['prefill_decode_steps']} replay steps, "
+          f"{s['prefill_s']:.2f}s ({tp['prefill_tok_s']:.1f} tok/s)")
+    print(f"[serve] decode:  {s['decode_tokens']} tokens in "
+          f"{s['decode_steps']} steps, {s['decode_s']:.2f}s "
+          f"({tp['decode_tok_s']:.1f} tok/s); wall {wall:.2f}s")
+    return {"results": results, "stats": dict(s), "throughput": tp,
+            "prompt_lens": lens,
+            "tokens": {r: results[r]["tokens"] for r in results}}
 
 
 def main():
-    ap = argparse.ArgumentParser()
+    ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--arch", default="starcoder2_3b")
     ap.add_argument("--smoke", action="store_true")
-    ap.add_argument("--mesh", default="1x1")
     ap.add_argument("--requests", type=int, default=4)
+    ap.add_argument("--slots", type=int, default=0,
+                    help="cache slots (0 = min(requests, 8))")
     ap.add_argument("--prompt-len", type=int, default=64)
     ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument("--prefill-chunk", type=int, default=64,
+                    dest="prefill_chunk")
+    ap.add_argument("--decode-impl", choices=("flash", "dense"),
+                    default="flash", dest="decode_impl")
+    ap.add_argument("--attn-shards", type=int, default=1,
+                    dest="attn_shards")
+    ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--top-k", type=int, default=0, dest="top_k")
+    ap.add_argument("--uniform", action="store_false", dest="ragged",
+                    help="all prompts at --prompt-len (default: ragged)")
+    ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
     serve(args)
 

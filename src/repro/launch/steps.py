@@ -255,9 +255,17 @@ def build_decode_step(cfg: ModelConfig, mesh, run: RunConfig,
                       shape: ShapeConfig) -> StepBundle:
     baxes = batch_axes_of(mesh)
 
+    # the fused flash kernel has no GSPMD partitioning rule: with the
+    # cache S axis sharded over ``model`` the pjit path needs the
+    # shard_map LSE-merge island (tests/multidevice/decode_cp_check.py),
+    # so meshes that actually shard the cache keep the dense oracle here;
+    # in-process shard emulation lives in ServeEngine(attn_shards=)
+    impl = run.decode_impl if mesh.shape.get("model", 1) == 1 else "dense"
+
     def decode(params, cache, batch):
         logits, new_cache = model_decode_step(params, cfg, cache,
-                                              batch, batch["pos_t"])
+                                              batch, batch["pos_t"],
+                                              attn_impl=impl)
         return logits, new_cache
 
     params_s, _ = _abstract_state(cfg)

@@ -1,9 +1,11 @@
 from .context import ExecContext, make_local_context, local_ssm_scan
 from .transformer import (block_kinds, decode_step, forward, init_cache,
-                          init_params, loss_fn, period_length)
+                          init_params, loss_fn, period_length,
+                          prefill_forward, supports_cached_prefill)
 
 __all__ = [
     "ExecContext", "make_local_context", "local_ssm_scan",
     "block_kinds", "decode_step", "forward", "init_cache", "init_params",
-    "loss_fn", "period_length",
+    "loss_fn", "period_length", "prefill_forward",
+    "supports_cached_prefill",
 ]

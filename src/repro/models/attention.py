@@ -12,7 +12,8 @@ import jax.numpy as jnp
 
 from .layers import _he, rope
 
-__all__ = ["attn_init", "attn_apply", "attn_cache_init", "attn_decode"]
+__all__ = ["attn_init", "attn_apply", "attn_cache_init", "attn_decode",
+           "attn_prefill"]
 
 
 def attn_init(rng, cfg):
@@ -71,18 +72,24 @@ def attn_cache_init(cfg, batch: int, max_len: int, dtype):
     }
 
 
-def attn_decode(p, cfg, x_t, pos_t, cache):
-    """x_t (B, d); pos_t (B,) current positions.  Distributed flash-decode:
-    under pjit the cache's sequence axis is sharded over the ``model`` mesh
-    axis, and XLA partitions the fp32 softmax (max/sum all-reduce + psum of
-    the weighted values) — the LSE-merge pattern — automatically."""
+def attn_decode(p, cfg, x_t, pos_t, cache, *, impl: str = "flash",
+                shards: int = 1, block_k: int = 256,
+                interpret: bool | None = None):
+    """x_t (B, d); pos_t (B,) current positions.
+
+    ``impl="flash"`` (default) runs the fused Pallas flash-decode kernel
+    per cache shard (``shards`` contiguous S-segments, 1 = whole cache)
+    and merges the (o, m, l) partials on the online-LSE substrate —
+    blocks past each request's length are never fetched, so ragged
+    batches pay only for the cache they use.  ``impl="dense"`` keeps the
+    XLA dense softmax as the parity oracle.  ``interpret=None`` picks
+    Pallas interpret mode automatically off-TPU."""
     B, d = x_t.shape
     hd = cfg.resolved_head_dim
     q, k, v = _project(p, cfg, x_t[:, None, :])
     q = rope(q, pos_t[:, None], cfg.rope_theta)            # (B,Hq,1,hd)
     k = rope(k, pos_t[:, None], cfg.rope_theta)
 
-    S = cache["k"].shape[2]
     # scatter the new KV at pos_t (per sample) — in-place update, not a
     # full-cache rewrite (the decode step is HBM-bound on the cache read).
     bi = jnp.arange(B)[:, None]
@@ -90,13 +97,58 @@ def attn_decode(p, cfg, x_t, pos_t, cache):
     kc = cache["k"].at[bi, hi, pos_t[:, None]].set(k[:, :, 0, :])
     vc = cache["v"].at[bi, hi, pos_t[:, None]].set(v[:, :, 0, :])
 
-    G = cfg.num_heads // cfg.num_kv_heads
-    qf = (q.astype(jnp.float32) * hd ** -0.5) \
-        .reshape(B, cfg.num_kv_heads, G, hd)
-    s = jnp.einsum("bhgd,bhsd->bhgs", qf, kc.astype(jnp.float32))
-    mask = (jnp.arange(S)[None, :] <= pos_t[:, None])[:, None, None, :]
-    s = jnp.where(mask, s, -jnp.inf)
-    p_att = jax.nn.softmax(s, axis=-1)
-    out = jnp.einsum("bhgs,bhsd->bhgd", p_att, vc.astype(jnp.float32))
-    out = out.reshape(B, cfg.num_heads * hd).astype(x_t.dtype)
+    if impl == "flash":
+        from repro.kernels.flash_decode import flash_decode_sharded
+
+        if interpret is None:
+            interpret = jax.default_backend() != "tpu"
+        out = flash_decode_sharded(
+            q[:, :, 0, :], kc, vc, pos_t, shards=shards,
+            scale=hd ** -0.5, block_k=block_k, interpret=interpret)
+        out = out.reshape(B, cfg.num_heads * hd).astype(x_t.dtype)
+    elif impl == "dense":
+        from repro.kernels.flash_decode import decode_reference
+
+        out = decode_reference(q[:, :, 0, :], kc, vc, pos_t) \
+            .reshape(B, cfg.num_heads * hd).astype(x_t.dtype)
+    else:
+        raise ValueError(f"unknown decode attention impl {impl!r}")
     return out @ p["wo"].astype(x_t.dtype), {"k": kc, "v": vc}
+
+
+def attn_prefill(p, cfg, x, pos, cache, active):
+    """Chunked-prefill attention: write this chunk's KV straight into the
+    cache, then attend the chunk's queries against the cache prefix.
+
+    x (B, T, d) chunk activations; pos (B, T) *global* cache positions of
+    the chunk tokens (monotone per row); active (B, T) bool — False rows/
+    tokens (padding past a short prompt, idle slots) neither write the
+    cache nor produce output.  Causality falls out of the position mask:
+    every cache entry at position <= pos[b, t] was written by this or an
+    earlier chunk, and entries past the chunk are masked (unwritten or
+    future).  Returns (out (B, T, d), new cache).
+    """
+    from repro.kernels.ref import mha_reference
+
+    B, T, _ = x.shape
+    hd = cfg.resolved_head_dim
+    q, k, v = _project(p, cfg, x)
+    q = rope(q, pos, cfg.rope_theta)
+    k = rope(k, pos, cfg.rope_theta)
+
+    S = cache["k"].shape[2]
+    # scatter the chunk's KV at its global positions; inactive tokens are
+    # routed out of bounds and dropped, leaving the cache untouched there
+    bi = jnp.arange(B)[:, None, None]
+    hi = jnp.arange(cfg.num_kv_heads)[None, :, None]
+    ti = jnp.where(active, pos, S)[:, None, :]
+    kc = cache["k"].at[bi, hi, ti].set(k, mode="drop")
+    vc = cache["v"].at[bi, hi, ti].set(v, mode="drop")
+
+    q_doc = jnp.where(active, 0, -1).astype(jnp.int32)
+    kv_pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+    kv_doc = jnp.zeros((B, S), jnp.int32)
+    out = mha_reference(q, kc, vc, q_doc, pos, kv_doc, kv_pos,
+                        scale=hd ** -0.5)
+    out = out.swapaxes(1, 2).reshape(B, T, cfg.num_heads * hd)
+    return out @ p["wo"].astype(x.dtype), {"k": kc, "v": vc}

@@ -21,7 +21,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
-from .attention import attn_apply, attn_cache_init, attn_decode, attn_init
+from .attention import (attn_apply, attn_cache_init, attn_decode, attn_init,
+                        attn_prefill)
 from .context import ExecContext
 from .layers import (chunked_lm_loss, cross_entropy, dense, dense_init,
                      embed, embed_init, mlp_apply, mlp_init, rmsnorm,
@@ -32,7 +33,8 @@ from .xlstm import (mlstm_apply, mlstm_cache_init, mlstm_decode, mlstm_init,
                     slstm_apply, slstm_cache_init, slstm_decode, slstm_init)
 
 __all__ = ["period_length", "block_kinds", "init_params", "forward",
-           "loss_fn", "init_cache", "decode_step"]
+           "loss_fn", "init_cache", "decode_step", "prefill_forward",
+           "supports_cached_prefill"]
 
 AUX_LOSS_WEIGHT = 0.01
 
@@ -254,6 +256,80 @@ def loss_fn_chunked_head(params, cfg: ModelConfig, ctx: ExecContext, batch,
 
 
 # --------------------------------------------------------------------- #
+# prefill: forward pass that writes the KV cache directly
+# --------------------------------------------------------------------- #
+def supports_cached_prefill(cfg: ModelConfig) -> bool:
+    """Cache-writing prefill needs every mixer to be attention (KV caches
+    are written by position; recurrent mixers would need final-state
+    extraction from the scan — those archs fall back to replay prefill)."""
+    return all(mixer == "attn" for mixer, _ in block_kinds(cfg))
+
+
+def prefill_forward(params, cfg: ModelConfig, cache, batch, pos, active,
+                    *, with_logits: bool = True):
+    """Forward one prompt chunk and write its KV into the cache in the
+    same pass — no prompt replay through ``decode_step``.
+
+    batch: the usual forward inputs for a (B, T) chunk ("tokens" or
+    "frame_embeds"/"patch_*").  pos (B, T) int32: global cache positions
+    of the chunk tokens.  active (B, T) bool: which tokens are real
+    (False = padding past a short prompt or an idle slot — they neither
+    write the cache nor influence outputs).  Returns (logits (B, T,
+    vocab) or None, new cache).  Chunked calls with increasing ``pos``
+    windows implement chunked prefill: each chunk attends the full
+    cached prefix.  ``with_logits=False`` skips the lm_head — only the
+    final chunk's last token ever feeds sampling, so earlier chunks
+    need not pay the (T, vocab) projection.
+
+    MoE routing runs *drop-free* (capacity lifted to the chunk size):
+    the decode path routes one token per step and never drops, so a
+    capacity-clipped prefill would write KV inconsistent with the cache
+    the decode path builds (the PR-3 root cause of the old decode-vs-
+    forward xfail, now on the serving side).
+    """
+    assert supports_cached_prefill(cfg), \
+        f"{cfg.name}: cache-writing prefill requires attention-only mixers"
+    kinds = block_kinds(cfg)
+    x = inputs_to_embeds(params, cfg, batch)
+    # cap >= n for any routing needs capacity_factor >= E / top_k
+    drop_free_cf = max(cfg.capacity_factor,
+                       float(cfg.num_experts) / max(cfg.top_k, 1)) \
+        if cfg.num_experts else cfg.capacity_factor
+
+    def period_body(carry, scanned):
+        x = carry
+        period_params, period_cache = scanned
+        new_cache = {}
+        for j, (mixer, ffn) in enumerate(kinds):
+            sub = period_params[f"sub_{j}"]
+            h = rmsnorm(sub["norm1"], x, cfg.norm_eps)
+            mx, nc = attn_prefill(sub["attn"], cfg, h, pos,
+                                  period_cache[f"sub_{j}"], active)
+            new_cache[f"sub_{j}"] = nc
+            x = x + mx
+            if ffn != "none":
+                h = rmsnorm(sub["norm2"], x, cfg.norm_eps)
+                if ffn == "moe":
+                    f, _ = moe_apply(sub["moe"], h, None, top_k=cfg.top_k,
+                                     capacity_factor=drop_free_cf,
+                                     kind=cfg.mlp)
+                else:
+                    f = mlp_apply(sub["mlp"], h, cfg.mlp)
+                x = x + f
+        return x, new_cache
+
+    x, new_cache = jax.lax.scan(period_body, x, (params["layers"], cache))
+    if not with_logits:
+        return None, new_cache
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    if "lm_head" in params:
+        logits = dense(params["lm_head"], x)
+    else:
+        logits = x @ params["embed"]["e"].T.astype(x.dtype)
+    return logits, new_cache
+
+
+# --------------------------------------------------------------------- #
 # decode
 # --------------------------------------------------------------------- #
 def _sub_cache_init(cfg: ModelConfig, mixer: str, batch: int, max_len: int,
@@ -282,12 +358,19 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int):
         lambda a: jnp.zeros((n_periods,) + a.shape, a.dtype), period)
 
 
-def decode_step(params, cfg: ModelConfig, cache, batch, pos_t):
+def decode_step(params, cfg: ModelConfig, cache, batch, pos_t, *,
+                attn_impl: str = "flash", attn_shards: int = 1,
+                block_k: int = 256, interpret: bool | None = None):
     """One decode step.
 
     batch: {"tokens": (B,) int32} (or {"frame_embeds": (B, d)} for audio).
     pos_t: (B,) int32 current positions.  Returns (logits (B, vocab),
     new cache).
+
+    ``attn_impl`` picks the decode attention: ``"flash"`` (default) is
+    the fused flash-decode kernel with the cache split into
+    ``attn_shards`` LSE-merged segments; ``"dense"`` the XLA softmax
+    oracle (see :func:`repro.models.attention.attn_decode`).
     """
     dtype = jnp.dtype(cfg.dtype)
     kinds = block_kinds(cfg)
@@ -304,7 +387,9 @@ def decode_step(params, cfg: ModelConfig, cache, batch, pos_t):
             c = period_cache[f"sub_{j}"]
             h = rmsnorm(sub["norm1"], x[:, None], cfg.norm_eps)[:, 0]
             if mixer == "attn":
-                mx, nc = attn_decode(sub["attn"], cfg, h, pos_t, c)
+                mx, nc = attn_decode(sub["attn"], cfg, h, pos_t, c,
+                                     impl=attn_impl, shards=attn_shards,
+                                     block_k=block_k, interpret=interpret)
             elif mixer == "mamba":
                 mx, nc = mamba_decode(sub["mamba"], h,
                                       c, d_state=cfg.mamba_d_state,

@@ -1,0 +1,15 @@
+"""CP serving engine: continuous batching over a slot-based KV cache.
+
+``ServeEngine`` drives chunked cache-writing prefill + ragged
+flash-decode steps; ``Scheduler``/``Request`` manage slot admission and
+retirement; ``sampling`` holds the per-slot greedy/temperature/top-k
+sampler.  See launch/serve.py for the CLI and README "Serving engine"
+for the architecture.
+"""
+
+from .engine import ServeEngine
+from .sampling import apply_top_k, sample_tokens
+from .scheduler import Request, Scheduler, SlotState
+
+__all__ = ["ServeEngine", "Request", "Scheduler", "SlotState",
+           "apply_top_k", "sample_tokens"]

@@ -1,0 +1,332 @@
+"""Continuous-batching CP serving engine.
+
+One engine owns a ``num_slots`` x ``max_len`` KV cache and three jitted
+programs:
+
+* **prefill** — chunked, cache-writing: each prompt chunk runs
+  :func:`repro.models.prefill_forward` on its slot's cache view, writing
+  roped KV directly from the forward pass (prefill cost is
+  ``ceil(Tp / prefill_chunk)`` forward calls — *independent of Tp in
+  decode steps*; the old engine replayed all Tp prompt tokens through
+  ``decode_step``).  Archs with recurrent mixers (Jamba, xLSTM) fall back
+  to masked replay prefill — their decode caches hold scan states that a
+  chunked forward does not produce.
+* **decode** — one ragged step for every active slot:
+  ``decode_step`` with per-slot ``lengths`` as positions, flash-decode
+  attention by default (``decode_impl="dense"`` keeps the XLA softmax as
+  the parity oracle), and per-row masking so idle/retired slots never
+  touch live cache rows.  Sampling (greedy / temperature / top-k,
+  per-slot) happens in the same program.
+* **sample** — the prefill's last-token logits produce each request's
+  first token, counted as *prefill* output (decode tok/s measures decode
+  steps only).
+
+The scheduler (``scheduler.py``) admits queued requests into free slots
+and retires finished ones mid-flight — a finished short request frees its
+slot for the next queued prompt while long requests keep decoding.
+"""
+
+from __future__ import annotations
+
+import functools
+import time
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import (decode_step, init_cache, init_params,
+                          prefill_forward, supports_cached_prefill)
+from .sampling import sample_tokens, sample_tokens_jit
+from .scheduler import Request, Scheduler
+
+__all__ = ["ServeEngine"]
+
+
+def _slot_view(cache, slot):
+    return jax.tree.map(
+        lambda l: jax.lax.dynamic_slice_in_dim(l, slot, 1, axis=1), cache)
+
+
+def _slot_write(cache, view, slot):
+    return jax.tree.map(
+        lambda l, nl: jax.lax.dynamic_update_slice_in_dim(
+            l, nl.astype(l.dtype), slot, axis=1), cache, view)
+
+
+def _mask_rows(new, old, active):
+    """Keep ``new`` only on active slot rows (row axis 1 of every cache
+    leaf: (P, B, ...))."""
+    def sel(n, o):
+        m = active.reshape((1, -1) + (1,) * (n.ndim - 2))
+        return jnp.where(m, n.astype(o.dtype), o)
+    return jax.tree.map(sel, new, old)
+
+
+class ServeEngine:
+    """Drive requests through prefill + continuous-batching decode.
+
+    Parameters: ``decode_impl`` "flash" (default) or "dense";
+    ``attn_shards`` splits the decode cache into LSE-merged segments
+    (emulating a CP-sharded cache in-process); ``interpret=None``
+    auto-selects Pallas interpret mode off-TPU.
+    """
+
+    def __init__(self, cfg: ModelConfig, params=None, *,
+                 num_slots: int = 4, max_len: int = 256,
+                 prefill_chunk: int = 64, decode_impl: str = "flash",
+                 attn_shards: int = 1, block_k: int = 256,
+                 interpret: bool | None = None, seed: int = 0):
+        self.cfg = cfg
+        self.num_slots = num_slots
+        self.max_len = max_len
+        self.prefill_chunk = min(prefill_chunk, max_len)
+        self.decode_impl = decode_impl
+        self.cached_prefill = supports_cached_prefill(cfg)
+        if params is None:
+            params = init_params(jax.random.PRNGKey(seed), cfg)
+        self.params = params
+        self.cache = init_cache(cfg, num_slots, max_len)
+        self.sched = Scheduler(num_slots, max_len)
+        self.rng = jax.random.PRNGKey(seed)
+        self._next_rid = 0
+        self.stats: dict[str, Any] = {
+            "prefill_tokens": 0, "prefill_steps": 0,
+            "prefill_decode_steps": 0, "prefill_s": 0.0,
+            "decode_tokens": 0, "decode_steps": 0, "decode_s": 0.0,
+            "admitted": 0, "retired": 0}
+
+        dec_kw = dict(attn_impl=decode_impl, attn_shards=attn_shards,
+                      block_k=block_k, interpret=interpret)
+
+        def _decode_batch(tok, frames):
+            if cfg.frontend == "audio_frames":
+                # modality gap of the stubbed EnCodec frontend: generated
+                # steps have no codec->frame embedder, so continuation
+                # frames are zeros; *prompt* frames flow through prefill.
+                return {"frame_embeds": frames}
+            return {"tokens": tok}
+
+        def decode_fn(params, cache, tok, pos_t, active, rng, temps, topk):
+            frames = jnp.zeros((num_slots, cfg.d_model), jnp.dtype(cfg.dtype))
+            logits, new_cache = decode_step(
+                params, cfg, cache, _decode_batch(tok, frames), pos_t,
+                **dec_kw)
+            new_cache = _mask_rows(new_cache, cache, active)
+            nxt = sample_tokens(rng, logits.astype(jnp.float32), temps, topk)
+            return nxt, logits, new_cache
+
+        def prefill_chunk_fn(params, cache, slot, tokens, frames, pos,
+                             active, *, with_logits, s_view):
+            batch = {"tokens": tokens}
+            if cfg.frontend == "audio_frames":
+                batch = {"frame_embeds": frames}
+            elif cfg.frontend == "vit_patches":
+                T = tokens.shape[1]
+                batch["patch_embeds"] = jnp.zeros(
+                    (1, T, cfg.d_model), jnp.dtype(cfg.dtype))
+                batch["patch_mask"] = jnp.zeros((1, T), bool)
+            view = _slot_view(cache, slot)
+            # crop the attended cache to the pow2 bucket covering this
+            # chunk's end: prefill attention is O(C * s_view), not
+            # O(C * max_len) (attn caches are (P, 1, Hkv, S, hd))
+            crop = jax.tree.map(lambda l: l[:, :, :, :s_view], view)
+            logits, ncrop = prefill_forward(params, cfg, crop, batch, pos,
+                                            active, with_logits=with_logits)
+            nview = jax.tree.map(
+                lambda f, n: jax.lax.dynamic_update_slice_in_dim(
+                    f, n.astype(f.dtype), 0, axis=3), view, ncrop)
+            return logits, _slot_write(cache, nview, slot)
+
+        def replay_fn(params, cache, tok, frames, pos_t, active):
+            logits, new_cache = decode_step(
+                params, cfg, cache, _decode_batch(tok, frames), pos_t,
+                **dec_kw)
+            return logits, _mask_rows(new_cache, cache, active)
+
+        # the cache argument is donated everywhere: the engine always
+        # replaces self.cache with the program's output, so XLA can
+        # update the (num_slots x max_len) KV buffers in place instead
+        # of keeping two full copies live
+        self._decode_fn = jax.jit(decode_fn, donate_argnums=(1,))
+        self._replay_fn = jax.jit(replay_fn, donate_argnums=(1,))
+        self._prefill_fns: dict[tuple[bool, int], Any] = {}
+        self._prefill_chunk_body = prefill_chunk_fn
+
+    def _prefill_fn(self, with_logits: bool, s_view: int):
+        """Jitted prefill-chunk program per (head?, cache-view bucket);
+        only the final chunk pays the (T, vocab) head projection."""
+        key = (with_logits, s_view)
+        if key not in self._prefill_fns:
+            self._prefill_fns[key] = jax.jit(
+                functools.partial(self._prefill_chunk_body,
+                                  with_logits=with_logits, s_view=s_view),
+                donate_argnums=(1,))
+        return self._prefill_fns[key]
+
+    def _prefill_buckets(self, prompt_len: int):
+        """(is_last, s_view) for each chunk of a ``prompt_len`` prompt."""
+        C = self.prefill_chunk
+        n_chunks = -(-prompt_len // C)
+        out = []
+        for ci in range(n_chunks):
+            s_view = C
+            while s_view < (ci + 1) * C:
+                s_view *= 2
+            out.append((ci == n_chunks - 1, min(s_view, self.max_len)))
+        return out
+
+    # ------------------------------------------------------------- #
+    def submit(self, tokens, *, max_new: int = 16, temperature: float = 0.0,
+               top_k: int = 0, eos_id: int = -1, frames=None) -> int:
+        """Queue one request; returns its request id."""
+        rid = self._next_rid
+        self._next_rid += 1
+        self.sched.submit(Request(
+            rid=rid, tokens=np.asarray(tokens, np.int32), max_new=max_new,
+            temperature=temperature, top_k=top_k, eos_id=eos_id,
+            frames=None if frames is None
+            else np.asarray(frames, np.float32)))
+        return rid
+
+    def _split(self):
+        self.rng, k = jax.random.split(self.rng)
+        return k
+
+    # ------------------------------------------------------------- #
+    def _prefill(self, slot: int, req: Request) -> None:
+        t0 = time.perf_counter()
+        if self.cached_prefill:
+            logits_last = self._prefill_cached(slot, req)
+        else:
+            logits_last = self._prefill_replay(slot, req)
+        first = sample_tokens_jit(
+            self._split(), logits_last[None].astype(jnp.float32),
+            jnp.asarray([req.temperature], jnp.float32),
+            jnp.asarray([req.top_k], jnp.int32))
+        first = int(np.asarray(first)[0])
+        self.stats["prefill_s"] += time.perf_counter() - t0
+        self.stats["prefill_tokens"] += req.prompt_len
+        self.stats["admitted"] += 1
+        self.sched.start(slot, first)
+        if self.sched.slots[slot] is None:
+            self.stats["retired"] += 1
+
+    def _prefill_cached(self, slot: int, req: Request):
+        C = self.prefill_chunk
+        Tp = req.prompt_len
+        n_chunks = -(-Tp // C)
+        toks = np.zeros((1, n_chunks * C), np.int32)
+        toks[0, :Tp] = req.tokens
+        frames = np.zeros((1, n_chunks * C, self.cfg.d_model), np.float32)
+        if req.frames is not None:
+            frames[0, :Tp] = req.frames
+        slot_j = jnp.asarray(slot, jnp.int32)
+        logits = None
+        for ci, (is_last, s_view) in enumerate(self._prefill_buckets(Tp)):
+            sl = slice(ci * C, (ci + 1) * C)
+            pos = jnp.asarray(np.arange(ci * C, (ci + 1) * C,
+                                        dtype=np.int32)[None])
+            active = jnp.asarray((np.arange(ci * C, (ci + 1) * C) < Tp)[None])
+            logits, self.cache = self._prefill_fn(is_last, s_view)(
+                self.params, self.cache, slot_j, jnp.asarray(toks[:, sl]),
+                jnp.asarray(frames[:, sl]), pos, active)
+            self.stats["prefill_steps"] += 1
+        return logits[0, (Tp - 1) - (n_chunks - 1) * C]
+
+    def _prefill_replay(self, slot: int, req: Request):
+        """Recurrent-mixer fallback: feed the prompt through the decode
+        path one token at a time, updates masked to this slot's row.
+        Audio prompts replay their *real* frame embeddings."""
+        B = self.num_slots
+        onehot = jnp.zeros((B,), bool).at[slot].set(True)
+        logits = None
+        for t in range(req.prompt_len):
+            tok = jnp.zeros((B,), jnp.int32).at[slot].set(
+                int(req.tokens[t]))
+            frames = jnp.zeros((B, self.cfg.d_model), jnp.float32)
+            if req.frames is not None:
+                frames = frames.at[slot].set(jnp.asarray(req.frames[t]))
+            pos_t = jnp.zeros((B,), jnp.int32).at[slot].set(t)
+            logits, self.cache = self._replay_fn(
+                self.params, self.cache, tok, frames, pos_t, onehot)
+            self.stats["prefill_decode_steps"] += 1
+        return logits[slot]
+
+    # ------------------------------------------------------------- #
+    def _decode_once(self) -> None:
+        sc = self.sched
+        active = jnp.asarray(sc.active_mask())
+        lengths = jnp.asarray(sc.lengths())
+        tok = np.zeros((self.num_slots,), np.int32)
+        for s in sc.active_slots:
+            tok[s] = sc.slots[s].generated[-1]
+        t0 = time.perf_counter()
+        nxt, _, self.cache = self._decode_fn(
+            self.params, self.cache, jnp.asarray(tok), lengths, active,
+            self._split(), jnp.asarray(sc.temperatures()),
+            jnp.asarray(sc.top_ks()))
+        nxt = np.asarray(jax.block_until_ready(nxt))
+        self.stats["decode_s"] += time.perf_counter() - t0
+        n_active = len(sc.active_slots)
+        self.stats["decode_steps"] += 1
+        self.stats["decode_tokens"] += n_active
+        self.stats["retired"] += len(sc.record(nxt))
+
+    def step(self) -> bool:
+        """Admit + prefill newly placed requests, then one decode step.
+        Returns False when no work remains."""
+        for slot, req in self.sched.admit():
+            self._prefill(slot, req)
+        if self.sched.active_slots:
+            self._decode_once()
+        return self.sched.has_work
+
+    def run(self, max_steps: int = 100_000) -> dict[int, dict[str, Any]]:
+        """Drain the queue; returns {rid: {"tokens", "prompt_len"}}."""
+        steps = 0
+        while self.step():
+            steps += 1
+            if steps >= max_steps:
+                break
+        return self.sched.finished
+
+    def warmup(self, prompt_len: int | None = None) -> None:
+        """Compile the decode + prefill + sampling programs outside the
+        timed window (all-inactive calls leave cache *values* untouched;
+        outputs are reassigned because the cache argument is donated).
+        ``prompt_len`` warms every prefill-chunk variant a prompt of
+        that length uses (default: a single-chunk prompt)."""
+        zi = jnp.zeros((self.num_slots,), jnp.int32)
+        _, _, self.cache = self._decode_fn(
+            self.params, self.cache, zi, zi,
+            jnp.zeros((self.num_slots,), bool), self._split(),
+            jnp.zeros((self.num_slots,), jnp.float32), zi)
+        sample_tokens_jit(self._split(),
+                          jnp.zeros((1, self.cfg.vocab_size), jnp.float32),
+                          jnp.zeros((1,), jnp.float32),
+                          jnp.zeros((1,), jnp.int32))
+        C = self.prefill_chunk
+        if self.cached_prefill:
+            for is_last, s_view in set(
+                    self._prefill_buckets(prompt_len or C)):
+                _, self.cache = self._prefill_fn(is_last, s_view)(
+                    self.params, self.cache, jnp.asarray(0, jnp.int32),
+                    jnp.zeros((1, C), jnp.int32),
+                    jnp.zeros((1, C, self.cfg.d_model), jnp.float32),
+                    jnp.asarray(np.arange(C, dtype=np.int32)[None]),
+                    jnp.zeros((1, C), bool))
+        else:
+            _, self.cache = self._replay_fn(
+                self.params, self.cache, zi,
+                jnp.zeros((self.num_slots, self.cfg.d_model), jnp.float32),
+                zi, jnp.zeros((self.num_slots,), bool))
+
+    def throughput(self) -> dict[str, float]:
+        s = self.stats
+        return {
+            "prefill_tok_s": s["prefill_tokens"] / max(s["prefill_s"], 1e-9),
+            "decode_tok_s": s["decode_tokens"] / max(s["decode_s"], 1e-9),
+        }

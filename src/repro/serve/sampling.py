@@ -1,0 +1,44 @@
+"""Token sampling for the serving engine: greedy + temperature / top-k.
+
+Per-slot sampling parameters ride as arrays so one jitted sampler serves
+a heterogeneous batch: ``temperature`` (B,) — 0 selects greedy argmax for
+that slot; ``top_k`` (B,) int — 0 disables the top-k filter for that
+slot.  Greedy slots are bitwise argmax (the flash-vs-dense parity oracle
+in the serving smoke runs on them).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["apply_top_k", "sample_tokens", "sample_tokens_jit"]
+
+
+def apply_top_k(logits, top_k):
+    """Mask logits outside each row's top-k.  logits (B, V); top_k (B,)
+    int32, 0 = no restriction.  Ties at the k-th value are kept."""
+    B, V = logits.shape
+    srt = jnp.sort(logits, axis=-1)                      # ascending
+    idx = jnp.clip(V - jnp.maximum(top_k, 1), 0, V - 1)
+    thr = jnp.take_along_axis(srt, idx[:, None], axis=-1)
+    keep = (top_k <= 0)[:, None] | (logits >= thr)
+    return jnp.where(keep, logits, -jnp.inf)
+
+
+def sample_tokens(rng, logits, temperature, top_k):
+    """One token per row.  logits (B, V) -> (B,) int32.
+
+    temperature (B,): 0 -> greedy argmax; >0 -> categorical over
+    top-k-filtered logits scaled by 1/temperature.
+    """
+    greedy = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    scaled = apply_top_k(logits.astype(jnp.float32), top_k) \
+        / jnp.maximum(temperature, 1e-6)[:, None]
+    sampled = jax.random.categorical(rng, scaled, axis=-1).astype(jnp.int32)
+    return jnp.where(temperature <= 0, greedy, sampled)
+
+
+#: process-wide jitted sampler (shared across engines — one compile per
+#: batch shape)
+sample_tokens_jit = jax.jit(sample_tokens)

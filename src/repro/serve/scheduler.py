@@ -1,0 +1,146 @@
+"""Continuous-batching scheduler: slot admission, ragged decode, retirement.
+
+The engine owns ``num_slots`` cache rows.  Requests queue FIFO; whenever a
+slot is free the next request is admitted into it (prefill), and a slot
+frees the moment its request finishes (EOS or ``max_new`` tokens) — other
+slots keep decoding, so a finished short request never holds a long one
+hostage (the decode batch is *ragged* by construction: per-slot ``lengths``
+drive the attention mask / flash-decode block clamp).
+
+Host-side bookkeeping only — all array work lives in the engine.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Any
+
+import numpy as np
+
+__all__ = ["Request", "SlotState", "Scheduler"]
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    tokens: np.ndarray                  # prompt token ids (Tp,) int32
+    max_new: int = 16
+    temperature: float = 0.0            # 0 = greedy
+    top_k: int = 0                      # 0 = unrestricted
+    eos_id: int = -1                    # -1 = never stops early
+    # audio-frontend prompts: per-token frame embeddings (Tp, d_model);
+    # ``tokens`` still carries the codec ids for bookkeeping
+    frames: np.ndarray | None = None
+
+    @property
+    def prompt_len(self) -> int:
+        return int(self.tokens.shape[0])
+
+
+@dataclasses.dataclass
+class SlotState:
+    request: Request
+    length: int = 0                     # tokens in cache (prompt + generated)
+    generated: list[int] = dataclasses.field(default_factory=list)
+
+    @property
+    def done(self) -> bool:
+        r = self.request
+        if len(self.generated) >= r.max_new:
+            return True
+        return bool(self.generated) and r.eos_id >= 0 \
+            and self.generated[-1] == r.eos_id
+
+
+class Scheduler:
+    """FIFO queue + slot table.  ``admit()`` pairs free slots with queued
+    requests; ``record()`` appends sampled tokens and retires finished
+    slots, returning the completed requests."""
+
+    def __init__(self, num_slots: int, max_len: int):
+        self.num_slots = num_slots
+        self.max_len = max_len
+        self.queue: deque[Request] = deque()
+        self.slots: list[SlotState | None] = [None] * num_slots
+        self.finished: dict[int, dict[str, Any]] = {}
+
+    # ------------------------------------------------------------- #
+    def submit(self, req: Request) -> None:
+        if req.prompt_len + req.max_new > self.max_len:
+            raise ValueError(
+                f"request {req.rid}: prompt {req.prompt_len} + max_new "
+                f"{req.max_new} exceeds cache max_len {self.max_len}")
+        self.queue.append(req)
+
+    def admit(self) -> list[tuple[int, Request]]:
+        """Fill free slots from the queue; returns (slot, request) pairs
+        the engine must prefill."""
+        placed = []
+        for s in range(self.num_slots):
+            if self.slots[s] is None and self.queue:
+                req = self.queue.popleft()
+                self.slots[s] = SlotState(req)
+                placed.append((s, req))
+        return placed
+
+    # ------------------------------------------------------------- #
+    @property
+    def active_slots(self) -> list[int]:
+        return [s for s, st in enumerate(self.slots) if st is not None]
+
+    @property
+    def has_work(self) -> bool:
+        return bool(self.queue) or any(st is not None for st in self.slots)
+
+    def lengths(self) -> np.ndarray:
+        """Per-slot cache occupancy (0 for idle slots) — the ragged
+        ``pos_t``/``lengths`` feed for the decode step."""
+        return np.asarray([0 if st is None else st.length
+                           for st in self.slots], np.int32)
+
+    def active_mask(self) -> np.ndarray:
+        return np.asarray([st is not None for st in self.slots], bool)
+
+    def temperatures(self) -> np.ndarray:
+        return np.asarray([0.0 if st is None else st.request.temperature
+                           for st in self.slots], np.float32)
+
+    def top_ks(self) -> np.ndarray:
+        return np.asarray([0 if st is None else st.request.top_k
+                           for st in self.slots], np.int32)
+
+    # ------------------------------------------------------------- #
+    def start(self, slot: int, first_token: int) -> None:
+        """Mark a freshly-prefilled slot: cache holds the prompt, and the
+        prefill's last logits produced the first generated token."""
+        st = self.slots[slot]
+        st.length = st.request.prompt_len
+        st.generated.append(int(first_token))
+        self._maybe_retire(slot)
+
+    def record(self, tokens: np.ndarray) -> list[int]:
+        """One decode step happened: every active slot consumed its last
+        token (cache grew by one) and sampled the next.  Returns slots
+        retired this step."""
+        retired = []
+        for s in self.active_slots:
+            st = self.slots[s]
+            st.length += 1
+            st.generated.append(int(tokens[s]))
+            if self._maybe_retire(s):
+                retired.append(s)
+        return retired
+
+    def _maybe_retire(self, slot: int) -> bool:
+        st = self.slots[slot]
+        if not st.done:
+            return False
+        gen = st.generated
+        r = st.request
+        if r.eos_id >= 0 and r.eos_id in gen:
+            gen = gen[:gen.index(r.eos_id) + 1]
+        self.finished[r.rid] = {"tokens": np.asarray(gen, np.int32),
+                                "prompt_len": r.prompt_len}
+        self.slots[slot] = None
+        return True

@@ -175,6 +175,23 @@ def test_flash_decode_matches_reference(B, Hq, Hkv, S, D, bk, dtype, tol):
                                atol=tol, rtol=tol)
 
 
+@pytest.mark.parametrize("length", [0, 7, 31, 32, 127])  # < block_k, ==S-1
+def test_flash_decode_clamp_boundaries(length):
+    """Index-map clamp correctness at the block edges: lengths below one
+    block, at a block boundary, and at the cache end S-1."""
+    from repro.kernels.flash_decode import decode_reference, flash_decode
+    B, Hq, Hkv, S, D, bk = 2, 4, 2, 128, 16, 32
+    rng = np.random.default_rng(2)
+    q = jnp.asarray(rng.standard_normal((B, Hq, D)).astype(np.float32))
+    k = jnp.asarray(rng.standard_normal((B, Hkv, S, D)).astype(np.float32))
+    v = jnp.asarray(rng.standard_normal((B, Hkv, S, D)).astype(np.float32))
+    lengths = jnp.asarray([length, S - 1], jnp.int32)
+    ref = decode_reference(q, k, v, lengths)
+    out = flash_decode(q, k, v, lengths, block_k=bk, interpret=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               atol=2e-5, rtol=2e-5)
+
+
 def test_flash_decode_matches_model_decode_attention():
     """The kernel agrees with the model's decode-attention math."""
     from repro.kernels.flash_decode import decode_reference

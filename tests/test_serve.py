@@ -1,0 +1,360 @@
+"""Serving-engine tests: flash-decode partial/sharded parity, cache-writing
+chunked prefill (zero decode steps, replay parity), continuous-batching
+admit/retire, flash-vs-dense greedy parity, audio-frame prefill, sampling."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import get_config, reduce_for_smoke
+from repro.core.cp_attention import finalize_partial, merge_partials
+from repro.kernels.flash_decode import (decode_reference, flash_decode,
+                                        flash_decode_sharded)
+from repro.models import (decode_step, forward, init_cache, init_params,
+                          make_local_context, prefill_forward,
+                          supports_cached_prefill)
+from repro.serve import Request, Scheduler, ServeEngine
+from repro.serve.sampling import apply_top_k, sample_tokens
+
+RNG = np.random.default_rng(0)
+
+
+def _qkv(B, Hq, Hkv, S, D, dtype=np.float32, seed=0):
+    rng = np.random.default_rng(seed)
+    q = jnp.asarray(rng.standard_normal((B, Hq, D)).astype(dtype))
+    k = jnp.asarray(rng.standard_normal((B, Hkv, S, D)).astype(dtype))
+    v = jnp.asarray(rng.standard_normal((B, Hkv, S, D)).astype(dtype))
+    return q, k, v
+
+
+# ===================================================================== #
+# flash-decode partial mode + LSE merge
+# ===================================================================== #
+@pytest.mark.parametrize("B,Hq,Hkv,S,D,bk", [
+    (2, 4, 2, 128, 16, 32),
+    (1, 8, 1, 256, 32, 64),     # MQA (G = 8)
+    (3, 4, 4, 64, 64, 16),      # MHA (G = 1)
+])
+def test_partial_mode_finalizes_to_reference(B, Hq, Hkv, S, D, bk):
+    q, k, v = _qkv(B, Hq, Hkv, S, D)
+    lengths = jnp.asarray(
+        RNG.integers(0, S - 1, (B,)).astype(np.int32)).at[0].set(S - 1)
+    part = flash_decode(q, k, v, lengths, block_k=bk, interpret=True,
+                        partial=True)
+    o, m, l = part
+    assert o.shape == (B, Hq, D) and m.shape == l.shape == (B, Hq)
+    out = finalize_partial(part, q.dtype)
+    ref = decode_reference(q, k, v, lengths)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               atol=2e-5, rtol=2e-5)
+
+
+@pytest.mark.parametrize("shards", [1, 2, 4])
+@pytest.mark.parametrize("lengths", [
+    [127, 63],          # length == S-1 clamp boundary + mid
+    [7, 0],             # length < block_k, and a single-token request
+    [31, 32],           # exactly at a shard boundary
+])
+def test_sharded_merge_matches_reference(shards, lengths):
+    B, Hq, Hkv, S, D = 2, 4, 2, 128, 16
+    q, k, v = _qkv(B, Hq, Hkv, S, D)
+    ln = jnp.asarray(lengths, jnp.int32)
+    out = flash_decode_sharded(q, k, v, ln, shards=shards, block_k=32,
+                               interpret=True)
+    ref = decode_reference(q, k, v, ln)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               atol=2e-5, rtol=2e-5)
+
+
+def test_empty_shard_partial_is_merge_identity():
+    """A shard with no visible KV (negative local length) must contribute
+    nothing: merging it in cannot change the result."""
+    B, Hq, Hkv, S, D = 2, 4, 2, 64, 16
+    q, k, v = _qkv(B, Hq, Hkv, S, D)
+    ln = jnp.asarray([10, 40], jnp.int32)
+    real = flash_decode(q, k, v, ln, block_k=16, interpret=True,
+                        partial=True)
+    empty = flash_decode(q, k, v, jnp.asarray([-1, -1], jnp.int32),
+                         block_k=16, interpret=True, partial=True)
+    o, m, l = empty
+    assert np.all(np.asarray(o) == 0) and np.all(np.asarray(l) == 0)
+    merged = finalize_partial(merge_partials([real, empty]), q.dtype)
+    alone = finalize_partial(real, q.dtype)
+    np.testing.assert_allclose(np.asarray(merged), np.asarray(alone),
+                               atol=1e-6, rtol=1e-6)
+
+
+# ===================================================================== #
+# cache-writing chunked prefill
+# ===================================================================== #
+def _smoke(arch):
+    return reduce_for_smoke(get_config(arch))
+
+
+def test_prefill_cache_matches_replay():
+    """Chunked prefill must write the same KV cache as replaying the
+    prompt through decode_step, and its last logits must match the
+    teacher-forced forward."""
+    cfg = _smoke("starcoder2_3b")
+    B, Tp, S, C = 2, 12, 24, 4
+    lens = [Tp, 9]
+    tokens = jnp.asarray(RNG.integers(0, cfg.vocab_size, (B, Tp))
+                         .astype(np.int32))
+    params = init_params(jax.random.PRNGKey(0), cfg)
+
+    cache_r = init_cache(cfg, B, S)
+    for t in range(Tp):
+        _, cache_r = decode_step(params, cfg, cache_r,
+                                 {"tokens": tokens[:, t]},
+                                 jnp.full((B,), t, jnp.int32),
+                                 attn_impl="dense")
+
+    cache_p = init_cache(cfg, B, S)
+    logits = None
+    for c0 in range(0, Tp, C):
+        pos = jnp.asarray(np.tile(np.arange(c0, c0 + C, dtype=np.int32),
+                                  (B, 1)))
+        active = jnp.asarray(np.stack(
+            [np.arange(c0, c0 + C) < l for l in lens]))
+        logits, cache_p = prefill_forward(
+            params, cfg, cache_p, {"tokens": tokens[:, c0:c0 + C]}, pos,
+            active)
+
+    kr = np.asarray(jax.tree.leaves(cache_r)[0])
+    kp = np.asarray(jax.tree.leaves(cache_p)[0])
+    for b, l in enumerate(lens):
+        np.testing.assert_allclose(kp[:, b, :, :l], kr[:, b, :, :l],
+                                   atol=1e-5, rtol=1e-5)
+
+    doc = jnp.zeros((B, Tp), jnp.int32)
+    posf = jnp.asarray(np.tile(np.arange(Tp, dtype=np.int32), (B, 1)))
+    ctx = make_local_context(doc, posf, q_chunk=8)
+    ref_logits, _ = forward(params, cfg, ctx, {"tokens": tokens},
+                            remat=False)
+    np.testing.assert_allclose(np.asarray(logits[0, -1]),
+                               np.asarray(ref_logits[0, -1]),
+                               atol=1e-4, rtol=1e-4)
+
+
+def test_prefill_does_zero_decode_steps():
+    """Regression for the seed prompt-replay bug: prefill cost must be
+    chunk steps, never per-token decode steps, and the chunk-step count
+    must be ceil(Tp / C) — independent of Tp in decode steps."""
+    cfg = _smoke("starcoder2_3b")
+    assert supports_cached_prefill(cfg)
+    C = 8
+    for Tp in (5, 16, 19):
+        eng = ServeEngine(cfg, num_slots=1, max_len=Tp + 4,
+                          prefill_chunk=C, seed=0)
+        eng.submit(RNG.integers(0, cfg.vocab_size, Tp).astype(np.int32),
+                   max_new=2)
+        eng.run()
+        assert eng.stats["prefill_decode_steps"] == 0
+        assert eng.stats["prefill_steps"] == -(-Tp // C)
+
+
+def test_moe_prefill_routes_drop_free():
+    """Regression: chunked prefill must not capacity-clip MoE routing —
+    the decode path routes one token per step and never drops, so a
+    clipped prefill would write KV inconsistent with the decode-built
+    cache.  Prefill (drop-free routing) must match replay exactly."""
+    cfg = _smoke("olmoe_1b_7b")
+    assert cfg.num_experts > 0 and supports_cached_prefill(cfg)
+    B, Tp, S, C = 2, 12, 16, 4
+    tokens = jnp.asarray(RNG.integers(0, cfg.vocab_size, (B, Tp))
+                         .astype(np.int32))
+    params = init_params(jax.random.PRNGKey(0), cfg)
+
+    cache_r = init_cache(cfg, B, S)
+    for t in range(Tp):
+        _, cache_r = decode_step(params, cfg, cache_r,
+                                 {"tokens": tokens[:, t]},
+                                 jnp.full((B,), t, jnp.int32),
+                                 attn_impl="dense")
+
+    cache_p = init_cache(cfg, B, S)
+    for c0 in range(0, Tp, C):
+        pos = jnp.asarray(np.tile(np.arange(c0, c0 + C, dtype=np.int32),
+                                  (B, 1)))
+        active = jnp.ones((B, C), bool)
+        _, cache_p = prefill_forward(
+            params, cfg, cache_p, {"tokens": tokens[:, c0:c0 + C]}, pos,
+            active)
+
+    kr = np.asarray(jax.tree.leaves(cache_r)[0])
+    kp = np.asarray(jax.tree.leaves(cache_p)[0])
+    np.testing.assert_allclose(kp[:, :, :, :Tp], kr[:, :, :, :Tp],
+                               atol=1e-4, rtol=1e-4)
+
+
+def test_recurrent_arch_falls_back_to_replay():
+    cfg = _smoke("jamba_v0_1_52b")
+    assert not supports_cached_prefill(cfg)
+    eng = ServeEngine(cfg, num_slots=1, max_len=16, seed=0)
+    eng.submit(RNG.integers(0, cfg.vocab_size, 6).astype(np.int32),
+               max_new=2)
+    out = eng.run()
+    assert len(out) == 1 and len(out[0]["tokens"]) == 2
+    assert eng.stats["prefill_decode_steps"] == 6
+    assert eng.stats["prefill_steps"] == 0
+
+
+# ===================================================================== #
+# continuous batching end-to-end
+# ===================================================================== #
+def _run_engine(cfg, prompts, impl, *, slots=3, max_new=6, shards=1,
+                **submit_kw):
+    eng = ServeEngine(cfg, num_slots=slots, max_len=64, prefill_chunk=8,
+                      decode_impl=impl, attn_shards=shards, seed=0)
+    for p in prompts:
+        eng.submit(p, max_new=max_new, **submit_kw)
+    return eng, eng.run()
+
+
+def test_serving_smoke_admit_retire_and_flash_dense_parity():
+    """More requests than slots: slots retire mid-flight and re-admit;
+    greedy outputs must be identical under flash and dense decode (and
+    under a 2-way LSE-sharded cache)."""
+    cfg = _smoke("starcoder2_3b")
+    prompts = [RNG.integers(0, cfg.vocab_size, l).astype(np.int32)
+               for l in (12, 7, 19, 5, 15)]
+    ef, of = _run_engine(cfg, prompts, "flash")
+    ed, od = _run_engine(cfg, prompts, "dense")
+    es, osh = _run_engine(cfg, prompts, "flash", shards=2)
+    assert set(of) == set(od) == set(osh) == set(range(5))
+    for r in of:
+        assert np.array_equal(of[r]["tokens"], od[r]["tokens"])
+        assert np.array_equal(of[r]["tokens"], osh[r]["tokens"])
+    # all slots were reused: 5 requests through 3 slots
+    assert ef.stats["admitted"] == ef.stats["retired"] == 5
+
+
+def test_engine_greedy_matches_full_recompute():
+    """The cache path (prefill + incremental decode) reproduces naive
+    greedy generation that re-runs the full forward every token."""
+    cfg = _smoke("starcoder2_3b")
+    prompt = RNG.integers(0, cfg.vocab_size, 10).astype(np.int32)
+    n_new = 5
+    eng, out = _run_engine(cfg, [prompt], "flash", slots=1, max_new=n_new)
+    params = eng.params
+
+    toks = list(prompt)
+    ref = []
+    for _ in range(n_new):
+        T = len(toks)
+        doc = jnp.zeros((1, T), jnp.int32)
+        pos = jnp.asarray(np.arange(T, dtype=np.int32)[None])
+        ctx = make_local_context(doc, pos, q_chunk=8)
+        lg, _ = forward(params, cfg, ctx,
+                        {"tokens": jnp.asarray(
+                            np.asarray(toks, np.int32)[None])},
+                        remat=False)
+        t = int(np.argmax(np.asarray(lg[0, -1])))
+        ref.append(t)
+        toks.append(t)
+    assert np.array_equal(out[0]["tokens"], np.asarray(ref, np.int32))
+
+
+def test_eos_retires_early():
+    cfg = _smoke("starcoder2_3b")
+    prompt = RNG.integers(0, cfg.vocab_size, 8).astype(np.int32)
+    eng, base = _run_engine(cfg, [prompt], "flash", slots=1, max_new=8)
+    gen = base[0]["tokens"]
+    eos = int(gen[2])
+    eng2, out = _run_engine(cfg, [prompt], "flash", slots=1, max_new=8,
+                            eos_id=eos)
+    assert out[0]["tokens"][-1] == eos
+    assert len(out[0]["tokens"]) <= 3
+
+
+def test_audio_prompt_frames_reach_the_cache():
+    """Regression for the seed zero-frames replay bug: prefilling with
+    the request's real frames must change the generation vs zero frames
+    — i.e. the frames actually land in the KV cache."""
+    cfg = _smoke("musicgen_medium")
+    assert cfg.frontend == "audio_frames" and supports_cached_prefill(cfg)
+    Tp = 10
+    tokens = RNG.integers(0, cfg.vocab_size, Tp).astype(np.int32)
+    frames = RNG.standard_normal((Tp, cfg.d_model)).astype(np.float32) * 3
+
+    def gen(fr):
+        eng = ServeEngine(cfg, num_slots=1, max_len=24, prefill_chunk=4,
+                          seed=0)
+        eng.submit(tokens, max_new=4, frames=fr)
+        out = eng.run()
+        return out[0]["tokens"], eng
+
+    real, eng_r = gen(frames)
+    zero, _ = gen(np.zeros_like(frames))
+    assert eng_r.stats["prefill_decode_steps"] == 0
+    assert not np.array_equal(real, zero), \
+        "real prompt frames did not influence the cache"
+
+
+def test_throughput_accounting_separates_prefill_and_decode():
+    """The prefill-produced first token counts as prefill output; decode
+    counters cover decode steps only."""
+    cfg = _smoke("starcoder2_3b")
+    prompt = RNG.integers(0, cfg.vocab_size, 9).astype(np.int32)
+    eng, out = _run_engine(cfg, [prompt], "flash", slots=1, max_new=4)
+    s = eng.stats
+    assert s["prefill_tokens"] == 9
+    # 4 generated tokens: 1 from prefill logits + 3 decode steps
+    assert len(out[0]["tokens"]) == 4
+    assert s["decode_steps"] == 3 and s["decode_tokens"] == 3
+    assert s["prefill_s"] > 0 and s["decode_s"] > 0
+
+
+# ===================================================================== #
+# scheduler + sampling units
+# ===================================================================== #
+def test_scheduler_slot_lifecycle():
+    sc = Scheduler(2, 32)
+    for rid in range(3):
+        sc.submit(Request(rid=rid, tokens=np.arange(4, dtype=np.int32),
+                          max_new=2))
+    placed = sc.admit()
+    assert [s for s, _ in placed] == [0, 1] and len(sc.queue) == 1
+    for s, _ in placed:
+        sc.start(s, first_token=7)
+    assert sc.lengths().tolist() == [4, 4]
+    retired = sc.record(np.asarray([5, 6]))   # 2nd token -> both done
+    assert retired == [0, 1] and sc.slots == [None, None]
+    # the third request takes a freed slot
+    placed2 = sc.admit()
+    assert [s for s, _ in placed2] == [0] and placed2[0][1].rid == 2
+    assert sc.admit() == []
+    assert sc.finished[0]["tokens"].tolist() == [7, 5]
+
+
+def test_scheduler_rejects_oversized_request():
+    sc = Scheduler(1, 8)
+    with pytest.raises(ValueError):
+        sc.submit(Request(rid=0, tokens=np.zeros(6, np.int32), max_new=4))
+
+
+def test_sampling_greedy_and_top_k():
+    rng = jax.random.PRNGKey(0)
+    logits = jnp.asarray(np.random.default_rng(0)
+                         .standard_normal((4, 32)).astype(np.float32))
+    # temperature 0 rows are bitwise argmax
+    t0 = sample_tokens(rng, logits, jnp.zeros((4,)), jnp.zeros((4,),
+                                                               jnp.int32))
+    assert np.array_equal(np.asarray(t0), np.asarray(logits.argmax(-1)))
+    # top-k masks everything outside each row's k best
+    masked = apply_top_k(logits, jnp.asarray([3, 1, 0, 32], jnp.int32))
+    a = np.asarray(masked)
+    assert (np.isfinite(a[0]).sum() == 3 and np.isfinite(a[1]).sum() == 1
+            and np.isfinite(a[2]).sum() == 32
+            and np.isfinite(a[3]).sum() == 32)
+    # k=1 sampling at any temperature is argmax
+    t1 = sample_tokens(rng, logits, jnp.full((4,), 2.0),
+                       jnp.ones((4,), jnp.int32))
+    assert np.array_equal(np.asarray(t1), np.asarray(logits.argmax(-1)))
+    # sampled tokens stay inside the top-k support
+    tk = sample_tokens(rng, logits, jnp.full((4,), 1.0),
+                       jnp.full((4,), 5, jnp.int32))
+    for b in range(4):
+        top5 = set(np.asarray(jnp.argsort(logits[b])[-5:]).tolist())
+        assert int(tk[b]) in top5

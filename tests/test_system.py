@@ -56,10 +56,15 @@ def test_training_with_compression(tmp_path):
 def test_serve_driver():
     from repro.launch.serve import serve
     out = serve(types.SimpleNamespace(arch="starcoder2_3b", smoke=True,
-                                      mesh="1x1", requests=2,
-                                      prompt_len=32, gen=4))
-    assert out["tokens"].shape[0] == 2
-    assert (out["tokens"] >= 0).all()
+                                      requests=2, prompt_len=32, gen=4))
+    assert sorted(out["tokens"]) == [0, 1]
+    for toks in out["tokens"].values():
+        assert toks.shape == (4,) and (toks >= 0).all()
+    # no prompt replay: prefill is chunk steps only, and the decode
+    # window excludes the prefill-produced first token
+    assert out["stats"]["prefill_decode_steps"] == 0
+    assert out["stats"]["prefill_steps"] > 0
+    assert out["stats"]["decode_steps"] == 3
 
 
 # --------------------------------------------------------------------- #
@@ -161,11 +166,14 @@ def test_decode_matches_forward_logits():
         ref_logits, _ = forward(params, cfg, ctx, {"tokens": tokens},
                                 remat=False)
         cache = init_cache(cfg, B, T)
+        # jitted like the serving engine: one compile per cfg (eager
+        # flash-decode interpret re-traces the kernel every step)
+        dec = jax.jit(lambda p, c, b, t: decode_step(p, cfg, c, b, t))
         worst = 0.0
         for t in range(T):
-            lg, cache = decode_step(params, cfg, cache,
-                                    {"tokens": tokens[:, t]},
-                                    jnp.full((B,), t, jnp.int32))
+            lg, cache = dec(params, cache,
+                            {"tokens": tokens[:, t]},
+                            jnp.full((B,), t, jnp.int32))
             worst = max(worst, float(np.max(np.abs(
                 np.asarray(lg) - np.asarray(ref_logits[:, t])))))
         return worst
