@@ -1,0 +1,269 @@
+"""Dispatch suite (``dispatch``, ``BENCH_dispatch.json``): adaptive DP×CP
+token dispatch vs the static per-rank path.
+
+Host-side section (pure numpy, real planner output): for three document
+mixes — uniform, heavy-tail, short-doc — compare
+
+* **static**: every DP rank samples/packs its windows independently and
+  plans at the full ``model`` CP axis (the legacy ``make_batch`` world);
+* **dispatch**: one global pool per step, CP degree sized to the mix,
+  documents LPT-balanced across the DP×CP groups
+  (:func:`repro.dispatch.dispatch_step`).
+
+Reported per mix: the chosen CP degree, cross-rank (per-group) max/mean
+token imbalance, per-*device* attention-workload imbalance (computed from
+each sequence's real plan — step time is the max over devices), and the
+stepped KV-exchange volume in bytes (Eq. 4/5 accounting over real plans,
+summed over every sequence of the step).  The dispatcher's host cost per
+step is timed alongside.
+
+Parity section (subprocess with simulated devices, like bench_overlap):
+the same pool dispatched at two degrees — small groups vs the full-axis
+static tiling — must produce the same token-weighted loss and gradient
+norm through the real CP train path on the re-tiled meshes.
+
+Emits ``name,us_per_call,derived`` CSV rows (run.py suite ``dispatch``)
+and writes machine-readable ``BENCH_dispatch.json`` at the repo root.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+import time
+
+import numpy as np
+
+HERE = os.path.dirname(os.path.abspath(__file__))
+ROOT = os.path.dirname(HERE)
+RESULT_JSON = os.path.join(ROOT, "BENCH_dispatch.json")
+
+# representative GQA geometry for the byte accounting (Eq. 4/5)
+KV_HEADS, HEAD_DIM = 8, 128
+
+
+def _mix_samplers(C: int) -> dict:
+    """Per-mix document-length samplers (token counts)."""
+    return {
+        "uniform": lambda rng: int(np.clip(
+            rng.lognormal(np.log(C / 16), 0.25), 64, C)),
+        "heavy_tail": lambda rng: int(rng.integers(C // 2, C))
+        if rng.random() < 0.08 else int(np.clip(
+            rng.lognormal(np.log(C / 64), 0.8), 64, C)),
+        "short_doc": lambda rng: int(rng.integers(64, 384)),
+    }
+
+
+def _device_workloads(plans, groups, cp: int, n_devices: int) -> np.ndarray:
+    """Per-device attention workload: each sequence's plan spreads its
+    workload over its group's ``cp`` devices."""
+    load = np.zeros(n_devices)
+    for plan, g in zip(plans, groups):
+        load[g * cp: (g + 1) * cp] += plan.workload_per_worker()
+    return load
+
+
+def _comm_volume(plans) -> int:
+    """Stepped KV-exchange volume: Eq. 4/5 bytes summed over the step's
+    sequences (each plan knows its own comm style and degree)."""
+    from repro.core.workload import plan_comm_bytes
+    return int(sum(plan_comm_bytes(p, KV_HEADS, HEAD_DIM) for p in plans))
+
+
+def _static_side(name, sampler, D, M, seqs, C, planner):
+    """Legacy path: per-rank independent packing, full-axis CP."""
+    from repro.data.distributions import DATASETS, make_rng
+    from repro.data.packing import pack_sequence
+    from repro.dispatch import imbalance
+
+    DATASETS[f"_bench_{name}"] = sampler
+    try:
+        per_rank = seqs // D
+        rows, groups = [], []
+        for r in range(D):
+            rng = make_rng(hash((1234, r, 0)) % (2 ** 63))
+            for _ in range(per_rank):
+                rows.append(pack_sequence(f"_bench_{name}", C, rng))
+                groups.append(r)
+    finally:
+        del DATASETS[f"_bench_{name}"]
+    plans = [planner(lens, M) for lens in rows]
+    dev = _device_workloads(plans, groups, M, D * M)
+    rank_tokens = np.asarray(
+        [sum(int(r.sum()) for r, g in zip(rows, groups) if g == rr)
+         for rr in range(D)])
+    return {
+        "cp_degree": M,
+        "n_groups": D,
+        "token_imbalance": imbalance(rank_tokens),
+        "device_work_imbalance": imbalance(dev),
+        "comm_volume_bytes": _comm_volume(plans),
+        "tokens": int(sum(int(r.sum()) for r in rows)),
+    }
+
+
+def _dispatch_side(name, sampler, D, M, seqs, C, planner):
+    from repro.data.distributions import DATASETS, make_rng
+    from repro.data.packing import sample_doc_pool
+    from repro.dispatch import DispatchConfig, dispatch_step, imbalance
+
+    DATASETS[f"_bench_{name}"] = sampler
+    try:
+        rng = make_rng(hash((1234, -1, 0)) % (2 ** 63))
+        pool = sample_doc_pool(f"_bench_{name}", seqs * C, rng,
+                               max_doc_len=C)
+    finally:
+        del DATASETS[f"_bench_{name}"]
+    dcfg = DispatchConfig(data=D, model=M, seqs=seqs,
+                          target_imbalance=1.1, quantum=16)
+    t0 = time.perf_counter()
+    dplan = dispatch_step(pool, dcfg, C)
+    host_us = (time.perf_counter() - t0) * 1e6
+    g = dplan.cp_degree
+    plans = [planner(lens, g) for lens in dplan.rows]
+    spg = dplan.seqs_per_group
+    groups = [r // spg for r in range(seqs)]
+    dev = _device_workloads(plans, groups, g, D * M)
+    return {
+        "cp_degree": g,
+        "n_groups": dplan.n_groups,
+        "token_imbalance": imbalance(dplan.group_tokens),
+        "device_work_imbalance": imbalance(dev),
+        "comm_volume_bytes": _comm_volume(plans),
+        "tokens": int(dplan.group_tokens.sum()),
+        "truncated_tokens": dplan.truncated_tokens,
+        "dispatch_host_us": host_us,
+        "candidates": dplan.candidates,
+    }
+
+
+def _parity_child() -> None:
+    """Runs under 8 forced CPU devices: the same pool dispatched at CP 2
+    (4 groups) and CP 4 (2 groups — the static full-axis tiling) must
+    give the same token-weighted loss and grad norm."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.compat import set_mesh
+    from repro.configs import get_config, reduce_for_smoke
+    from repro.core.cp_attention import make_cp_context
+    from repro.data.pipeline import PipelineConfig, make_dispatch_batch
+    from repro.dispatch import DispatchConfig
+    from repro.launch.mesh import make_group_mesh
+    from repro.models import init_params, loss_fn
+    from repro.optim import global_norm
+
+    import dataclasses
+    cfg = dataclasses.replace(reduce_for_smoke(get_config("starcoder2_3b")),
+                              dtype="float32")
+    C, seqs, D, M = 512, 4, 2, 4
+    pipe = PipelineConfig(dataset="pile", context_len=C, batch_per_host=seqs,
+                          cp_size=M, strategy="flashcp",
+                          vocab_size=cfg.vocab_size, seed=11, align=16)
+    params = init_params(jax.random.PRNGKey(0), cfg)
+
+    out = {}
+    for g in (2, 4):
+        # degree-invariant packing (lcm bin quantum): both tilings see
+        # the same documents, so loss/grad must agree
+        dcfg = DispatchConfig(data=D, model=M, seqs=seqs, fixed_cp=g,
+                              bin_quantum=4)
+        batch = make_dispatch_batch(pipe, dcfg, step=0)
+        mesh = make_group_mesh(D, M, g)
+        arrays = {k: jnp.asarray(v) for k, v in batch.items()
+                  if k != "stats" and not k.startswith(("seq_", "group_"))}
+        with set_mesh(mesh):
+            ctx = make_cp_context(
+                mesh, {k: arrays[k] for k in ("doc", "pos", "send_idx",
+                                              "gath_doc", "gath_pos")},
+                strategy="flashcp", impl="xla", batch_axes=("data",),
+                head_dim=cfg.resolved_head_dim, q_chunk=64)
+
+            @jax.jit
+            def lg(p, b):
+                (l, _), grads = jax.value_and_grad(
+                    lambda pp: loss_fn(pp, cfg, ctx, b, remat=False),
+                    has_aux=True)(p)
+                return l, global_norm(grads)
+
+            loss, gn = lg(params, {k: arrays[k]
+                                   for k in ("tokens", "labels")})
+        out[g] = (float(loss), float(gn))
+
+    (l2, g2), (l4, g4) = out[2], out[4]
+    print(json.dumps({
+        "loss_cp2": l2, "loss_cp4": l4,
+        "gnorm_cp2": g2, "gnorm_cp4": g4,
+        "loss_rel_diff": abs(l2 - l4) / max(abs(l4), 1e-9),
+        "gnorm_rel_diff": abs(g2 - g4) / max(abs(g4), 1e-9),
+    }))
+
+
+def run(smoke: bool = False):
+    from repro.planner import get_planner
+
+    D, M = (2, 4) if smoke else (2, 8)
+    seqs = 8 if smoke else 16
+    C = 2048 if smoke else 16384
+    planner = get_planner("flashcp")
+
+    results: dict = {"config": {"data": D, "model": M, "seqs": seqs,
+                                "context_len": C, "kv_heads": KV_HEADS,
+                                "head_dim": HEAD_DIM}, "mixes": {}}
+    rows = []
+    for name, sampler in _mix_samplers(C).items():
+        st = _static_side(name, sampler, D, M, seqs, C, planner)
+        dy = _dispatch_side(name, sampler, D, M, seqs, C, planner)
+        comm_red = st["comm_volume_bytes"] / max(dy["comm_volume_bytes"], 1)
+        work_red = st["device_work_imbalance"] / dy["device_work_imbalance"]
+        results["mixes"][name] = {"static": st, "dispatch": dy,
+                                  "comm_reduction_x": comm_red,
+                                  "work_imbalance_reduction_x": work_red}
+        rows.append(f"dispatch_{name}_cp_degree,,{dy['cp_degree']}")
+        rows.append(f"dispatch_{name}_token_imb,,"
+                    f"{dy['token_imbalance']:.3f}")
+        rows.append(f"dispatch_{name}_token_imb_static,,"
+                    f"{st['token_imbalance']:.3f}")
+        rows.append(f"dispatch_{name}_work_imb,,"
+                    f"{dy['device_work_imbalance']:.3f}")
+        rows.append(f"dispatch_{name}_work_imb_static,,"
+                    f"{st['device_work_imbalance']:.3f}")
+        rows.append(f"dispatch_{name}_comm_bytes,,"
+                    f"{dy['comm_volume_bytes']}")
+        rows.append(f"dispatch_{name}_comm_bytes_static,,"
+                    f"{st['comm_volume_bytes']}")
+        rows.append(f"dispatch_{name}_comm_reduction,,{comm_red:.2f}x")
+        rows.append(f"dispatch_{name}_host,"
+                    f"{dy['dispatch_host_us']:.0f},")
+
+    # fwd+grad parity across group tilings (simulated-device subprocess,
+    # so the forced device count never leaks into the caller's runtime)
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["JAX_PLATFORMS"] = "cpu"
+    env["PYTHONPATH"] = os.path.join(ROOT, "src") + os.pathsep + \
+        env.get("PYTHONPATH", "")
+    proc = subprocess.run(
+        [sys.executable, os.path.abspath(__file__), "--parity-child"],
+        capture_output=True, text=True, env=env, check=True)
+    parity = json.loads(proc.stdout.strip().splitlines()[-1])
+    results["parity"] = parity
+    rows.append(f"dispatch_parity_loss_rel_diff,,"
+                f"{parity['loss_rel_diff']:.2e}")
+    rows.append(f"dispatch_parity_gnorm_rel_diff,,"
+                f"{parity['gnorm_rel_diff']:.2e}")
+
+    with open(RESULT_JSON, "w") as f:
+        json.dump(results, f, indent=1)
+    rows.append(f"dispatch_json,,{os.path.basename(RESULT_JSON)}")
+    return rows
+
+
+if __name__ == "__main__":
+    if "--parity-child" in sys.argv:
+        _parity_child()
+    else:
+        for row in run(smoke="--smoke" in sys.argv):
+            print(row)

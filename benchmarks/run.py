@@ -12,6 +12,7 @@ row is a ratio/summary).  Suites:
   overlap blocking vs chunked CP execution + visit-table builder
   kernel  rect vs flat work-queue kernel grids (BENCH_kernel.json)
   serve   flash-decode vs dense serving + chunked prefill (BENCH_serve.json)
+  dispatch  adaptive DP×CP token dispatch vs static (BENCH_dispatch.json)
 
 Usage: PYTHONPATH=src python -m benchmarks.run [suite ...]
        PYTHONPATH=src python -m benchmarks.run --suite kernel [--smoke]
@@ -29,9 +30,10 @@ import time
 
 
 def main() -> None:
-    from . import (bench_breakdown, bench_context_window, bench_e2e_cp,
-                   bench_ilp_vs_heuristic, bench_kernel_efficiency,
-                   bench_overlap, bench_planner_runtime, bench_serve)
+    from . import (bench_breakdown, bench_context_window, bench_dispatch,
+                   bench_e2e_cp, bench_ilp_vs_heuristic,
+                   bench_kernel_efficiency, bench_overlap,
+                   bench_planner_runtime, bench_serve)
 
     suites = {
         "fig3": bench_kernel_efficiency.run,
@@ -43,6 +45,7 @@ def main() -> None:
         "overlap": bench_overlap.run,
         "kernel": bench_kernel_efficiency.run_kernel,
         "serve": bench_serve.run,
+        "dispatch": bench_dispatch.run,
     }
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("names", nargs="*", metavar="suite",

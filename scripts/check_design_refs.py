@@ -1,0 +1,75 @@
+#!/usr/bin/env python
+"""Docs-integrity check: every ``DESIGN.md §<id>`` reference in ``src/``
+must resolve to a real heading in DESIGN.md.
+
+The source tree cites design sections by stable id (``DESIGN.md §4``,
+``DESIGN.md §Arch-applicability``); this check keeps those citations from
+dangling when sections move or the doc is edited.  Run directly (CI
+tier-1) or through ``tests/test_docs_integrity.py``.
+
+Exit status 0 = all references resolve; 1 = dangling references (each
+printed with file:line).
+"""
+
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
+
+#: a section id: everything after '§' drawn from [A-Za-z0-9_-]
+REF_RE = re.compile(r"DESIGN\.md\s+§([A-Za-z0-9_][A-Za-z0-9_-]*)")
+HEADING_RE = re.compile(r"^#{1,6}\s+§([A-Za-z0-9_][A-Za-z0-9_-]*)",
+                        re.MULTILINE)
+
+
+def collect_refs(src: Path) -> dict[str, list[str]]:
+    """section id -> ["path:line", ...] over every .py file under src."""
+    refs: dict[str, list[str]] = {}
+    for path in sorted(src.rglob("*.py")):
+        if "__pycache__" in path.parts:
+            continue
+        for lineno, line in enumerate(
+                path.read_text(encoding="utf-8").splitlines(), 1):
+            for m in REF_RE.finditer(line):
+                refs.setdefault(m.group(1), []).append(
+                    f"{path.relative_to(ROOT)}:{lineno}")
+    return refs
+
+
+def design_anchors(design: Path) -> set[str]:
+    if not design.exists():
+        return set()
+    return set(HEADING_RE.findall(design.read_text(encoding="utf-8")))
+
+
+def check(root: Path = ROOT
+          ) -> tuple[dict[str, list[str]], set[str], dict[str, list[str]]]:
+    """Returns (dangling refs, available anchors, all refs)."""
+    refs = collect_refs(root / "src")
+    anchors = design_anchors(root / "DESIGN.md")
+    dangling = {sec: sites for sec, sites in refs.items()
+                if sec not in anchors}
+    return dangling, anchors, refs
+
+
+def main() -> int:
+    dangling, anchors, refs = check()
+    n_sites = sum(len(s) for s in refs.values())
+    if dangling:
+        print(f"DESIGN.md reference check FAILED "
+              f"(headings found: {sorted(anchors)})")
+        for sec, sites in sorted(dangling.items()):
+            for site in sites:
+                print(f"  dangling §{sec}  at {site}")
+        return 1
+    print(f"DESIGN.md reference check OK: {n_sites} reference(s) to "
+          f"{len(refs)} section(s), all resolved "
+          f"({len(anchors)} headings available)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

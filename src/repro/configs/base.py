@@ -161,6 +161,17 @@ class RunConfig:
     # rectangular visit grid (parity baseline)
     kernel_grid: Literal["flat", "rect"] = "flat"
     target_imbalance: float = 1.05
+    # adaptive DP×CP token dispatch (DESIGN.md §Dispatch): "adaptive"
+    # re-tiles the mesh into per-batch-sized CP subgroups and globally
+    # LPT-balances documents across them; batches become ragged
+    # (per-row valid-token counts in ``seq_tokens``), and the loss
+    # normalization is token-weighted across groups — the global
+    # masked-mean CE divides by the *global* valid-token count, so
+    # groups holding fewer tokens contribute proportionally, never
+    # per-group-averaged.
+    dispatch: Literal["off", "adaptive"] = "off"
+    dispatch_target_imbalance: float = 1.1
+    dispatch_min_cp: int = 1
     # optimizer
     lr: float = 3e-4
     weight_decay: float = 0.1

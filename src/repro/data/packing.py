@@ -12,7 +12,7 @@ import numpy as np
 
 from .distributions import sample_doc_length
 
-__all__ = ["pack_sequence", "doc_ids_and_positions"]
+__all__ = ["pack_sequence", "sample_doc_pool", "doc_ids_and_positions"]
 
 
 def pack_sequence(
@@ -43,6 +43,52 @@ def pack_sequence(
     out = np.asarray(lens, dtype=np.int64)
     assert out.sum() == context_len
     return out
+
+
+def sample_doc_pool(
+    dataset: str,
+    budget_tokens: int,
+    rng: np.random.Generator,
+    *,
+    max_doc_len: int | None = None,
+    min_doc_len: int = 16,
+    min_docs: int = 0,
+) -> np.ndarray:
+    """Sample one global step's document pool for the dispatcher.
+
+    Unlike :func:`pack_sequence` (which fills a single window and
+    truncates at the boundary), the pool keeps documents whole: sampling
+    stops *before* the budget would be exceeded, so the dispatcher's
+    bin packer — not the sampler — decides window placement, and the
+    only truncation is the §Dispatch quantum trim.  Documents longer
+    than ``max_doc_len`` (one window, typically) are clipped to it, since
+    no bin could hold them whole; ultra-short scraps merge into the
+    previous document exactly as the per-rank packer does.
+
+    ``min_docs``: when the stop-before-exceed rule would end the pool
+    with fewer documents (window-sized docs on a small budget), the
+    overflowing document is truncated to the remaining budget instead —
+    the same boundary truncation the per-rank packer applies — so every
+    dispatcher bin can receive at least one document.
+    """
+    lens: list[int] = []
+    total = 0
+    while total < budget_tokens:
+        d = sample_doc_length(dataset, rng)
+        if max_doc_len is not None:
+            d = min(d, max_doc_len)
+        if total + d > budget_tokens:
+            if len(lens) >= min_docs:
+                break
+            d = budget_tokens - total
+            if d < min_doc_len:
+                break
+        if d < min_doc_len and lens:
+            lens[-1] += d
+        else:
+            lens.append(d)
+        total += d
+    return np.asarray(lens, dtype=np.int64)
 
 
 def doc_ids_and_positions(doc_lens: np.ndarray) -> tuple[np.ndarray, np.ndarray]:

@@ -1,0 +1,26 @@
+"""Adaptive DP×CP token dispatcher (DESIGN.md §Dispatch).
+
+Sits between the data pipeline and the planner registry: per global step,
+:func:`dispatch_step` sizes the CP subgroups from the document-length
+profile and LPT-dispatches the step's documents across the resulting
+DP×CP groups with cross-rank token/workload balancing.  The emitted
+:class:`DispatchPlan` drives :func:`repro.data.pipeline.make_dispatch_batch`
+(per-group planning/encoding at the chosen degree) and
+:func:`repro.launch.mesh.make_group_mesh` (device-grid re-tiling).
+
+Host-side numpy only — importable by benchmarks and tests without JAX.
+"""
+
+from .balance import (PackedPool, imbalance, lpt_assign, pack_pool,
+                      sequence_workload)
+from .dispatcher import (DispatchConfig, DispatchPlan, cp_degree_options,
+                         dispatch_step, estimate_comm_tokens)
+from .profile import LengthProfile, profile_lengths
+
+__all__ = [
+    "PackedPool", "imbalance", "lpt_assign", "pack_pool",
+    "sequence_workload",
+    "DispatchConfig", "DispatchPlan", "cp_degree_options", "dispatch_step",
+    "estimate_comm_tokens",
+    "LengthProfile", "profile_lengths",
+]

@@ -14,7 +14,7 @@ from __future__ import annotations
 
 from repro.compat import make_mesh
 
-__all__ = ["make_production_mesh", "make_local_mesh"]
+__all__ = ["make_production_mesh", "make_local_mesh", "make_group_mesh"]
 
 
 def make_production_mesh(*, multi_pod: bool = False):
@@ -26,3 +26,25 @@ def make_production_mesh(*, multi_pod: bool = False):
 def make_local_mesh(data: int = 1, model: int = 1):
     """Small mesh for tests/examples on host devices."""
     return make_mesh((data, model), ("data", "model"))
+
+
+def make_group_mesh(data: int, model: int, cp_degree: int):
+    """Re-tile a ``data x model`` device grid into CP subgroups.
+
+    The adaptive dispatcher (DESIGN.md §Dispatch) runs each step at a CP
+    degree sized to the batch's document-length profile: the same
+    ``data * model`` devices are re-tiled into ``data * model / cp_degree``
+    groups of ``cp_degree`` devices, keeping the canonical ("data",
+    "model") axis names so every downstream consumer (FSDP parameter
+    layout, batch specs, CP attention islands) works unchanged — the
+    group axis *is* the "data" axis of the re-tiled mesh.
+
+    ``cp_degree`` must divide the ``model`` axis so each subgroup is a
+    contiguous slice of a single CP row (physically adjacent devices on
+    the production torus) and never straddles a data row.
+    """
+    if cp_degree < 1 or model % cp_degree:
+        raise ValueError(
+            f"cp_degree {cp_degree} does not divide model axis {model}")
+    return make_mesh((data * model // cp_degree, cp_degree),
+                     ("data", "model"))

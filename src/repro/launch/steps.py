@@ -73,7 +73,8 @@ def train_input_specs(cfg: ModelConfig, shape: ShapeConfig, cp: int,
                       overlap: str = "chunked",
                       grid: str = "flat",
                       block_q: int = 128,
-                      block_k: int = 128) -> dict[str, Any]:
+                      block_k: int = 128,
+                      dispatch: bool = False) -> dict[str, Any]:
     B, C = shape.global_batch, shape.seq_len
     N = cp
     buf = buf_len or default_buf_len(C, N)
@@ -85,6 +86,10 @@ def train_input_specs(cfg: ModelConfig, shape: ShapeConfig, cp: int,
         "doc": jax.ShapeDtypeStruct((B, C), i32),
         "pos": jax.ShapeDtypeStruct((B, C), i32),
     }
+    if dispatch:
+        # ragged dispatch batches: per-row valid tokens + CP subgroup id
+        s["seq_tokens"] = jax.ShapeDtypeStruct((B,), i32)
+        s["group_id"] = jax.ShapeDtypeStruct((B,), i32)
     if exec_strategy_of(strategy) in ("flashcp", "contiguous"):
         s["send_idx"] = jax.ShapeDtypeStruct((B, N, buf), i32)
         s["gath_doc"] = jax.ShapeDtypeStruct((B, N * buf), i32)
@@ -172,6 +177,11 @@ def build_train_step(cfg: ModelConfig, mesh, run: RunConfig,
             block_q=block_q, block_k=block_k, grid=run.kernel_grid,
             kv_comm_dtype=run.kv_comm_dtype)
 
+        # loss_fn's CE is a *global* masked mean: sum(ce * mask) /
+        # sum(mask) over the whole (possibly ragged) batch, so dispatch
+        # groups of unequal token counts are token-weighted — a group
+        # holding 30% of the step's valid tokens contributes 30% of the
+        # loss and of the gradient, never 1/n_groups.
         (loss, metrics), grads = jax.value_and_grad(
             lambda p: loss_fn(p, cfg, ctx, batch, remat=run.remat),
             has_aux=True)(params)
@@ -186,6 +196,7 @@ def build_train_step(cfg: ModelConfig, mesh, run: RunConfig,
         params, opt_state = adamw_update(params, grads, opt_state, lr=lr,
                                          weight_decay=run.weight_decay)
         out_metrics = {"loss": loss, "grad_norm": gnorm, "lr": lr,
+                       "tokens": jnp.sum(batch["labels"] >= 0),
                        **metrics}
         return params, opt_state, out_metrics
 
@@ -194,7 +205,8 @@ def build_train_step(cfg: ModelConfig, mesh, run: RunConfig,
                                 attention_impl=run.attention_impl,
                                 overlap=run.cp_overlap,
                                 grid=run.kernel_grid,
-                                block_q=block_q, block_k=block_k)
+                                block_q=block_q, block_k=block_k,
+                                dispatch=(run.dispatch != "off"))
     p_shard = param_shardings(mesh, params_s)
     o_shard = param_shardings(mesh, opt_s)
     b_spec = batch_specs(mesh, {k: v.shape for k, v in batch_s.items()})

@@ -29,8 +29,10 @@ from repro.checkpoint import CheckpointManager
 from repro.compat import set_mesh
 from repro.configs import RunConfig, get_config, reduce_for_smoke
 from repro.configs.base import ShapeConfig
-from repro.data.pipeline import PipelineConfig, Prefetcher, make_batch
-from repro.launch.mesh import make_local_mesh, make_production_mesh
+from repro.data.pipeline import (PipelineConfig, Prefetcher,
+                                 make_batch, make_dispatch_batch)
+from repro.launch.mesh import (make_group_mesh, make_local_mesh,
+                               make_production_mesh)
 from repro.launch.steps import build_train_step, effective_strategy
 from repro.planner import get_planner
 from repro.models import init_params
@@ -49,6 +51,125 @@ def device_put_batch(batch, shardings):
     return out
 
 
+def _train_dispatch(args, cfg, run: RunConfig, mesh_axes) -> dict:
+    """Adaptive-dispatch training loop (DESIGN.md §Dispatch).
+
+    Per step, the dispatcher sizes the CP subgroups from the batch's
+    document-length profile; the device grid is re-tiled with
+    :func:`make_group_mesh` and one jitted step per degree is built
+    lazily (at most ``log2(model)`` executables — the same bucketing
+    argument as the Eq. 5 buffer).  A degree switch re-shards
+    params/optimizer onto the new tiling (a rare, amortized device_put:
+    degrees are sticky while the data mix is).  The per-step loss is
+    token-weighted across groups by construction — the global masked CE
+    mean divides by the step's global valid-token count.
+
+    Fault injection / elastic resharding stay on the legacy path; this
+    loop supports checkpointing, ``--resume`` (the dispatch stream is a
+    pure function of (seed, step), so a restarted run replays exactly),
+    and prefetch.
+    """
+    from repro.dispatch import DispatchConfig
+
+    D, M = mesh_axes
+    align = 128 if run.attention_impl == "pallas" \
+        else (1 if D * M == 1 else 16)
+    dcfg = DispatchConfig(
+        data=D, model=M, seqs=args.batch,
+        target_imbalance=run.dispatch_target_imbalance,
+        min_cp=run.dispatch_min_cp, quantum=align)
+    strategy = effective_strategy(cfg, run.cp_strategy)
+    pipe_cfg = PipelineConfig(
+        dataset=args.dataset, context_len=args.seq_len,
+        batch_per_host=args.batch, cp_size=M, strategy=strategy,
+        vocab_size=cfg.vocab_size, seed=run.seed, align=align,
+        emit_tables=(run.attention_impl == "pallas" and cfg.uses_attention),
+        table_overlap=run.cp_overlap, table_grid=run.kernel_grid)
+    shape = ShapeConfig("dispatch", args.seq_len, args.batch, "train")
+
+    bundles: dict[int, tuple] = {}
+
+    def degree(g: int):
+        if g not in bundles:
+            mesh_g = make_group_mesh(D, M, g)
+            bundle = build_train_step(cfg, mesh_g, run, shape,
+                                      q_chunk=args.q_chunk)
+            step_fn = jax.jit(bundle.fn, in_shardings=bundle.in_shardings,
+                              out_shardings=bundle.out_shardings,
+                              donate_argnums=bundle.donate_argnums)
+            bundles[g] = (mesh_g, bundle, step_fn)
+        return bundles[g]
+
+    ckpt = CheckpointManager(run.checkpoint_dir, keep=2)
+    start = 0
+    if args.resume and ckpt.latest_step() is not None:
+        start = ckpt.latest_step()
+    it = Prefetcher(pipe_cfg, start_step=start, dispatch=dcfg) \
+        if args.prefetch else None
+    pending = next(it) if it else make_dispatch_batch(pipe_cfg, dcfg, start)
+    g0 = pending["stats"]["dispatch"]["cp_degree"]
+    mesh0, bundle0, _ = degree(g0)
+    p_shard, o_shard, _, _ = bundle0.in_shardings
+    with set_mesh(mesh0):
+        if start:
+            # the pipeline is a pure function of (seed, step), so the
+            # resumed stream replays exactly; state reshards onto the
+            # first resumed batch's degree
+            start, state, _ = ckpt.restore(
+                shardings={"params": p_shard, "opt": o_shard})
+            print(f"[train] resumed from step {start}")
+        else:
+            params = jax.device_put(
+                init_params(jax.random.PRNGKey(run.seed), cfg), p_shard)
+            opt = jax.device_put(adamw_init(params), o_shard)
+            state = {"params": params, "opt": opt}
+    cur_g = g0
+    losses = []
+    switches = 0
+
+    for step in range(start, args.steps):
+        t0 = time.time()
+        batch = pending if pending is not None else (
+            next(it) if it else make_dispatch_batch(pipe_cfg, dcfg, step))
+        pending = None
+        ds = batch["stats"]["dispatch"]
+        g = ds["cp_degree"]
+        mesh_g, bundle_g, step_fn = degree(g)
+        if g != cur_g:
+            p_s, o_s, _, _ = bundle_g.in_shardings
+            state = {"params": jax.device_put(state["params"], p_s),
+                     "opt": jax.device_put(state["opt"], o_s)}
+            cur_g = g
+            switches += 1
+        _, _, b_shard, _ = bundle_g.in_shardings
+        with set_mesh(mesh_g):
+            db = device_put_batch(batch, b_shard)
+            db = {k: v for k, v in db.items()
+                  if k in bundle_g.abstract_inputs[2]}
+            p, o, metrics = step_fn(state["params"], state["opt"], db,
+                                    jnp.asarray(step, jnp.int32))
+        state = {"params": p, "opt": o}
+        loss = float(metrics["loss"])
+        losses.append(loss)
+        if step % args.log_every == 0:
+            print(f"[train] step {step:5d} loss {loss:.4f} "
+                  f"ce {float(metrics['ce']):.4f} "
+                  f"cp {g} groups {ds['n_groups']} "
+                  f"tok_imb {ds['token_imbalance']:.3f} "
+                  f"work_imb {ds['work_imbalance']:.3f} "
+                  f"tokens {int(metrics['tokens'])} "
+                  f"{time.time()-t0:.2f}s", flush=True)
+        if args.ckpt_every and step and step % args.ckpt_every == 0:
+            ckpt.save(step + 1, state, blocking=False)
+
+    ckpt.save(args.steps, state, blocking=True)
+    if it:
+        it.close()
+    print(f"[train] dispatch: {switches} degree switches over "
+          f"{args.steps} steps; degrees used: {sorted(bundles)}")
+    return {"final_step": args.steps, "losses": losses}
+
+
 def train(args) -> dict:
     cfg = get_config(args.arch)
     if args.smoke:
@@ -60,15 +181,24 @@ def train(args) -> dict:
         mesh = make_local_mesh(d, m)
     cp = mesh.shape["model"]
 
+    # dispatch flags default off for programmatic callers (SimpleNamespace)
+    dispatch = getattr(args, "dispatch", False)
     run = RunConfig(arch=args.arch, cp_strategy=args.strategy,
                     attention_impl=args.attention_impl, lr=args.lr,
                     total_steps=args.steps, warmup_steps=max(args.steps // 10, 1),
                     grad_compression=args.grad_compression,
-                    checkpoint_dir=args.checkpoint_dir, remat=not args.no_remat)
+                    checkpoint_dir=args.checkpoint_dir, remat=not args.no_remat,
+                    dispatch="adaptive" if dispatch else "off",
+                    dispatch_target_imbalance=getattr(args, "dispatch_target",
+                                                      1.1),
+                    dispatch_min_cp=getattr(args, "dispatch_min_cp", 1))
     shape = ShapeConfig("custom", args.seq_len, args.batch, "train")
     # resolve through the planner registry: unknown --strategy fails fast
     # with the list of registered planners.
     get_planner(run.cp_strategy)
+    if dispatch:
+        return _train_dispatch(args, cfg, run,
+                               (mesh.shape["data"], mesh.shape["model"]))
     strategy = effective_strategy(cfg, run.cp_strategy)
 
     pipe_cfg = PipelineConfig(
@@ -179,6 +309,13 @@ def main():
     ap.add_argument("--log-every", type=int, default=1)
     ap.add_argument("--resume", action="store_true")
     ap.add_argument("--prefetch", action="store_true")
+    ap.add_argument("--dispatch", action="store_true",
+                    help="adaptive DP×CP token dispatch (per-batch CP "
+                         "group sizing + cross-rank balancing)")
+    ap.add_argument("--dispatch-target", type=float, default=1.1,
+                    help="max cross-group token/workload imbalance before "
+                         "the dispatcher escalates the CP degree")
+    ap.add_argument("--dispatch-min-cp", type=int, default=1)
     ap.add_argument("--no-remat", action="store_true")
     ap.add_argument("--fail-at", type=int, default=-1,
                     help="inject a failure at this step (FT test)")

@@ -227,15 +227,18 @@ def encode_plan_batch(
     plans: list[ShardingPlan],
     *,
     buf_len: int | None = None,
+    t_loc: int | None = None,
     align: int = 1,
     workers: int = 0,
 ) -> tuple[dict[str, np.ndarray], list[PlanEncoding]]:
     """Encode a batch of per-sample plans with a common bucket.
 
     Returns (stacked arrays dict, per-sample encodings).  All samples share
-    ``t_loc`` (max over batch, aligned) and ``buf_len`` (bucketed max).
-    The shared shapes are derived from plan accounting directly — the seed
-    ran a full throwaway encoding pass per sample just to learn them.
+    ``t_loc`` (max over batch, aligned — or the explicit ``t_loc``, which
+    the dispatcher pins to ``C / cp`` so ragged per-group batches keep one
+    static shape per degree) and ``buf_len`` (bucketed max).  The shared
+    shapes are derived from plan accounting directly — the seed ran a full
+    throwaway encoding pass per sample just to learn them.
 
     ``workers``: encoding is numpy-memcpy-dominated and releases the GIL,
     so multi-sample batches are encoded from a thread pool (0 = auto: one
@@ -245,7 +248,10 @@ def encode_plan_batch(
     assert all(p.num_workers == N for p in plans)
 
     hints = [plan_shape_hints(p, align=align) for p in plans]
-    t_loc = max(h[0] for h in hints)
+    need_t = max(h[0] for h in hints)
+    if t_loc is None:
+        t_loc = need_t
+    assert t_loc >= need_t, (t_loc, need_t)
     if buf_len is None:
         buf_len = max(h[1] for h in hints)
 

@@ -124,6 +124,11 @@ def batch_specs(mesh: Mesh, batch_shapes: dict) -> dict:
             specs[key] = P(Bk, "model", None)
         elif key in ("gath_doc", "gath_pos"):
             specs[key] = P(Bk, None)
+        elif key in ("seq_tokens", "group_id"):
+            # ragged dispatch batches (DESIGN.md §Dispatch): per-row valid
+            # token counts / CP-subgroup ids ride the batch axis so each
+            # group sees its own rows' raggedness
+            specs[key] = P(Bk)
         elif key.startswith("tab_"):
             # per-rank Pallas visit tables: rank dim over the CP axis
             specs[key] = P(*([Bk, "model"] + [None] * (ndim - 2)))

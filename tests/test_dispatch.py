@@ -1,0 +1,357 @@
+"""Adaptive DP×CP dispatcher invariants (DESIGN.md §Dispatch).
+
+Properties (hypothesis where available, fixed-seed fallback otherwise):
+every pool document assigned exactly once; per-group token counts within
+the LPT tolerance; CP-degree choices respect mesh/batch divisibility;
+the legacy per-rank pipeline is bit-identical with dispatch off; ragged
+dispatch batches are token-weighted in the loss (the global masked mean
+equals the manual token-weighted combination of per-row losses); and the
+same pool dispatched at different degrees carries the same data.
+"""
+
+import dataclasses
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+from repro.data.distributions import make_rng
+from repro.data.packing import pack_sequence, sample_doc_pool
+from repro.data.pipeline import (PipelineConfig, make_batch,
+                                 make_dispatch_batch)
+from repro.dispatch import (DispatchConfig, cp_degree_options,
+                            dispatch_step, imbalance, lpt_assign,
+                            pack_pool, sequence_workload)
+
+C = 2048
+
+
+def _pool(seed, n_docs, max_len=C):
+    rng = np.random.default_rng(seed)
+    return rng.integers(16, max_len + 1, n_docs).astype(np.int64)
+
+
+# --------------------------------------------------------------------- #
+# pack_pool: every document assigned exactly once
+# --------------------------------------------------------------------- #
+def _pack_case(seed, n_docs, n_bins, quantum):
+    pool = _pool(seed, n_docs)
+    packed = pack_pool(pool, n_bins, C, quantum=quantum)
+
+    placed = np.concatenate([d for d in packed.bin_docs if len(d)]) \
+        if any(len(d) for d in packed.bin_docs) else np.zeros(0, np.int64)
+    everywhere = np.concatenate([placed, packed.dropped_docs])
+    # exactly once: placed ∪ dropped is a permutation of the pool indices
+    assert sorted(everywhere.tolist()) == list(range(len(pool)))
+
+    # lengths never grow; token conservation incl. truncation
+    total = 0
+    for lens, docs in zip(packed.bins, packed.bin_docs):
+        assert np.all(lens >= 1)
+        assert np.all(lens <= pool[docs])
+        total += int(lens.sum())
+    assert total + packed.truncated_tokens == int(pool.sum())
+
+    # capacity + quantum divisibility
+    fills = packed.bin_tokens
+    assert np.all(fills <= C)
+    assert np.all(fills % quantum == 0)
+
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=40, deadline=None)
+    @given(seed=st.integers(0, 10_000), n_docs=st.integers(1, 60),
+           n_bins=st.integers(1, 6),
+           quantum=st.sampled_from([1, 4, 16]))
+    def test_pack_pool_assigns_each_doc_once(seed, n_docs, n_bins, quantum):
+        _pack_case(seed, n_docs, n_bins, quantum)
+else:
+    @pytest.mark.parametrize("seed,n_docs,n_bins,quantum",
+                             [(0, 1, 1, 1), (1, 40, 4, 16), (2, 60, 6, 4),
+                              (3, 7, 3, 1), (4, 25, 2, 16), (5, 13, 5, 4)])
+    def test_pack_pool_assigns_each_doc_once(seed, n_docs, n_bins, quantum):
+        """Fixed-seed fallback when hypothesis is unavailable."""
+        _pack_case(seed, n_docs, n_bins, quantum)
+
+
+# --------------------------------------------------------------------- #
+# lpt_assign: cardinality + the LPT load bound
+# --------------------------------------------------------------------- #
+def _lpt_case(seed, n_groups, per_group):
+    rng = np.random.default_rng(seed)
+    w = rng.uniform(0.0, 100.0, n_groups * per_group)
+    assign = lpt_assign(w, n_groups, per_group=per_group)
+    counts = np.bincount(assign, minlength=n_groups)
+    assert np.all(counts == per_group)
+    loads = np.bincount(assign, weights=w, minlength=n_groups)
+    assert loads.max() <= loads.mean() + w.max() + 1e-9
+
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=40, deadline=None)
+    @given(seed=st.integers(0, 10_000), n_groups=st.integers(1, 8),
+           per_group=st.integers(1, 8))
+    def test_lpt_cardinality_and_bound(seed, n_groups, per_group):
+        _lpt_case(seed, n_groups, per_group)
+else:
+    @pytest.mark.parametrize("seed,n_groups,per_group",
+                             [(0, 1, 1), (1, 4, 2), (2, 8, 8), (3, 3, 5),
+                              (4, 6, 1), (5, 2, 7)])
+    def test_lpt_cardinality_and_bound(seed, n_groups, per_group):
+        """Fixed-seed fallback when hypothesis is unavailable."""
+        _lpt_case(seed, n_groups, per_group)
+
+
+# --------------------------------------------------------------------- #
+# dispatch_step: divisibility + group-token tolerance
+# --------------------------------------------------------------------- #
+def _dispatch_case(seed, data, model, seqs_per_group_hint):
+    seqs = seqs_per_group_hint * (data * model)   # divisible for any g
+    pool = _pool(seed, 8 * seqs, max_len=C // 2)
+    cfg = DispatchConfig(data=data, model=model, seqs=seqs,
+                         target_imbalance=1.1, quantum=16)
+    plan = dispatch_step(pool, cfg, C)
+
+    g = plan.cp_degree
+    assert model % g == 0                       # subgroup splits the CP axis
+    assert (data * model) % g == 0
+    assert plan.n_groups == data * model // g
+    assert seqs % plan.n_groups == 0            # batch shards the group axis
+    assert plan.seqs_per_group * plan.n_groups == seqs
+    assert C % (16 * g) == 0 or C % 16 == 0     # quantum admissibility
+
+    # rows are group-major and bin totals meet the Eq.2 quantum
+    assert plan.group_of_row.tolist() == sorted(plan.group_of_row.tolist())
+    for lens in plan.rows:
+        assert int(lens.sum()) % g == 0
+        assert int(lens.sum()) <= C
+
+    # group token counts: max/mean within the LPT tolerance of one bin
+    tok = plan.group_tokens
+    assert tok.sum() + plan.truncated_tokens == pool.sum()
+    assert tok.max() <= tok.mean() + C + 1e-9
+    assert plan.token_imbalance == pytest.approx(imbalance(tok))
+
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=25, deadline=None)
+    @given(seed=st.integers(0, 10_000),
+           data=st.sampled_from([1, 2]), model=st.sampled_from([1, 2, 4]),
+           seqs_per_group_hint=st.integers(1, 3))
+    def test_dispatch_divisibility_and_tolerance(seed, data, model,
+                                                 seqs_per_group_hint):
+        _dispatch_case(seed, data, model, seqs_per_group_hint)
+else:
+    @pytest.mark.parametrize("seed,data,model,hint",
+                             [(0, 1, 1, 1), (1, 1, 4, 1), (2, 2, 4, 2),
+                              (3, 2, 2, 1), (4, 2, 1, 3), (5, 1, 2, 2)])
+    def test_dispatch_divisibility_and_tolerance(seed, data, model, hint):
+        """Fixed-seed fallback when hypothesis is unavailable."""
+        _dispatch_case(seed, data, model, hint)
+
+
+def test_degree_options_and_fixed_cp():
+    cfg = DispatchConfig(data=2, model=4, seqs=8)
+    assert cp_degree_options(cfg, C) == [1, 2, 4]
+    # seqs=2 cannot spread over 8 groups (g=1) but can over 2 (g=4)
+    cfg2 = DispatchConfig(data=2, model=4, seqs=2)
+    assert cp_degree_options(cfg2, C) == [4]
+    with pytest.raises(ValueError):
+        cp_degree_options(DispatchConfig(data=2, model=4, seqs=2,
+                                         fixed_cp=2), C)
+
+
+def test_degree_adapts_to_profile():
+    """Short-doc pools stay at CP 1; a heavy tail escalates to the full
+    axis (the only tiling whose groups can absorb the monster doc)."""
+    cfg = DispatchConfig(data=1, model=4, seqs=4, target_imbalance=1.1)
+    short = _pool(0, 200, max_len=256)
+    assert dispatch_step(short, cfg, C).cp_degree == 1
+    heavy = np.concatenate([[int(C * 0.9)],
+                            _pool(1, 40, max_len=256)]).astype(np.int64)
+    assert dispatch_step(heavy, cfg, C).cp_degree == 4
+
+
+def test_sequence_workload_matches_closed_form():
+    lens = np.asarray([5, 1, 10])
+    assert sequence_workload(lens) == 15.0 + 1.0 + 55.0
+
+
+# --------------------------------------------------------------------- #
+# legacy per-rank path: bit-identical with dispatch off
+# --------------------------------------------------------------------- #
+def _legacy_reference(cfg, step, dp_rank=0):
+    """Frozen copy of the pre-dispatch make_batch synthesis (PR 4 state):
+    shared rng, rows drawn sequentially in row order."""
+    from repro.data.pipeline import _plan
+    from repro.planner import encode_plan_batch, plan_many
+
+    rng = make_rng(hash((cfg.seed, dp_rank, step)) % (2 ** 63))
+    doc_lens_list = [pack_sequence(cfg.dataset, cfg.context_len, rng)
+                     for _ in range(cfg.batch_per_host)]
+    plans = plan_many(lambda lens: _plan(cfg, lens), doc_lens_list,
+                      workers=cfg.planner_workers)
+    stack, _ = encode_plan_batch(plans, buf_len=cfg.buf_len,
+                                 align=cfg.align)
+    B, C_pad = stack["perm"].shape
+    tokens = np.full((B, C_pad), -1, np.int32)
+    labels = np.full((B, C_pad), -1, np.int32)
+    for b, lens in enumerate(doc_lens_list):
+        n_tok = int(lens.sum())
+        packed = ((rng.zipf(1.3, n_tok) - 1) % cfg.vocab_size
+                  ).astype(np.int32)
+        rep = rng.random(n_tok) < 0.25
+        rep[0] = False
+        idx = np.arange(n_tok)
+        prev = np.maximum(idx - 1, 0)
+        packed = np.where(rep, packed[prev], packed)
+        perm = stack["perm"][b]
+        valid = perm >= 0
+        tokens[b, valid] = packed[perm[valid]]
+        nxt = perm + 1
+        is_final = np.zeros_like(valid)
+        ends = np.cumsum(lens) - 1
+        is_final[valid] = np.isin(perm[valid], ends)
+        lab_ok = valid & ~is_final
+        labels[b, lab_ok] = packed[np.minimum(nxt[lab_ok],
+                                              len(packed) - 1)]
+    return {**stack, "tokens": tokens, "labels": labels}
+
+
+def test_legacy_path_bit_identical():
+    cfg = PipelineConfig(dataset="pile", context_len=C, batch_per_host=3,
+                         cp_size=4, strategy="flashcp", vocab_size=997,
+                         seed=13, align=16)
+    got = make_batch(cfg, step=5)
+    want = _legacy_reference(cfg, step=5)
+    for key in want:
+        np.testing.assert_array_equal(got[key], want[key], err_msg=key)
+    assert "seq_tokens" not in got and "group_id" not in got
+
+
+# --------------------------------------------------------------------- #
+# dispatch batches: shape/metadata invariants + degree-invariant data
+# --------------------------------------------------------------------- #
+def _dispatch_pipe(**kw):
+    base = dict(dataset="pile", context_len=C, batch_per_host=4,
+                cp_size=4, strategy="flashcp", vocab_size=1000, seed=7,
+                align=16)
+    base.update(kw)
+    return PipelineConfig(**base)
+
+
+def test_dispatch_batch_invariants():
+    cfg = _dispatch_pipe()
+    dcfg = DispatchConfig(data=2, model=4, seqs=8, quantum=16)
+    b = make_dispatch_batch(cfg, dcfg, step=3)
+    ds = b["stats"]["dispatch"]
+    g = ds["cp_degree"]
+    B, C_pad = b["tokens"].shape
+    assert B == 8 and C_pad == C          # t_loc pinned to C / cp
+    assert b["send_idx"].shape[:2] == (8, g)
+    # seq_tokens == valid plan slots == unmasked tokens per row
+    np.testing.assert_array_equal(b["seq_tokens"],
+                                  (b["perm"] >= 0).sum(1))
+    np.testing.assert_array_equal(b["seq_tokens"],
+                                  (b["tokens"] >= 0).sum(1))
+    assert np.all(b["labels"][b["perm"] < 0] == -1)
+    # group-major rows matching the dispatch stats
+    assert b["group_id"].tolist() == sorted(b["group_id"].tolist())
+    np.testing.assert_array_equal(
+        np.bincount(b["group_id"], weights=b["seq_tokens"]),
+        ds["group_tokens"])
+    # deterministic
+    b2 = make_dispatch_batch(cfg, dcfg, step=3)
+    for k in ("tokens", "labels", "doc", "pos", "send_idx",
+              "seq_tokens", "group_id"):
+        np.testing.assert_array_equal(b[k], b2[k], err_msg=k)
+
+
+def test_dispatch_data_invariant_across_degrees():
+    """The same pool dispatched at different CP degrees carries the same
+    documents and the same synthesized tokens (content-keyed streams)."""
+    cfg = _dispatch_pipe()
+    batches = {
+        g: make_dispatch_batch(
+            cfg, DispatchConfig(data=2, model=4, seqs=8, fixed_cp=g,
+                                bin_quantum=4), step=2)
+        for g in (2, 4)}
+    tok = {g: np.sort(b["tokens"][b["tokens"] >= 0])
+           for g, b in batches.items()}
+    np.testing.assert_array_equal(tok[2], tok[4])
+    lab = {g: np.sort(b["labels"][b["labels"] >= 0])
+           for g, b in batches.items()}
+    np.testing.assert_array_equal(lab[2], lab[4])
+    assert batches[2]["seq_tokens"].sum() == batches[4]["seq_tokens"].sum()
+
+
+# --------------------------------------------------------------------- #
+# ragged batches are token-weighted in the loss
+# --------------------------------------------------------------------- #
+def test_ragged_loss_is_token_weighted():
+    """Global masked-mean CE == Σ_r ce_r·m_r / Σ_r m_r over ragged rows —
+    groups of unequal token counts contribute by token count."""
+    jax = pytest.importorskip("jax")
+    import jax.numpy as jnp
+
+    from repro.configs import get_config, reduce_for_smoke
+    from repro.models import loss_fn, make_local_context
+
+    mcfg = dataclasses.replace(reduce_for_smoke(get_config("starcoder2_3b")),
+                               dtype="float32")
+    cfg = _dispatch_pipe(context_len=512, vocab_size=mcfg.vocab_size)
+    dcfg = DispatchConfig(data=1, model=2, seqs=4, fixed_cp=2, quantum=16)
+    b = make_dispatch_batch(cfg, dcfg, step=1)
+    assert len(set(b["seq_tokens"].tolist())) > 1, "mix not ragged"
+
+    params_rng = jax.random.PRNGKey(0)
+    from repro.models import init_params
+    params = init_params(params_rng, mcfg)
+
+    def row_loss(r):
+        sl = slice(r, r + 1)
+        ctx = make_local_context(jnp.asarray(b["doc"][sl]),
+                                 jnp.asarray(b["pos"][sl]), q_chunk=64)
+        batch = {"tokens": jnp.asarray(b["tokens"][sl]),
+                 "labels": jnp.asarray(b["labels"][sl])}
+        loss, _ = loss_fn(params, mcfg, ctx, batch, remat=False)
+        return float(loss)
+
+    ctx = make_local_context(jnp.asarray(b["doc"]), jnp.asarray(b["pos"]),
+                             q_chunk=64)
+    whole, _ = loss_fn(params, mcfg, ctx,
+                       {"tokens": jnp.asarray(b["tokens"]),
+                        "labels": jnp.asarray(b["labels"])}, remat=False)
+
+    m = (b["labels"] >= 0).sum(1).astype(np.float64)
+    weighted = sum(row_loss(r) * m[r] for r in range(4)) / m.sum()
+    assert float(whole) == pytest.approx(weighted, rel=1e-5)
+    # and NOT the unweighted per-row mean (the raggedness is real)
+    unweighted = np.mean([row_loss(r) for r in range(4)])
+    assert abs(unweighted - weighted) > 0 or np.allclose(m, m[0])
+
+
+# --------------------------------------------------------------------- #
+# multi-device subprocess check (CP{2,4} × DP2 vs single-group baseline)
+# --------------------------------------------------------------------- #
+@pytest.mark.slow
+def test_dispatch_mesh_parity():
+    here = os.path.dirname(os.path.abspath(__file__))
+    env = dict(os.environ)
+    env.pop("XLA_FLAGS", None)
+    proc = subprocess.run(
+        [sys.executable, os.path.join(here, "multidevice",
+                                      "dispatch_check.py")],
+        capture_output=True, text=True, timeout=1200, env=env)
+    assert proc.returncode == 0, \
+        f"dispatch_check.py failed:\nSTDOUT:\n{proc.stdout[-4000:]}\n" \
+        f"STDERR:\n{proc.stderr[-4000:]}"
+    assert "DISPATCH_CHECK_PASS" in proc.stdout
