@@ -15,6 +15,14 @@ Prefill: the engine's chunked cache-writing prefill costs
 prompt tokens through ``decode_step``.  Step counts and measured engine
 prefill walls are reported per prompt length — chunk steps grow as
 ``ceil(Tp/C)``, never as ``Tp`` decode steps.
+
+Paged: the shared-prefix high-churn mix drives the same workload
+through the paged block pool (with and without prefix sharing), the
+dense stripe layout, and the serial scheduler — reporting HBM bytes
+per live token (paged vs dense), prefix hit rate, prefill-compute
+reduction from shared system prompts, and decode-stall steps (unified
+token budget vs serial), with bitwise greedy parity asserted across
+all four engines.
 """
 
 from __future__ import annotations
@@ -122,6 +130,122 @@ def _prefill_rows(prompt_lens, chunk, smoke):
     return rows, out
 
 
+def _bytes_per_live_token(eng):
+    """HBM bytes of KV actually *used* per live token, time-averaged
+    over engine steps.  Dense stripes reserve num_slots * max_len
+    positions no matter what is live; the paged pool holds only the
+    allocated blocks."""
+    bpt = eng.kv_cache_bytes() / eng.kv_token_capacity()
+    steps = max(eng.stats["steps"], 1)
+    live = eng.stats["live_token_steps"] / steps
+    if eng.layout == "paged":
+        used = eng.stats["pool_block_steps"] / steps * eng.block_size
+    else:
+        used = eng.kv_token_capacity()
+    return used * bpt / max(live, 1e-9)
+
+
+def _paged_rows(smoke):
+    """Shared-prefix high-churn mix: many short requests carrying the
+    same system prompt churn through few slots while one long prompt
+    prefills mid-stream.  Runs the same workload through four engines —
+    paged+prefix (primary), paged without prefix sharing, dense stripes
+    (parity oracle + HBM baseline), and serial scheduling (stall
+    baseline) — asserting bitwise greedy parity across layouts."""
+    from repro.configs import get_config, reduce_for_smoke
+    from repro.serve import ServeEngine
+
+    cfg = reduce_for_smoke(get_config("starcoder2_3b"))
+    rng = np.random.default_rng(3)
+    prefix_len = 32 if smoke else 64
+    long_len = 96 if smoke else 256
+    n_short = 6 if smoke else 12
+    gen = 6 if smoke else 12
+    slots = 3
+    sys_p = rng.integers(0, cfg.vocab_size, prefix_len).astype(np.int32)
+    prompts = [np.concatenate([
+        sys_p, rng.integers(0, cfg.vocab_size,
+                            int(rng.integers(8, 24))).astype(np.int32)])
+        for _ in range(n_short)]
+    # the long prompt arrives mid-churn: decodes are in flight while it
+    # prefills — the serial baseline stalls them, the unified step not
+    prompts.insert(n_short // 2, np.concatenate([
+        sys_p, rng.integers(0, cfg.vocab_size,
+                            long_len - prefix_len).astype(np.int32)]))
+    max_len = long_len + gen + 8
+
+    def drive(**kw):
+        eng = ServeEngine(cfg, num_slots=slots, max_len=max_len,
+                          prefill_chunk=16, seed=0, **kw)
+        eng.warmup(prompt_len=long_len)
+        for p in prompts:
+            eng.submit(p, max_new=gen)
+        return eng, eng.run()
+
+    eng_p, out_p = drive()                               # paged + prefix
+    eng_n, out_n = drive(prefix_cache=False)             # paged, no prefix
+    eng_d, out_d = drive(kv_layout="dense")              # dense oracle
+    eng_s, out_s = drive(unified=False)                  # serial baseline
+
+    parity = all(
+        np.array_equal(out_p[r]["tokens"], out_d[r]["tokens"])
+        and np.array_equal(out_p[r]["tokens"], out_n[r]["tokens"])
+        and np.array_equal(out_p[r]["tokens"], out_s[r]["tokens"])
+        for r in out_p)
+    assert parity, "paged/dense/serial greedy token mismatch"
+
+    bpt_p = _bytes_per_live_token(eng_p)
+    bpt_d = _bytes_per_live_token(eng_d)
+    hbm_red = bpt_d / bpt_p
+    assert hbm_red > 1.0, f"paged HBM/token not below dense ({hbm_red})"
+    hit_rate = eng_p.prefix.hit_rate()
+    assert hit_rate > 0, "shared system prompt produced no prefix hits"
+    pf_red = (eng_n.stats["prefill_chunk_tokens"]
+              / max(eng_p.stats["prefill_chunk_tokens"], 1))
+    assert pf_red > 1.0, "prefix sharing did not reduce prefill compute"
+    assert eng_p.stats["stalled_decode_steps"] == 0, \
+        "unified token-budget step stalled a decode"
+    assert eng_s.stats["stalled_decode_steps"] > 0, \
+        "serial baseline shows no stalls — mix too easy to matter"
+
+    out = {
+        "mix": {"requests": len(prompts), "slots": slots,
+                "shared_prefix": prefix_len, "long_prompt": long_len,
+                "gen": gen, "max_len": max_len},
+        "paged": {
+            "hbm_bytes_per_live_token": bpt_p,
+            "prefill_chunk_tokens": eng_p.stats["prefill_chunk_tokens"],
+            "prefill_cached_tokens": eng_p.stats["prefill_cached_tokens"],
+            "stalled_decode_steps": eng_p.stats["stalled_decode_steps"],
+            "cow_copies": eng_p.stats["cow_copies"],
+            "admission_backoffs": eng_p.stats["admission_backoffs"],
+            "pool": eng_p.pool.stats(),
+            "prefix": eng_p.prefix.stats()},
+        "paged_no_prefix": {
+            "prefill_chunk_tokens": eng_n.stats["prefill_chunk_tokens"]},
+        "dense": {"hbm_bytes_per_live_token": bpt_d},
+        "serial": {
+            "stalled_decode_steps": eng_s.stats["stalled_decode_steps"]},
+        "hbm_bytes_per_token_reduction_x": hbm_red,
+        "prefill_compute_reduction_x": pf_red,
+        "prefix_hit_rate": hit_rate,
+        "greedy_parity_paged_dense_serial": parity,
+    }
+    rows = [
+        f"serve_paged_hbm_bytes_per_tok,,{bpt_p:.0f}",
+        f"serve_dense_hbm_bytes_per_tok,,{bpt_d:.0f}",
+        f"serve_paged_hbm_reduction,,{hbm_red:.2f}x",
+        f"serve_paged_prefix_hit_rate,,{hit_rate:.2f}",
+        f"serve_paged_prefill_compute_reduction,,{pf_red:.2f}x",
+        f"serve_paged_stalled_steps_unified,,"
+        f"{eng_p.stats['stalled_decode_steps']}",
+        f"serve_paged_stalled_steps_serial,,"
+        f"{eng_s.stats['stalled_decode_steps']}",
+        f"serve_paged_greedy_parity,,{int(parity)}",
+    ]
+    return rows, out
+
+
 def run(smoke: bool = False):
     """``serve`` suite: emits CSV rows and writes BENCH_serve.json."""
     S = 512 if smoke else 4096
@@ -145,6 +269,8 @@ def run(smoke: bool = False):
     rows, results["decode"] = _decode_rows(S, B, Hq, Hkv, D, block_k, iters)
     prows, results["prefill"] = _prefill_rows(prompt_lens, chunk, smoke)
     rows += prows
+    grows, results["paged"] = _paged_rows(smoke)
+    rows += grows
 
     headline = results["decode"]["long_ragged"]["hbm_read_reduction_x"]
     results["decode_speedup_long_ragged_x"] = headline

@@ -153,6 +153,16 @@ class RunConfig:
     # decode attention: fused flash-decode kernel (default) vs the XLA
     # dense-softmax parity oracle (models/attention.py::attn_decode)
     decode_impl: Literal["flash", "dense"] = "flash"
+    # serving KV layout: "paged" = global block pool with per-request
+    # block tables + prefix sharing (serve/block_pool.py); "dense" =
+    # per-slot stripes (parity oracle, recurrent archs); "auto" picks
+    # paged whenever the arch supports it
+    kv_layout: Literal["auto", "paged", "dense"] = "auto"
+    # tokens per paged KV block (the pool allocation granule)
+    serve_block_size: int = 16
+    # tokens one engine step may spend across prefill chunks + decodes
+    # (SplitFuse-style unified step; 0 = num_slots + prefill_chunk)
+    serve_token_budget: int = 0
     # chunked = overlapped KV exchange (ppermute hops merged via online
     # LSE); none = the monolithic blocking-collective islands
     cp_overlap: Literal["chunked", "none"] = "chunked"

@@ -29,8 +29,21 @@ Two output modes:
   merge with the standard LSE combine — :func:`flash_decode_sharded` is
   the single-process form, ``merge_partials_axis`` the shard_map form.
 
+Paged variant (:func:`flash_decode_paged`): the serving engine's KV
+lives in a *global block pool* — per-layer arrays of shape
+(Hkv, num_blocks, block_size, D) shared by every request — and each
+request owns a *block table* mapping its logical block index to a
+physical pool block.  The kernel prefetches the table alongside the
+lengths and resolves the physical block inside the BlockSpec index map,
+so the HBM fetch pattern is identical to the dense kernel's (one block
+per grid step, clamped at the request length); only the *address* is
+indirected.  Shared prefix blocks (serve/prefix.py) are therefore read
+straight from the pool with no gather or copy.
+``paged_decode_reference`` is the XLA gather + dense-softmax oracle.
+
 Forward-only (inference); validated against ``decode_reference`` in
-interpret mode (tests/test_kernels.py, tests/test_serve.py).
+interpret mode (tests/test_kernels.py, tests/test_serve.py,
+tests/test_paged.py).
 """
 
 from __future__ import annotations
@@ -42,7 +55,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-__all__ = ["flash_decode", "flash_decode_sharded", "decode_reference"]
+__all__ = ["flash_decode", "flash_decode_sharded", "flash_decode_paged",
+           "decode_reference", "paged_decode_reference", "gather_paged_kv"]
 
 NEG = -1e30
 DEFAULT_BLOCK_K = 256
@@ -65,11 +79,12 @@ def decode_reference(q, k, v, lengths, *, scale=None):
     return out.reshape(B, Hq, D).astype(q.dtype)
 
 
-def _decode_kernel(len_ref,                      # scalar prefetch
-                   q_ref, k_ref, v_ref,
-                   *refs,
-                   scale: float, block_k: int, num_blocks: int,
-                   partial: bool):
+def _decode_body(len_ref, q_ref, k_ref, v_ref, refs,
+                 scale: float, block_k: int, num_blocks: int,
+                 partial: bool):
+    """Shared online-softmax body for the dense-cache and paged kernels
+    (they differ only in how the BlockSpec index map finds the KV block;
+    the visit math is identical — positions are *logical*)."""
     if partial:
         o_ref, om_ref, ol_ref, acc_ref, m_ref, l_ref = refs
     else:
@@ -121,6 +136,21 @@ def _decode_kernel(len_ref,                      # scalar prefetch
             out = jnp.where(l > 0, acc_ref[...] / jnp.maximum(l, 1e-30),
                             0.0)
             o_ref[0, 0] = out.astype(o_ref.dtype)
+
+
+def _decode_kernel(len_ref,                      # scalar prefetch
+                   q_ref, k_ref, v_ref, *refs, scale, block_k,
+                   num_blocks, partial):
+    _decode_body(len_ref, q_ref, k_ref, v_ref, refs, scale, block_k,
+                 num_blocks, partial)
+
+
+def _decode_kernel_paged(len_ref, tab_ref,       # scalar prefetch
+                         q_ref, k_ref, v_ref, *refs, scale, block_k,
+                         num_blocks, partial):
+    # the table is consumed by the BlockSpec index map only
+    _decode_body(len_ref, q_ref, k_ref, v_ref, refs, scale, block_k,
+                 num_blocks, partial)
 
 
 def flash_decode(q, k, v, lengths, *, scale=None,
@@ -216,3 +246,96 @@ def flash_decode_sharded(q, k, v, lengths, *, shards: int, scale=None,
             local_len, scale=scale, block_k=block_k, interpret=interpret,
             partial=True))
     return finalize_partial(merge_partials(parts), q.dtype)
+
+
+# --------------------------------------------------------------------- #
+# paged decode: block-table indirection into a global KV block pool
+# --------------------------------------------------------------------- #
+def gather_paged_kv(pool, tables, block_size: int):
+    """Materialize each request's logical KV view from the pool.
+
+    pool (Hkv, NBtok, D) with NBtok = num_blocks * block_size; tables
+    (B, nk) physical block ids per logical block.  Returns
+    (B, Hkv, nk * block_size, D) — the dense layout the XLA oracle and
+    the prefill attention expect.  Unwritten table slots point at block
+    0; their values are garbage and must be masked by position.
+    """
+    B, nk = tables.shape
+    off = jnp.arange(block_size, dtype=jnp.int32)
+    phys = (tables[:, :, None] * block_size + off[None, None, :]) \
+        .reshape(B, nk * block_size)                  # (B, S_logical)
+    return pool[:, phys].transpose(1, 0, 2, 3)        # (B, Hkv, S, D)
+
+
+def paged_decode_reference(q, k_pool, v_pool, lengths, tables,
+                           *, block_size: int, scale=None):
+    """XLA gather + dense-softmax oracle for the paged kernel.
+
+    q (B, Hq, D); k_pool/v_pool (Hkv, num_blocks * block_size, D);
+    tables (B, nk) int32; lengths (B,) — logical positions, as in
+    :func:`decode_reference`."""
+    k = gather_paged_kv(k_pool, tables, block_size)
+    v = gather_paged_kv(v_pool, tables, block_size)
+    return decode_reference(q, k, v, lengths, scale=scale)
+
+
+def flash_decode_paged(q, k_pool, v_pool, lengths, tables,
+                       *, block_size: int, scale=None,
+                       interpret: bool = False):
+    """Flash decode over a paged KV pool.
+
+    q (B, Hq, D); k_pool/v_pool (Hkv, num_blocks * block_size, D) —
+    the global pool, flat on the token axis; tables (B, nk) int32 maps
+    each request's logical block to its physical pool block (unwritten
+    slots must hold a valid index, conventionally 0); lengths (B,)
+    logical positions (negative = nothing visible, output zeros).
+
+    Grid and visit math are identical to :func:`flash_decode` with
+    ``block_k = block_size`` — the only difference is the KV BlockSpec
+    index map, which resolves ``tables[b, kb]`` (clamped at the last
+    needed block, as the dense kernel clamps ``kb``) so blocks past a
+    request's length are never fetched and shared prefix blocks are
+    fetched from their single pool-resident copy.
+    """
+    B, Hq, D = q.shape
+    Hkv, NBtok, _ = k_pool.shape
+    assert NBtok % block_size == 0, (NBtok, block_size)
+    G = Hq // Hkv
+    nk = tables.shape[1]
+    if scale is None:
+        scale = D ** -0.5
+    k4 = k_pool.reshape(Hkv, NBtok // block_size, block_size, D)
+    v4 = v_pool.reshape(Hkv, NBtok // block_size, block_size, D)
+
+    def kv_block(b, h, kb, len_ref, tab_ref):
+        # same past-the-end clamp as the dense kernel, then the table
+        # lookup turns the logical block into a physical pool block
+        last_needed = jnp.clip(len_ref[b] // block_size, 0, nk - 1)
+        return (h, tab_ref[b, jnp.minimum(kb, last_needed)], 0, 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(B, Hkv, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1, G, D), lambda b, h, kb, l_, t_: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, block_size, D), kv_block),
+            pl.BlockSpec((1, 1, block_size, D), kv_block),
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, D),
+                               lambda b, h, kb, l_, t_: (b, h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((G, D), jnp.float32),
+            pltpu.VMEM((G, 128), jnp.float32),
+            pltpu.VMEM((G, 128), jnp.float32),
+        ],
+    )
+    kernel = functools.partial(_decode_kernel_paged, scale=float(scale),
+                               block_k=block_size, num_blocks=nk,
+                               partial=False)
+    q4 = q.reshape(B, Hkv, G, D)
+    out = pl.pallas_call(
+        kernel, grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, Hkv, G, D), q.dtype),
+        interpret=interpret,
+    )(lengths, tables, q4, k4, v4)
+    return out.reshape(B, Hq, D)

@@ -1,11 +1,16 @@
-"""Serving driver: continuous-batching prefill + flash-decode engine CLI.
+"""Serving driver: paged-KV continuous-batching engine CLI.
 
 Builds a :class:`repro.serve.ServeEngine`, submits a ragged mix of
-requests, and drains it: chunked cache-writing prefill (no prompt
-replay), per-slot ragged decode with the fused flash-decode kernel
-(``--decode-impl dense`` selects the XLA softmax parity oracle), greedy
-or temperature/top-k sampling, and slot admission/retirement mid-flight
+requests, and drains it: budgeted cache-writing prefill + ragged
+flash-decode over a paged KV block pool (``--kv-layout dense`` keeps
+the per-slot stripe layout as the parity oracle; ``--decode-impl
+dense`` selects the XLA softmax attention oracle), greedy or
+temperature/top-k sampling, and slot admission/retirement mid-flight
 (more requests than ``--slots`` exercises continuous batching).
+``--shared-prefix N`` prepends the same N-token system prompt to every
+request, exercising prefix-cache block sharing; ``--serial`` disables
+the unified token-budget step (prefill drains before any decode — the
+stall baseline).
 
 Prefill and decode are timed and counted separately — the prompt tokens
 and the prefill-produced first token are *prefill* output; decode tok/s
@@ -14,11 +19,11 @@ covers decode steps only.
 CPU-scale example:
 
     PYTHONPATH=src python -m repro.launch.serve --arch starcoder2_3b \
-        --smoke --requests 4 --prompt-len 64 --gen 16
+        --smoke --requests 4 --prompt-len 64 --gen 16 --shared-prefix 16
 
-``--attn-shards N`` splits the decode cache into N LSE-merged segments —
-the in-process form of the CP-sharded cache merge (the shard_map form is
-checked in tests/multidevice/decode_cp_check.py).
+``--attn-shards N`` splits the dense-layout decode cache into N
+LSE-merged segments — the in-process form of the CP-sharded cache merge
+(the shard_map form is checked in tests/multidevice/decode_cp_check.py).
 """
 
 from __future__ import annotations
@@ -30,7 +35,10 @@ import jax
 import numpy as np
 
 from repro.configs import get_config, reduce_for_smoke
+from repro.configs.base import RunConfig
 from repro.serve import ServeEngine
+
+_RC = RunConfig()   # serve defaults live on RunConfig (single source)
 
 
 def serve(args) -> dict:
@@ -45,20 +53,31 @@ def serve(args) -> dict:
     ragged = getattr(args, "ragged", True)
     rng = np.random.default_rng(getattr(args, "seed", 0))
 
+    shared_prefix = getattr(args, "shared_prefix", 0)
+
     # ragged prompt mix: lengths in [Tp/4, Tp], one request at the full Tp
     lens = np.full((B,), Tp, np.int64)
     if ragged and B > 1:
         lens[1:] = rng.integers(max(1, Tp // 4), Tp + 1, (B - 1,))
-    max_len = int(Tp + gen)
+    lens = np.maximum(lens, shared_prefix + 1)
+    max_len = int(lens.max() + gen)
 
     eng = ServeEngine(
         cfg, num_slots=slots, max_len=max_len,
         prefill_chunk=getattr(args, "prefill_chunk", 64),
         decode_impl=getattr(args, "decode_impl", "flash"),
         attn_shards=getattr(args, "attn_shards", 1),
-        seed=getattr(args, "seed", 0))
-    eng.warmup(prompt_len=Tp)
+        seed=getattr(args, "seed", 0),
+        kv_layout=getattr(args, "kv_layout", _RC.kv_layout),
+        block_size=getattr(args, "block_size", _RC.serve_block_size),
+        num_blocks=getattr(args, "num_blocks", 0),
+        token_budget=getattr(args, "token_budget", _RC.serve_token_budget),
+        prefix_cache=getattr(args, "prefix_cache", True),
+        unified=getattr(args, "unified", True))
+    eng.warmup(prompt_len=int(lens.max()))
 
+    sys_prompt = rng.integers(0, cfg.vocab_size, shared_prefix) \
+        .astype(np.int32)
     temperature = getattr(args, "temperature", 0.0)
     top_k = getattr(args, "top_k", 0)
     for i in range(B):
@@ -68,8 +87,9 @@ def serve(args) -> dict:
             # cache through prefill (the old driver replayed zeros)
             frames = rng.standard_normal(
                 (int(lens[i]), cfg.d_model)).astype(np.float32)
-        eng.submit(rng.integers(0, cfg.vocab_size, int(lens[i]))
-                   .astype(np.int32),
+        toks = rng.integers(0, cfg.vocab_size,
+                            int(lens[i]) - shared_prefix).astype(np.int32)
+        eng.submit(np.concatenate([sys_prompt, toks]),
                    max_new=gen, temperature=temperature, top_k=top_k,
                    frames=frames)
 
@@ -81,17 +101,34 @@ def serve(args) -> dict:
     tp = eng.throughput()
     print(f"[serve] {cfg.name}: {B} requests ({slots} slots, "
           f"prompts {lens.min()}..{lens.max()}, gen {gen}, "
-          f"decode_impl={eng.decode_impl})")
-    print(f"[serve] prefill: {s['prefill_tokens']} prompt tokens in "
+          f"kv_layout={eng.layout}, decode_impl={eng.decode_impl})")
+    print(f"[serve] prefill: {s['prefill_tokens']} prompt tokens "
+          f"({s['prefill_chunk_tokens']} computed, "
+          f"{s['prefill_cached_tokens']} prefix-cached) in "
           f"{s['prefill_steps']} chunk steps + "
           f"{s['prefill_decode_steps']} replay steps, "
           f"{s['prefill_s']:.2f}s ({tp['prefill_tok_s']:.1f} tok/s)")
     print(f"[serve] decode:  {s['decode_tokens']} tokens in "
           f"{s['decode_steps']} steps, {s['decode_s']:.2f}s "
-          f"({tp['decode_tok_s']:.1f} tok/s); wall {wall:.2f}s")
+          f"({tp['decode_tok_s']:.1f} tok/s); wall {wall:.2f}s; "
+          f"stalled decode steps {s['stalled_decode_steps']}")
+    if eng.layout == "paged":
+        ps = eng.pool.stats()
+        print(f"[serve] pool:    {ps['allocated']}/{ps['num_blocks']} "
+              f"blocks live (peak {ps['peak_allocated']}, block_size "
+              f"{ps['block_size']}), cow {s['cow_copies']}, "
+              f"backoffs {s['admission_backoffs']}")
+        if eng.prefix is not None:
+            xs = eng.prefix.stats()
+            print(f"[serve] prefix:  {xs['nodes']} cached blocks, "
+                  f"hit rate {xs['hit_rate']:.2f} "
+                  f"({xs['hit_tokens']} tokens skipped)")
     return {"results": results, "stats": dict(s), "throughput": tp,
-            "prompt_lens": lens,
-            "tokens": {r: results[r]["tokens"] for r in results}}
+            "prompt_lens": lens, "kv_layout": eng.layout,
+            "pool": None if eng.pool is None else eng.pool.stats(),
+            "prefix": None if eng.prefix is None else eng.prefix.stats(),
+            "tokens": {r: results[r]["tokens"] for r in results
+                       if results[r]["status"] == "ok"}}
 
 
 def main():
@@ -109,6 +146,26 @@ def main():
                     default="flash", dest="decode_impl")
     ap.add_argument("--attn-shards", type=int, default=1,
                     dest="attn_shards")
+    ap.add_argument("--kv-layout", choices=("auto", "paged", "dense"),
+                    default=_RC.kv_layout, dest="kv_layout")
+    ap.add_argument("--block-size", type=int,
+                    default=_RC.serve_block_size, dest="block_size",
+                    help="tokens per paged KV block")
+    ap.add_argument("--num-blocks", type=int, default=0,
+                    dest="num_blocks",
+                    help="pool blocks (0 = dense-equivalent capacity)")
+    ap.add_argument("--token-budget", type=int,
+                    default=_RC.serve_token_budget, dest="token_budget",
+                    help="tokens per unified step "
+                         "(0 = slots + prefill_chunk)")
+    ap.add_argument("--no-prefix-cache", action="store_false",
+                    dest="prefix_cache",
+                    help="disable cross-request prefix block sharing")
+    ap.add_argument("--serial", action="store_false", dest="unified",
+                    help="drain prefill before decode (stall baseline)")
+    ap.add_argument("--shared-prefix", type=int, default=0,
+                    dest="shared_prefix",
+                    help="shared system-prompt tokens per request")
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--top-k", type=int, default=0, dest="top_k")
     ap.add_argument("--uniform", action="store_false", dest="ragged",

@@ -1,11 +1,12 @@
 from .context import ExecContext, make_local_context, local_ssm_scan
 from .transformer import (block_kinds, decode_step, forward, init_cache,
-                          init_params, loss_fn, period_length,
-                          prefill_forward, supports_cached_prefill)
+                          init_paged_cache, init_params, loss_fn,
+                          period_length, prefill_forward,
+                          supports_cached_prefill, supports_paged_cache)
 
 __all__ = [
     "ExecContext", "make_local_context", "local_ssm_scan",
-    "block_kinds", "decode_step", "forward", "init_cache", "init_params",
-    "loss_fn", "period_length", "prefill_forward",
-    "supports_cached_prefill",
+    "block_kinds", "decode_step", "forward", "init_cache",
+    "init_paged_cache", "init_params", "loss_fn", "period_length",
+    "prefill_forward", "supports_cached_prefill", "supports_paged_cache",
 ]

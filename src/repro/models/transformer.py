@@ -21,8 +21,9 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
-from .attention import (attn_apply, attn_cache_init, attn_decode, attn_init,
-                        attn_prefill)
+from .attention import (attn_apply, attn_cache_init, attn_decode,
+                        attn_decode_paged, attn_init, attn_paged_cache_init,
+                        attn_prefill, attn_prefill_paged)
 from .context import ExecContext
 from .layers import (chunked_lm_loss, cross_entropy, dense, dense_init,
                      embed, embed_init, mlp_apply, mlp_init, rmsnorm,
@@ -33,8 +34,9 @@ from .xlstm import (mlstm_apply, mlstm_cache_init, mlstm_decode, mlstm_init,
                     slstm_apply, slstm_cache_init, slstm_decode, slstm_init)
 
 __all__ = ["period_length", "block_kinds", "init_params", "forward",
-           "loss_fn", "init_cache", "decode_step", "prefill_forward",
-           "supports_cached_prefill"]
+           "loss_fn", "init_cache", "init_paged_cache", "decode_step",
+           "prefill_forward", "supports_cached_prefill",
+           "supports_paged_cache"]
 
 AUX_LOSS_WEIGHT = 0.01
 
@@ -265,8 +267,17 @@ def supports_cached_prefill(cfg: ModelConfig) -> bool:
     return all(mixer == "attn" for mixer, _ in block_kinds(cfg))
 
 
+def supports_paged_cache(cfg: ModelConfig) -> bool:
+    """Paged KV needs position-addressed caches in every mixer — i.e.
+    attention-only stacks.  Recurrent mixers (Mamba/xLSTM) carry dense
+    per-slot scan states that have no block structure; those archs keep
+    the dense slot-stripe layout."""
+    return supports_cached_prefill(cfg)
+
+
 def prefill_forward(params, cfg: ModelConfig, cache, batch, pos, active,
-                    *, with_logits: bool = True):
+                    *, with_logits: bool = True, block_tables=None,
+                    block_size: int = 0, view_blocks: int = 0):
     """Forward one prompt chunk and write its KV into the cache in the
     same pass — no prompt replay through ``decode_step``.
 
@@ -280,6 +291,12 @@ def prefill_forward(params, cfg: ModelConfig, cache, batch, pos, active,
     cached prefix.  ``with_logits=False`` skips the lm_head — only the
     final chunk's last token ever feeds sampling, so earlier chunks
     need not pay the (T, vocab) projection.
+
+    ``block_tables`` (B, nk) switches to the paged pool layout
+    (``init_paged_cache``): chunk KV is scattered at table-resolved
+    physical positions and attention runs over the request's gathered
+    logical prefix of ``view_blocks`` blocks (``block_size`` tokens
+    each) — see :func:`repro.models.attention.attn_prefill_paged`.
 
     MoE routing runs *drop-free* (capacity lifted to the chunk size):
     the decode path routes one token per step and never drops, so a
@@ -303,8 +320,14 @@ def prefill_forward(params, cfg: ModelConfig, cache, batch, pos, active,
         for j, (mixer, ffn) in enumerate(kinds):
             sub = period_params[f"sub_{j}"]
             h = rmsnorm(sub["norm1"], x, cfg.norm_eps)
-            mx, nc = attn_prefill(sub["attn"], cfg, h, pos,
-                                  period_cache[f"sub_{j}"], active)
+            if block_tables is not None:
+                mx, nc = attn_prefill_paged(
+                    sub["attn"], cfg, h, pos, period_cache[f"sub_{j}"],
+                    active, block_tables, block_size=block_size,
+                    view_blocks=view_blocks)
+            else:
+                mx, nc = attn_prefill(sub["attn"], cfg, h, pos,
+                                      period_cache[f"sub_{j}"], active)
             new_cache[f"sub_{j}"] = nc
             x = x + mx
             if ffn != "none":
@@ -358,9 +381,28 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int):
         lambda a: jnp.zeros((n_periods,) + a.shape, a.dtype), period)
 
 
+def init_paged_cache(cfg: ModelConfig, num_blocks: int, block_size: int):
+    """Global paged KV pool: per attention sub-layer
+    (num_kv_heads, num_blocks * block_size, head_dim) — no slot axis.
+    Requires :func:`supports_paged_cache` (attention-only mixers)."""
+    assert supports_paged_cache(cfg), \
+        f"{cfg.name}: paged KV requires attention-only mixers"
+    dtype = jnp.dtype(cfg.dtype)
+    kinds = block_kinds(cfg)
+    P = period_length(cfg)
+    n_periods = cfg.num_layers // P
+    period = {f"sub_{j}": attn_paged_cache_init(cfg, num_blocks,
+                                                block_size, dtype)
+              for j in range(len(kinds))}
+    return jax.tree.map(
+        lambda a: jnp.zeros((n_periods,) + a.shape, a.dtype), period)
+
+
 def decode_step(params, cfg: ModelConfig, cache, batch, pos_t, *,
                 attn_impl: str = "flash", attn_shards: int = 1,
-                block_k: int = 256, interpret: bool | None = None):
+                block_k: int = 256, interpret: bool | None = None,
+                block_tables=None, block_size: int = 0,
+                write_mask=None):
     """One decode step.
 
     batch: {"tokens": (B,) int32} (or {"frame_embeds": (B, d)} for audio).
@@ -371,6 +413,12 @@ def decode_step(params, cfg: ModelConfig, cache, batch, pos_t, *,
     the fused flash-decode kernel with the cache split into
     ``attn_shards`` LSE-merged segments; ``"dense"`` the XLA softmax
     oracle (see :func:`repro.models.attention.attn_decode`).
+
+    ``block_tables`` (B, nk) switches to the paged pool layout: the new
+    token's KV scatters at its table-resolved physical position and
+    attention indirects through the table (``attn_decode_paged``);
+    ``write_mask`` (B,) bool drops pool writes for idle / prefilling
+    rows (the pool has no row axis to mask after the fact).
     """
     dtype = jnp.dtype(cfg.dtype)
     kinds = block_kinds(cfg)
@@ -386,7 +434,12 @@ def decode_step(params, cfg: ModelConfig, cache, batch, pos_t, *,
             sub = period_params[f"sub_{j}"]
             c = period_cache[f"sub_{j}"]
             h = rmsnorm(sub["norm1"], x[:, None], cfg.norm_eps)[:, 0]
-            if mixer == "attn":
+            if mixer == "attn" and block_tables is not None:
+                mx, nc = attn_decode_paged(
+                    sub["attn"], cfg, h, pos_t, c, block_tables,
+                    write_mask, impl=attn_impl, block_size=block_size,
+                    interpret=interpret)
+            elif mixer == "attn":
                 mx, nc = attn_decode(sub["attn"], cfg, h, pos_t, c,
                                      impl=attn_impl, shards=attn_shards,
                                      block_k=block_k, interpret=interpret)

@@ -1,15 +1,21 @@
-"""CP serving engine: continuous batching over a slot-based KV cache.
+"""CP serving engine: continuous batching over a paged KV block pool.
 
-``ServeEngine`` drives chunked cache-writing prefill + ragged
-flash-decode steps; ``Scheduler``/``Request`` manage slot admission and
-retirement; ``sampling`` holds the per-slot greedy/temperature/top-k
-sampler.  See launch/serve.py for the CLI and README "Serving engine"
-for the architecture.
+``ServeEngine`` drives budgeted chunked prefill + ragged flash-decode
+steps over a global block pool (``BlockPool``) with cross-request
+prefix sharing (``PrefixCache``); the dense per-slot stripe layout
+survives as the parity oracle and the recurrent-arch fallback.
+``Scheduler``/``Request`` manage slot admission, the SplitFuse-style
+token budget, and retirement; ``sampling`` holds the per-request keyed
+greedy/temperature/top-k sampler.  See launch/serve.py for the CLI and
+README "Serving engine" for the architecture.
 """
 
+from .block_pool import BlockPool
 from .engine import ServeEngine
-from .sampling import apply_top_k, sample_tokens
+from .prefix import PrefixCache
+from .sampling import (apply_top_k, sample_tokens, sample_tokens_keyed)
 from .scheduler import Request, Scheduler, SlotState
 
 __all__ = ["ServeEngine", "Request", "Scheduler", "SlotState",
-           "apply_top_k", "sample_tokens"]
+           "BlockPool", "PrefixCache",
+           "apply_top_k", "sample_tokens", "sample_tokens_keyed"]

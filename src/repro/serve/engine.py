@@ -1,29 +1,32 @@
-"""Continuous-batching CP serving engine.
+"""Continuous-batching CP serving engine over a paged KV block pool.
 
-One engine owns a ``num_slots`` x ``max_len`` KV cache and three jitted
-programs:
+KV layouts (``kv_layout``):
 
-* **prefill** — chunked, cache-writing: each prompt chunk runs
-  :func:`repro.models.prefill_forward` on its slot's cache view, writing
-  roped KV directly from the forward pass (prefill cost is
-  ``ceil(Tp / prefill_chunk)`` forward calls — *independent of Tp in
-  decode steps*; the old engine replayed all Tp prompt tokens through
-  ``decode_step``).  Archs with recurrent mixers (Jamba, xLSTM) fall back
-  to masked replay prefill — their decode caches hold scan states that a
-  chunked forward does not produce.
-* **decode** — one ragged step for every active slot:
-  ``decode_step`` with per-slot ``lengths`` as positions, flash-decode
-  attention by default (``decode_impl="dense"`` keeps the XLA softmax as
-  the parity oracle), and per-row masking so idle/retired slots never
-  touch live cache rows.  Sampling (greedy / temperature / top-k,
-  per-slot) happens in the same program.
-* **sample** — the prefill's last-token logits produce each request's
-  first token, counted as *prefill* output (decode tok/s measures decode
-  steps only).
+* **paged** (default for attention-only archs) — one global pool of
+  ``num_blocks`` x ``block_size`` token positions per attention
+  sub-layer (``models.init_paged_cache``); each request holds a block
+  table mapping logical to physical blocks (``block_pool.BlockPool``
+  does the host-side accounting).  KV memory scales with *live tokens*,
+  not ``num_slots x max_len``; identical prompt prefixes share blocks
+  through ``prefix.PrefixCache`` (written once, refcounted,
+  copy-on-write when a shared block must be appended).
+* **dense** — the PR-4 per-slot stripe layout, kept as the parity
+  oracle (paged and dense greedy decodes must agree bitwise) and for
+  recurrent archs (Jamba/xLSTM scan states have no block structure).
 
-The scheduler (``scheduler.py``) admits queued requests into free slots
-and retires finished ones mid-flight — a finished short request frees its
-slot for the next queued prompt while long requests keep decoding.
+Each :meth:`step` spends one **token budget** (SplitFuse-style,
+``scheduler.plan_step``): decode-ready slots get their decode token
+first, the remaining budget trickles prompt chunks in — a long prompt
+prefills *alongside* in-flight decodes instead of stalling them.
+``unified=False`` restores serial prefill-then-decode as the stall
+baseline.
+
+Three jitted program families: chunked cache-writing **prefill**
+(per-slot dense view or block-table scatter/gather), ragged **decode**
+(flash-decode kernel, block-table indirected for paged), and keyed
+**sampling** — every request samples from its own
+``fold_in(fold_in(engine_key, rid), n_generated)`` key stream, so
+results are per-request reproducible regardless of batch composition.
 """
 
 from __future__ import annotations
@@ -37,10 +40,13 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
-from repro.models import (decode_step, init_cache, init_params,
-                          prefill_forward, supports_cached_prefill)
-from .sampling import sample_tokens, sample_tokens_jit
-from .scheduler import Request, Scheduler
+from repro.models import (decode_step, init_cache, init_paged_cache,
+                          init_params, prefill_forward,
+                          supports_cached_prefill, supports_paged_cache)
+from .block_pool import BlockPool
+from .prefix import PrefixCache
+from .sampling import sample_tokens_keyed, sample_tokens_keyed_jit
+from .scheduler import Request, Scheduler, SlotState
 
 __all__ = ["ServeEngine"]
 
@@ -57,8 +63,8 @@ def _slot_write(cache, view, slot):
 
 
 def _mask_rows(new, old, active):
-    """Keep ``new`` only on active slot rows (row axis 1 of every cache
-    leaf: (P, B, ...))."""
+    """Keep ``new`` only on active slot rows (row axis 1 of every dense
+    cache leaf: (P, B, ...))."""
     def sel(n, o):
         m = active.reshape((1, -1) + (1,) * (n.ndim - 2))
         return jnp.where(m, n.astype(o.dtype), o)
@@ -66,38 +72,86 @@ def _mask_rows(new, old, active):
 
 
 class ServeEngine:
-    """Drive requests through prefill + continuous-batching decode.
+    """Drive requests through budgeted prefill + continuous decode.
 
-    Parameters: ``decode_impl`` "flash" (default) or "dense";
-    ``attn_shards`` splits the decode cache into LSE-merged segments
-    (emulating a CP-sharded cache in-process); ``interpret=None``
-    auto-selects Pallas interpret mode off-TPU.
+    Parameters: ``kv_layout`` "auto" (paged when the arch supports it) /
+    "paged" / "dense"; ``block_size`` tokens per KV block;
+    ``num_blocks`` pool size (0 = dense-equivalent capacity
+    ``num_slots * ceil(max_len/block_size)``); ``token_budget`` tokens
+    per step (0 = ``num_slots + prefill_chunk``); ``prefix_cache``
+    shares identical prompt prefixes across requests (paged only);
+    ``unified=False`` serializes prefill before decode (stall baseline).
+    ``decode_impl`` "flash" (default) or "dense" (XLA softmax oracle);
+    ``attn_shards`` splits the *dense* decode cache into LSE-merged
+    segments; ``interpret=None`` auto-selects Pallas interpret off-TPU.
     """
 
     def __init__(self, cfg: ModelConfig, params=None, *,
                  num_slots: int = 4, max_len: int = 256,
                  prefill_chunk: int = 64, decode_impl: str = "flash",
                  attn_shards: int = 1, block_k: int = 256,
-                 interpret: bool | None = None, seed: int = 0):
+                 interpret: bool | None = None, seed: int = 0,
+                 kv_layout: str = "auto", block_size: int = 16,
+                 num_blocks: int = 0, token_budget: int = 0,
+                 prefix_cache: bool = True, unified: bool = True):
         self.cfg = cfg
         self.num_slots = num_slots
         self.max_len = max_len
         self.prefill_chunk = min(prefill_chunk, max_len)
         self.decode_impl = decode_impl
         self.cached_prefill = supports_cached_prefill(cfg)
+
+        if kv_layout == "auto":
+            # paged when the arch can (attention-only mixers); sharded
+            # decode (LSE-merged stripe segments) is a dense-layout
+            # feature, so attn_shards>1 keeps the stripes
+            kv_layout = "paged" if supports_paged_cache(cfg) \
+                and attn_shards == 1 else "dense"
+        elif kv_layout == "paged" and not supports_paged_cache(cfg):
+            raise ValueError(
+                f"{cfg.name}: paged KV requires attention-only mixers "
+                "(recurrent scan states have no block structure)")
+        elif kv_layout not in ("paged", "dense"):
+            raise ValueError(f"unknown kv_layout {kv_layout!r}")
+        if kv_layout == "paged" and attn_shards > 1:
+            raise ValueError("attn_shards>1 is a dense-layout feature "
+                             "(LSE-merged stripe segments)")
+        self.layout = kv_layout
+
         if params is None:
             params = init_params(jax.random.PRNGKey(seed), cfg)
         self.params = params
-        self.cache = init_cache(cfg, num_slots, max_len)
-        self.sched = Scheduler(num_slots, max_len)
-        self.rng = jax.random.PRNGKey(seed)
+
+        self.block_size = block_size
+        self._nk = -(-max_len // block_size)     # table width in blocks
+        if kv_layout == "paged":
+            self.num_blocks = num_blocks or num_slots * self._nk
+            self.pool = BlockPool(self.num_blocks, block_size)
+            self.prefix = PrefixCache(block_size) if prefix_cache else None
+            self.cache = init_paged_cache(cfg, self.num_blocks, block_size)
+        else:
+            self.num_blocks = 0
+            self.pool = None
+            self.prefix = None
+            self.cache = init_cache(cfg, num_slots, max_len)
+
+        self.sched = Scheduler(num_slots, max_len,
+                               prefill_chunk=self.prefill_chunk,
+                               token_budget=token_budget, unified=unified)
+        self.sched.on_retire = self._on_retire
+        self._base_key = jax.random.PRNGKey(seed)
         self._next_rid = 0
         self.stats: dict[str, Any] = {
-            "prefill_tokens": 0, "prefill_steps": 0,
+            "prefill_tokens": 0, "prefill_chunk_tokens": 0,
+            "prefill_cached_tokens": 0, "prefill_steps": 0,
             "prefill_decode_steps": 0, "prefill_s": 0.0,
             "decode_tokens": 0, "decode_steps": 0, "decode_s": 0.0,
-            "admitted": 0, "retired": 0}
+            "admitted": 0, "retired": 0, "steps": 0,
+            "stalled_decode_steps": 0, "cow_copies": 0,
+            "admission_backoffs": 0,
+            "pool_block_steps": 0, "live_token_steps": 0}
 
+        bs = block_size
         dec_kw = dict(attn_impl=decode_impl, attn_shards=attn_shards,
                       block_k=block_k, interpret=interpret)
 
@@ -109,17 +163,30 @@ class ServeEngine:
                 return {"frame_embeds": frames}
             return {"tokens": tok}
 
-        def decode_fn(params, cache, tok, pos_t, active, rng, temps, topk):
+        def decode_fn(params, cache, tok, pos_t, active, key, rids,
+                      counts, temps, topk):
             frames = jnp.zeros((num_slots, cfg.d_model), jnp.dtype(cfg.dtype))
             logits, new_cache = decode_step(
                 params, cfg, cache, _decode_batch(tok, frames), pos_t,
                 **dec_kw)
             new_cache = _mask_rows(new_cache, cache, active)
-            nxt = sample_tokens(rng, logits.astype(jnp.float32), temps, topk)
+            nxt = sample_tokens_keyed(key, rids, counts,
+                                      logits.astype(jnp.float32), temps, topk)
             return nxt, logits, new_cache
 
-        def prefill_chunk_fn(params, cache, slot, tokens, frames, pos,
-                             active, *, with_logits, s_view):
+        def decode_paged_fn(params, cache, tok, pos_t, tables, active, key,
+                            rids, counts, temps, topk):
+            frames = jnp.zeros((num_slots, cfg.d_model), jnp.dtype(cfg.dtype))
+            logits, new_cache = decode_step(
+                params, cfg, cache, _decode_batch(tok, frames), pos_t,
+                attn_impl=decode_impl, block_k=block_k,
+                interpret=interpret, block_tables=tables, block_size=bs,
+                write_mask=active)
+            nxt = sample_tokens_keyed(key, rids, counts,
+                                      logits.astype(jnp.float32), temps, topk)
+            return nxt, logits, new_cache
+
+        def _chunk_batch(tokens, frames):
             batch = {"tokens": tokens}
             if cfg.frontend == "audio_frames":
                 batch = {"frame_embeds": frames}
@@ -128,17 +195,30 @@ class ServeEngine:
                 batch["patch_embeds"] = jnp.zeros(
                     (1, T, cfg.d_model), jnp.dtype(cfg.dtype))
                 batch["patch_mask"] = jnp.zeros((1, T), bool)
+            return batch
+
+        def prefill_chunk_fn(params, cache, slot, tokens, frames, pos,
+                             active, *, with_logits, s_view):
             view = _slot_view(cache, slot)
             # crop the attended cache to the pow2 bucket covering this
             # chunk's end: prefill attention is O(C * s_view), not
             # O(C * max_len) (attn caches are (P, 1, Hkv, S, hd))
             crop = jax.tree.map(lambda l: l[:, :, :, :s_view], view)
-            logits, ncrop = prefill_forward(params, cfg, crop, batch, pos,
-                                            active, with_logits=with_logits)
+            logits, ncrop = prefill_forward(
+                params, cfg, crop, _chunk_batch(tokens, frames), pos,
+                active, with_logits=with_logits)
             nview = jax.tree.map(
                 lambda f, n: jax.lax.dynamic_update_slice_in_dim(
                     f, n.astype(f.dtype), 0, axis=3), view, ncrop)
             return logits, _slot_write(cache, nview, slot)
+
+        def prefill_paged_fn(params, cache, table, tokens, frames, pos,
+                             active, *, with_logits, view_blocks):
+            logits, new_cache = prefill_forward(
+                params, cfg, cache, _chunk_batch(tokens, frames), pos,
+                active, with_logits=with_logits, block_tables=table,
+                block_size=bs, view_blocks=view_blocks)
+            return logits, new_cache
 
         def replay_fn(params, cache, tok, frames, pos_t, active):
             logits, new_cache = decode_step(
@@ -146,42 +226,71 @@ class ServeEngine:
                 **dec_kw)
             return logits, _mask_rows(new_cache, cache, active)
 
+        def copy_block_fn(cache, src, dst):
+            # copy-on-write: clone pool block src -> dst (flat token
+            # axis 2 of every paged leaf (P, Hkv, NB*bs, hd))
+            def cp(l):
+                blk = jax.lax.dynamic_slice_in_dim(l, src * bs, bs, axis=2)
+                return jax.lax.dynamic_update_slice_in_dim(
+                    l, blk, dst * bs, axis=2)
+            return jax.tree.map(cp, cache)
+
         # the cache argument is donated everywhere: the engine always
         # replaces self.cache with the program's output, so XLA can
-        # update the (num_slots x max_len) KV buffers in place instead
-        # of keeping two full copies live
+        # update the KV buffers in place instead of keeping two copies
         self._decode_fn = jax.jit(decode_fn, donate_argnums=(1,))
+        self._decode_paged_fn = jax.jit(decode_paged_fn, donate_argnums=(1,))
         self._replay_fn = jax.jit(replay_fn, donate_argnums=(1,))
-        self._prefill_fns: dict[tuple[bool, int], Any] = {}
+        self._copy_block_fn = jax.jit(copy_block_fn, donate_argnums=(0,))
+        self._prefill_fns: dict[tuple, Any] = {}
         self._prefill_chunk_body = prefill_chunk_fn
+        self._prefill_paged_body = prefill_paged_fn
 
-    def _prefill_fn(self, with_logits: bool, s_view: int):
-        """Jitted prefill-chunk program per (head?, cache-view bucket);
-        only the final chunk pays the (T, vocab) head projection."""
-        key = (with_logits, s_view)
+    # ------------------------------------------------------------- #
+    def _prefill_fn(self, with_logits: bool, view: int):
+        """Jitted prefill-chunk program per (head?, view bucket); only
+        the final chunk pays the (T, vocab) head projection.  ``view``
+        is the dense s_view (tokens) or paged view_blocks (blocks)."""
+        key = (self.layout, with_logits, view)
         if key not in self._prefill_fns:
-            self._prefill_fns[key] = jax.jit(
-                functools.partial(self._prefill_chunk_body,
-                                  with_logits=with_logits, s_view=s_view),
-                donate_argnums=(1,))
+            if self.layout == "paged":
+                body = functools.partial(self._prefill_paged_body,
+                                         with_logits=with_logits,
+                                         view_blocks=view)
+            else:
+                body = functools.partial(self._prefill_chunk_body,
+                                         with_logits=with_logits,
+                                         s_view=view)
+            self._prefill_fns[key] = jax.jit(body, donate_argnums=(1,))
         return self._prefill_fns[key]
 
+    def _view_bucket(self, end: int) -> int:
+        """pow2 cache-view bucket covering prefix ``end`` (tokens), in
+        this layout's view unit — bounds jit specialization to
+        O(log(max_len)) prefill variants."""
+        if self.layout == "paged":
+            v = 1
+            while v * self.block_size < end:
+                v *= 2
+            return min(v, self._nk)
+        s = self.prefill_chunk
+        while s < end:
+            s *= 2
+        return min(s, self.max_len)
+
     def _prefill_buckets(self, prompt_len: int):
-        """(is_last, s_view) for each chunk of a ``prompt_len`` prompt."""
+        """(is_last, view bucket) per chunk of an un-budget-split
+        ``prompt_len`` prompt — the variants warmup precompiles."""
         C = self.prefill_chunk
         n_chunks = -(-prompt_len // C)
-        out = []
-        for ci in range(n_chunks):
-            s_view = C
-            while s_view < (ci + 1) * C:
-                s_view *= 2
-            out.append((ci == n_chunks - 1, min(s_view, self.max_len)))
-        return out
+        return [(ci == n_chunks - 1, self._view_bucket((ci + 1) * C))
+                for ci in range(n_chunks)]
 
     # ------------------------------------------------------------- #
     def submit(self, tokens, *, max_new: int = 16, temperature: float = 0.0,
                top_k: int = 0, eos_id: int = -1, frames=None) -> int:
-        """Queue one request; returns its request id."""
+        """Queue one request; returns its request id.  Oversized
+        requests land in the results dict with status="rejected"."""
         rid = self._next_rid
         self._next_rid += 1
         self.sched.submit(Request(
@@ -191,55 +300,138 @@ class ServeEngine:
             else np.asarray(frames, np.float32)))
         return rid
 
-    def _split(self):
-        self.rng, k = jax.random.split(self.rng)
-        return k
+    # ------------------------------------------------------------- #
+    # paged block accounting (host side)
+    def _place(self, req: Request) -> dict | None:
+        """Reserve KV for one request at admission.  Paged: match the
+        prefix cache, then allocate the remaining blocks all-or-nothing
+        (evicting unreferenced cached blocks if short); None = backoff,
+        the request stays queued at the FIFO head."""
+        if self.layout != "paged":
+            return {}
+        bs = self.block_size
+        Tp, mn = req.prompt_len, req.max_new
+        matched = [] if self.prefix is None \
+            else self.prefix.match(req.tokens)
+        m = len(matched) * bs
+        # a fully-cached prompt still recomputes its final token (its
+        # logits seed sampling): reserve the copy-on-write spare for the
+        # shared block that write lands in
+        start = min(m, Tp - 1)
+        nk_req = -(-(Tp + mn - 1) // bs)
+        n_fresh = nk_req - len(matched)
+        n_spare = 1 if m >= Tp else 0
+        need = n_fresh + n_spare
+        if self.prefix is not None and self.pool.free_count < need:
+            self.prefix.evict(need - self.pool.free_count, self.pool)
+        got = self.pool.alloc(need)
+        if got is None:
+            self.stats["admission_backoffs"] += 1
+            return None
+        self.pool.retain(matched)
+        self.stats["prefill_cached_tokens"] += m
+        return {"table": matched + got[:n_fresh], "cached": m,
+                "start": start, "spare": got[n_fresh] if n_spare else None}
+
+    def _on_retire(self, slot: int, st: SlotState) -> None:
+        self.stats["retired"] += 1
+        if self.layout == "paged":
+            self.pool.release(st.table)
+            if st.spare is not None:
+                self.pool.release([st.spare])
+
+    def _ensure_private(self, st: SlotState, bi: int) -> None:
+        """Copy-on-write logical block ``bi`` of this request's table if
+        it is shared (prefix-cached with other readers)."""
+        if bi >= len(st.table):
+            return
+        bid = st.table[bi]
+        if not self.pool.is_shared(bid):
+            return
+        if st.spare is not None:
+            nb, st.spare = st.spare, None
+        else:
+            got = self.pool.alloc(1)
+            if got is None:
+                raise RuntimeError("copy-on-write with exhausted pool")
+            nb = got[0]
+        self.cache = self._copy_block_fn(
+            self.cache, jnp.asarray(bid, jnp.int32),
+            jnp.asarray(nb, jnp.int32))
+        self.pool.release([bid])
+        st.table[bi] = nb
+        self.stats["cow_copies"] += 1
+
+    def _tables_matrix(self) -> np.ndarray:
+        tab = np.zeros((self.num_slots, self._nk), np.int32)
+        for s in self.sched.active_slots:
+            t = self.sched.slots[s].table
+            tab[s, :len(t)] = t
+        return tab
 
     # ------------------------------------------------------------- #
-    def _prefill(self, slot: int, req: Request) -> None:
-        t0 = time.perf_counter()
-        if self.cached_prefill:
-            logits_last = self._prefill_cached(slot, req)
-        else:
-            logits_last = self._prefill_replay(slot, req)
-        first = sample_tokens_jit(
-            self._split(), logits_last[None].astype(jnp.float32),
+    def _first_token(self, req: Request, logits_row) -> int:
+        """Sample a request's first token (count 0 of its key stream)
+        from the prefill's last logits."""
+        tok = sample_tokens_keyed_jit(
+            self._base_key, jnp.asarray([req.rid], jnp.int32),
+            jnp.zeros((1,), jnp.int32),
+            logits_row[None].astype(jnp.float32),
             jnp.asarray([req.temperature], jnp.float32),
             jnp.asarray([req.top_k], jnp.int32))
-        first = int(np.asarray(first)[0])
-        self.stats["prefill_s"] += time.perf_counter() - t0
-        self.stats["prefill_tokens"] += req.prompt_len
-        self.stats["admitted"] += 1
-        self.sched.start(slot, first)
-        if self.sched.slots[slot] is None:
-            self.stats["retired"] += 1
+        return int(np.asarray(tok)[0])
 
-    def _prefill_cached(self, slot: int, req: Request):
+    def _run_prefill_chunk(self, slot: int, start: int, n: int) -> None:
+        """Prefill prompt tokens [start, start+n) of one slot; on the
+        final chunk, sample the first token and start decoding."""
+        sc = self.sched
+        st = sc.slots[slot]
+        req = st.request
         C = self.prefill_chunk
         Tp = req.prompt_len
-        n_chunks = -(-Tp // C)
-        toks = np.zeros((1, n_chunks * C), np.int32)
-        toks[0, :Tp] = req.tokens
-        frames = np.zeros((1, n_chunks * C, self.cfg.d_model), np.float32)
+        t0 = time.perf_counter()
+        toks = np.zeros((1, C), np.int32)
+        toks[0, :n] = req.tokens[start:start + n]
+        frames = np.zeros((1, C, self.cfg.d_model), np.float32)
         if req.frames is not None:
-            frames[0, :Tp] = req.frames
-        slot_j = jnp.asarray(slot, jnp.int32)
-        logits = None
-        for ci, (is_last, s_view) in enumerate(self._prefill_buckets(Tp)):
-            sl = slice(ci * C, (ci + 1) * C)
-            pos = jnp.asarray(np.arange(ci * C, (ci + 1) * C,
-                                        dtype=np.int32)[None])
-            active = jnp.asarray((np.arange(ci * C, (ci + 1) * C) < Tp)[None])
-            logits, self.cache = self._prefill_fn(is_last, s_view)(
-                self.params, self.cache, slot_j, jnp.asarray(toks[:, sl]),
-                jnp.asarray(frames[:, sl]), pos, active)
-            self.stats["prefill_steps"] += 1
-        return logits[0, (Tp - 1) - (n_chunks - 1) * C]
+            frames[0, :n] = req.frames[start:start + n]
+        pos = jnp.asarray(np.arange(start, start + C, dtype=np.int32)[None])
+        active = jnp.asarray((np.arange(C) < n)[None])
+        with_logits = start + n >= Tp
+        fn = self._prefill_fn(with_logits, self._view_bucket(start + C))
+        if self.layout == "paged":
+            # only this chunk's first block can be prefix-shared (later
+            # blocks are freshly allocated): COW it before writing
+            self._ensure_private(st, start // self.block_size)
+            table = jnp.asarray(self._tables_matrix()[slot][None])
+            logits, self.cache = fn(self.params, self.cache, table,
+                                    jnp.asarray(toks), jnp.asarray(frames),
+                                    pos, active)
+        else:
+            logits, self.cache = fn(self.params, self.cache,
+                                    jnp.asarray(slot, jnp.int32),
+                                    jnp.asarray(toks), jnp.asarray(frames),
+                                    pos, active)
+        sc.note_prefill(slot, n)
+        self.stats["prefill_steps"] += 1
+        self.stats["prefill_chunk_tokens"] += n
+        if with_logits:
+            if self.layout == "paged" and self.prefix is not None:
+                nfull = Tp // self.block_size
+                if nfull:
+                    self.prefix.insert(req.tokens[:nfull * self.block_size],
+                                       st.table[:nfull], self.pool)
+            first = self._first_token(req, logits[0, n - 1])
+            self.stats["prefill_tokens"] += Tp
+            sc.start(slot, first)
+        self.stats["prefill_s"] += time.perf_counter() - t0
 
-    def _prefill_replay(self, slot: int, req: Request):
-        """Recurrent-mixer fallback: feed the prompt through the decode
-        path one token at a time, updates masked to this slot's row.
-        Audio prompts replay their *real* frame embeddings."""
+    def _prefill_replay(self, slot: int, req: Request) -> None:
+        """Recurrent-mixer fallback (dense layout): feed the whole
+        prompt through the decode path one token at a time at admission,
+        updates masked to this slot's row.  Audio prompts replay their
+        *real* frame embeddings."""
+        t0 = time.perf_counter()
         B = self.num_slots
         onehot = jnp.zeros((B,), bool).at[slot].set(True)
         logits = None
@@ -253,39 +445,86 @@ class ServeEngine:
             logits, self.cache = self._replay_fn(
                 self.params, self.cache, tok, frames, pos_t, onehot)
             self.stats["prefill_decode_steps"] += 1
-        return logits[slot]
+        first = self._first_token(req, logits[slot])
+        self.stats["prefill_tokens"] += req.prompt_len
+        self.stats["prefill_chunk_tokens"] += req.prompt_len
+        self.stats["prefill_s"] += time.perf_counter() - t0
+        self.sched.start(slot, first)
 
     # ------------------------------------------------------------- #
-    def _decode_once(self) -> None:
+    def _decode_once(self, decode_slots: list[int]) -> None:
         sc = self.sched
-        active = jnp.asarray(sc.active_mask())
-        lengths = jnp.asarray(sc.lengths())
-        tok = np.zeros((self.num_slots,), np.int32)
-        for s in sc.active_slots:
+        B = self.num_slots
+        dmask = np.zeros((B,), bool)
+        dmask[decode_slots] = True
+        tok = np.zeros((B,), np.int32)
+        for s in decode_slots:
             tok[s] = sc.slots[s].generated[-1]
+        lengths = np.where(dmask, sc.lengths(), 0).astype(np.int32)
         t0 = time.perf_counter()
-        nxt, _, self.cache = self._decode_fn(
-            self.params, self.cache, jnp.asarray(tok), lengths, active,
-            self._split(), jnp.asarray(sc.temperatures()),
-            jnp.asarray(sc.top_ks()))
+        common = (jnp.asarray(tok), jnp.asarray(lengths))
+        tail = (self._base_key, jnp.asarray(sc.rids()),
+                jnp.asarray(sc.sample_counts()),
+                jnp.asarray(sc.temperatures()), jnp.asarray(sc.top_ks()))
+        if self.layout == "paged":
+            # safety net: a decode write must never land in a shared
+            # block (prefix sharing covers full *prompt* blocks only,
+            # and full-match COW happens at prefill — this should not
+            # fire, but a silent shared-block write would corrupt
+            # another request's prefix)
+            for s in decode_slots:
+                self._ensure_private(
+                    sc.slots[s], sc.slots[s].length // self.block_size)
+            nxt, _, self.cache = self._decode_paged_fn(
+                self.params, self.cache, *common,
+                jnp.asarray(self._tables_matrix()), jnp.asarray(dmask),
+                *tail)
+        else:
+            nxt, _, self.cache = self._decode_fn(
+                self.params, self.cache, *common, jnp.asarray(dmask), *tail)
         nxt = np.asarray(jax.block_until_ready(nxt))
         self.stats["decode_s"] += time.perf_counter() - t0
-        n_active = len(sc.active_slots)
         self.stats["decode_steps"] += 1
-        self.stats["decode_tokens"] += n_active
-        self.stats["retired"] += len(sc.record(nxt))
+        self.stats["decode_tokens"] += len(decode_slots)
+        sc.record(nxt, decode_slots)
 
+    # ------------------------------------------------------------- #
     def step(self) -> bool:
-        """Admit + prefill newly placed requests, then one decode step.
-        Returns False when no work remains."""
-        for slot, req in self.sched.admit():
-            self._prefill(slot, req)
-        if self.sched.active_slots:
-            self._decode_once()
-        return self.sched.has_work
+        """One engine step: admit what fits, spend the token budget on
+        prefill chunks + decode tokens.  Returns False when idle."""
+        sc = self.sched
+        placed = sc.admit(self._place)
+        self.stats["admitted"] += len(placed)
+        if not self.cached_prefill:
+            for slot, req in placed:
+                self._prefill_replay(slot, req)
+        if sc.queue and not sc.active_slots:
+            raise RuntimeError(
+                "request cannot be placed in an empty engine — the KV "
+                "pool is smaller than one request's working set")
+        n_ready = sum(1 for s in sc.active_slots
+                      if sc.slots[s].decode_ready)
+        prefill_items, decode_slots = sc.plan_step()
+        for slot, start, n in prefill_items:
+            self._run_prefill_chunk(slot, start, n)
+        if decode_slots:
+            self._decode_once(decode_slots)
+        elif n_ready:
+            # decode-ready slots got no token this step (serial mode
+            # draining a long prefill) — the stall the unified budget
+            # eliminates
+            self.stats["stalled_decode_steps"] += 1
+        self.stats["steps"] += 1
+        self.stats["live_token_steps"] += sum(
+            sc.slots[s].length for s in sc.active_slots)
+        if self.layout == "paged":
+            self.stats["pool_block_steps"] += self.pool.allocated_count
+        return sc.has_work
 
     def run(self, max_steps: int = 100_000) -> dict[int, dict[str, Any]]:
-        """Drain the queue; returns {rid: {"tokens", "prompt_len"}}."""
+        """Drain the queue; returns {rid: {"status", "tokens",
+        "prompt_len", ...}} — rejected requests carry status="rejected"
+        and an empty token array."""
         steps = 0
         while self.step():
             steps += 1
@@ -293,36 +532,56 @@ class ServeEngine:
                 break
         return self.sched.finished
 
+    # ------------------------------------------------------------- #
     def warmup(self, prompt_len: int | None = None) -> None:
         """Compile the decode + prefill + sampling programs outside the
         timed window (all-inactive calls leave cache *values* untouched;
         outputs are reassigned because the cache argument is donated).
         ``prompt_len`` warms every prefill-chunk variant a prompt of
         that length uses (default: a single-chunk prompt)."""
-        zi = jnp.zeros((self.num_slots,), jnp.int32)
-        _, _, self.cache = self._decode_fn(
-            self.params, self.cache, zi, zi,
-            jnp.zeros((self.num_slots,), bool), self._split(),
-            jnp.zeros((self.num_slots,), jnp.float32), zi)
-        sample_tokens_jit(self._split(),
-                          jnp.zeros((1, self.cfg.vocab_size), jnp.float32),
-                          jnp.zeros((1,), jnp.float32),
-                          jnp.zeros((1,), jnp.int32))
-        C = self.prefill_chunk
-        if self.cached_prefill:
-            for is_last, s_view in set(
-                    self._prefill_buckets(prompt_len or C)):
-                _, self.cache = self._prefill_fn(is_last, s_view)(
-                    self.params, self.cache, jnp.asarray(0, jnp.int32),
-                    jnp.zeros((1, C), jnp.int32),
-                    jnp.zeros((1, C, self.cfg.d_model), jnp.float32),
-                    jnp.asarray(np.arange(C, dtype=np.int32)[None]),
-                    jnp.zeros((1, C), bool))
+        B = self.num_slots
+        zi = jnp.zeros((B,), jnp.int32)
+        zmask = jnp.zeros((B,), bool)
+        zf = jnp.zeros((B,), jnp.float32)
+        tail = (self._base_key, zi, zi, zf, zi)
+        if self.layout == "paged":
+            ztab = jnp.zeros((B, self._nk), jnp.int32)
+            _, _, self.cache = self._decode_paged_fn(
+                self.params, self.cache, zi, zi, ztab, zmask, *tail)
         else:
+            _, _, self.cache = self._decode_fn(
+                self.params, self.cache, zi, zi, zmask, *tail)
+        sample_tokens_keyed_jit(
+            self._base_key, jnp.zeros((1,), jnp.int32),
+            jnp.zeros((1,), jnp.int32),
+            jnp.zeros((1, self.cfg.vocab_size), jnp.float32),
+            jnp.zeros((1,), jnp.float32), jnp.zeros((1,), jnp.int32))
+        C = self.prefill_chunk
+        if not self.cached_prefill:
             _, self.cache = self._replay_fn(
                 self.params, self.cache, zi,
-                jnp.zeros((self.num_slots, self.cfg.d_model), jnp.float32),
-                zi, jnp.zeros((self.num_slots,), bool))
+                jnp.zeros((B, self.cfg.d_model), jnp.float32), zi, zmask)
+            return
+        zchunk = (jnp.zeros((1, C), jnp.int32),
+                  jnp.zeros((1, C, self.cfg.d_model), jnp.float32),
+                  jnp.asarray(np.arange(C, dtype=np.int32)[None]),
+                  jnp.zeros((1, C), bool))
+        lead = jnp.zeros((1, self._nk), jnp.int32) \
+            if self.layout == "paged" else jnp.asarray(0, jnp.int32)
+        for is_last, view in set(self._prefill_buckets(prompt_len or C)):
+            _, self.cache = self._prefill_fn(is_last, view)(
+                self.params, self.cache, lead, *zchunk)
+
+    # ------------------------------------------------------------- #
+    def kv_cache_bytes(self) -> int:
+        """Device bytes of the KV store (pool or stripes)."""
+        return int(sum(l.nbytes for l in jax.tree.leaves(self.cache)))
+
+    def kv_token_capacity(self) -> int:
+        """Token positions the KV store can hold."""
+        if self.layout == "paged":
+            return self.num_blocks * self.block_size
+        return self.num_slots * self.max_len
 
     def throughput(self) -> dict[str, float]:
         s = self.stats

@@ -5,6 +5,16 @@ a heterogeneous batch: ``temperature`` (B,) — 0 selects greedy argmax for
 that slot; ``top_k`` (B,) int — 0 disables the top-k filter for that
 slot.  Greedy slots are bitwise argmax (the flash-vs-dense parity oracle
 in the serving smoke runs on them).
+
+Determinism: the engine samples through :func:`sample_tokens_keyed`,
+which derives an independent key per row as
+``fold_in(fold_in(engine_key, rid), n_generated)`` — each request owns
+its own key *stream*, indexed by how many tokens it has produced.  Two
+identical concurrent temperature>0 requests therefore sample
+independently (different rids), and any single request reproduces
+bit-for-bit given the engine seed, regardless of which slot it landed
+in or what else shared the batch.  (:func:`sample_tokens` keeps the
+one-key-per-call form for direct use.)
 """
 
 from __future__ import annotations
@@ -12,7 +22,8 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-__all__ = ["apply_top_k", "sample_tokens", "sample_tokens_jit"]
+__all__ = ["apply_top_k", "sample_tokens", "sample_tokens_jit",
+           "sample_tokens_keyed", "sample_tokens_keyed_jit"]
 
 
 def apply_top_k(logits, top_k):
@@ -42,3 +53,27 @@ def sample_tokens(rng, logits, temperature, top_k):
 #: process-wide jitted sampler (shared across engines — one compile per
 #: batch shape)
 sample_tokens_jit = jax.jit(sample_tokens)
+
+
+def sample_tokens_keyed(base_key, rids, counts, logits, temperature,
+                        top_k):
+    """Per-request key streams: row b samples with
+    ``fold_in(fold_in(base_key, rids[b]), counts[b])``.
+
+    rids (B,) int32 request ids; counts (B,) int32 per-request sample
+    index (= tokens generated so far).  Greedy rows (temperature 0) are
+    bitwise argmax, key-independent.
+    """
+    greedy = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    scaled = apply_top_k(logits.astype(jnp.float32), top_k) \
+        / jnp.maximum(temperature, 1e-6)[:, None]
+
+    def one(rid, cnt, row):
+        key = jax.random.fold_in(jax.random.fold_in(base_key, rid), cnt)
+        return jax.random.categorical(key, row)
+
+    sampled = jax.vmap(one)(rids, counts, scaled).astype(jnp.int32)
+    return jnp.where(temperature <= 0, greedy, sampled)
+
+
+sample_tokens_keyed_jit = jax.jit(sample_tokens_keyed)

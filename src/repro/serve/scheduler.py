@@ -1,11 +1,23 @@
-"""Continuous-batching scheduler: slot admission, ragged decode, retirement.
+"""Token-budget scheduler: slot admission, unified prefill/decode planning.
 
-The engine owns ``num_slots`` cache rows.  Requests queue FIFO; whenever a
-slot is free the next request is admitted into it (prefill), and a slot
-frees the moment its request finishes (EOS or ``max_new`` tokens) — other
-slots keep decoding, so a finished short request never holds a long one
-hostage (the decode batch is *ragged* by construction: per-slot ``lengths``
-drive the attention mask / flash-decode block clamp).
+The engine owns ``num_slots`` request slots over a shared KV store (paged
+block pool or dense stripes).  Requests queue FIFO; free slots admit the
+head of the queue (``admit`` consults a placement callback so the engine
+can refuse — pool exhaustion — without losing FIFO order), and a slot
+frees the moment its request finishes (EOS or ``max_new``).
+
+Each engine step is planned as **one token budget** spent across pending
+prefill chunks *and* decode tokens (SplitFuse-style): every decode-ready
+slot gets its decode token first, and the remaining budget trickles
+prompt chunks in for slots still prefilling — a long prompt never stalls
+in-flight decodes.  ``unified=False`` restores the serial discipline
+(drain all pending prefill before any decode) as the stall baseline the
+serve bench measures against.
+
+Oversized requests (``prompt_len + max_new > max_len``) are *rejected*,
+not raised: they appear in ``finished`` with ``status="rejected"`` so
+one bad request cannot kill the engine loop; completed requests carry
+``status="ok"``.
 
 Host-side bookkeeping only — all array work lives in the engine.
 """
@@ -14,7 +26,7 @@ from __future__ import annotations
 
 import dataclasses
 from collections import deque
-from typing import Any
+from typing import Any, Callable
 
 import numpy as np
 
@@ -41,8 +53,27 @@ class Request:
 @dataclasses.dataclass
 class SlotState:
     request: Request
-    length: int = 0                     # tokens in cache (prompt + generated)
+    prefilled: int = 0          # prompt tokens whose KV is in cache
+    length: int = 0             # tokens in cache (prompt + generated)
     generated: list[int] = dataclasses.field(default_factory=list)
+    # paged layout: this request's block table (physical pool block per
+    # logical block), prefix-cache hit size, and the reserved
+    # copy-on-write spare for the fully-cached-prompt case
+    table: list[int] = dataclasses.field(default_factory=list)
+    cached_tokens: int = 0
+    spare: int | None = None
+
+    @property
+    def prompt_len(self) -> int:
+        return self.request.prompt_len
+
+    @property
+    def needs_prefill(self) -> bool:
+        return self.prefilled < self.prompt_len
+
+    @property
+    def decode_ready(self) -> bool:
+        return not self.needs_prefill and bool(self.generated)
 
     @property
     def done(self) -> bool:
@@ -54,35 +85,109 @@ class SlotState:
 
 
 class Scheduler:
-    """FIFO queue + slot table.  ``admit()`` pairs free slots with queued
-    requests; ``record()`` appends sampled tokens and retires finished
-    slots, returning the completed requests."""
+    """FIFO queue + slot table + per-step token-budget planner.
 
-    def __init__(self, num_slots: int, max_len: int):
+    ``token_budget`` tokens are spent per engine step (0 picks
+    ``num_slots + prefill_chunk`` — every decode plus one full prompt
+    chunk).  ``admit()`` pairs free slots with queued requests through a
+    placement callback; ``plan_step()`` splits the budget; ``record()``
+    appends decode tokens and retires finished slots.  An engine hooks
+    ``on_retire(slot, state)`` to release KV blocks.
+    """
+
+    def __init__(self, num_slots: int, max_len: int, *,
+                 prefill_chunk: int = 64, token_budget: int = 0,
+                 unified: bool = True):
         self.num_slots = num_slots
         self.max_len = max_len
+        self.prefill_chunk = prefill_chunk
+        self.token_budget = token_budget or (num_slots + prefill_chunk)
+        self.unified = unified
         self.queue: deque[Request] = deque()
         self.slots: list[SlotState | None] = [None] * num_slots
         self.finished: dict[int, dict[str, Any]] = {}
+        self.on_retire: Callable[[int, SlotState], None] | None = None
 
     # ------------------------------------------------------------- #
-    def submit(self, req: Request) -> None:
-        if req.prompt_len + req.max_new > self.max_len:
-            raise ValueError(
-                f"request {req.rid}: prompt {req.prompt_len} + max_new "
-                f"{req.max_new} exceeds cache max_len {self.max_len}")
+    def submit(self, req: Request) -> bool:
+        """Queue one request; oversized requests are recorded as
+        rejected in ``finished`` (returns False) instead of raising —
+        a bad request must not kill the engine loop."""
+        if req.prompt_len + req.max_new > self.max_len \
+                or req.prompt_len == 0 or req.max_new <= 0:
+            self.finished[req.rid] = {
+                "status": "rejected",
+                "reason": (f"prompt {req.prompt_len} + max_new "
+                           f"{req.max_new} exceeds max_len {self.max_len}"
+                           if req.prompt_len else "empty prompt"),
+                "tokens": np.zeros((0,), np.int32),
+                "prompt_len": req.prompt_len}
+            return False
         self.queue.append(req)
+        return True
 
-    def admit(self) -> list[tuple[int, Request]]:
-        """Fill free slots from the queue; returns (slot, request) pairs
-        the engine must prefill."""
+    def admit(self, place: Callable[[Request], dict | None] | None = None,
+              ) -> list[tuple[int, Request]]:
+        """Fill free slots from the queue head.  ``place`` reserves
+        engine-side resources for a request and returns placement info
+        ({"table": [...], "cached": m, "start": s, "spare": b} for the
+        paged layout, {} for dense) or None — meaning the request cannot
+        be placed *now* (pool exhausted); admission stops there to keep
+        FIFO order (backoff, retried next step)."""
         placed = []
         for s in range(self.num_slots):
-            if self.slots[s] is None and self.queue:
-                req = self.queue.popleft()
-                self.slots[s] = SlotState(req)
-                placed.append((s, req))
+            if self.slots[s] is not None or not self.queue:
+                continue
+            req = self.queue[0]
+            info = place(req) if place is not None else {}
+            if info is None:
+                break
+            self.queue.popleft()
+            st = SlotState(req, table=list(info.get("table", [])),
+                           cached_tokens=int(info.get("cached", 0)),
+                           spare=info.get("spare"))
+            st.prefilled = st.length = int(info.get("start", 0))
+            self.slots[s] = st
+            placed.append((s, req))
         return placed
+
+    # ------------------------------------------------------------- #
+    def plan_step(self) -> tuple[list[tuple[int, int, int]], list[int]]:
+        """Split this step's token budget.  Returns
+        ``(prefill_items, decode_slots)`` with prefill_items =
+        [(slot, start, n_tokens)].  Unified: decode-ready slots are
+        funded first (one token each), the remainder buys prompt chunks.
+        Serial (unified=False): all pending prefill drains before any
+        decode — the stall baseline."""
+        decode = [s for s in self.active_slots
+                  if self.slots[s].decode_ready]
+        pending = [s for s in self.active_slots
+                   if self.slots[s].needs_prefill]
+        if not self.unified:
+            if pending:
+                s = pending[0]
+                st = self.slots[s]
+                n = min(self.prefill_chunk, st.prompt_len - st.prefilled)
+                return [(s, st.prefilled, n)], []
+            return [], decode
+        prefill = []
+        budget = max(self.token_budget - len(decode), 0)
+        for s in pending:
+            if budget <= 0:
+                break
+            st = self.slots[s]
+            n = min(self.prefill_chunk, st.prompt_len - st.prefilled,
+                    budget)
+            prefill.append((s, st.prefilled, n))
+            budget -= n
+        return prefill, decode
+
+    def note_prefill(self, slot: int, n_tokens: int) -> None:
+        """``n_tokens`` more prompt tokens entered the cache."""
+        st = self.slots[slot]
+        st.prefilled += n_tokens
+        st.length = st.prefilled
+        assert st.prefilled <= st.prompt_len, (st.prefilled, st.prompt_len)
 
     # ------------------------------------------------------------- #
     @property
@@ -110,21 +215,36 @@ class Scheduler:
         return np.asarray([0 if st is None else st.request.top_k
                            for st in self.slots], np.int32)
 
+    def rids(self) -> np.ndarray:
+        return np.asarray([0 if st is None else st.request.rid
+                           for st in self.slots], np.int32)
+
+    def sample_counts(self) -> np.ndarray:
+        """Per-slot index of the *next* sample in its request's key
+        stream (= tokens generated so far)."""
+        return np.asarray([0 if st is None else len(st.generated)
+                           for st in self.slots], np.int32)
+
     # ------------------------------------------------------------- #
     def start(self, slot: int, first_token: int) -> None:
         """Mark a freshly-prefilled slot: cache holds the prompt, and the
         prefill's last logits produced the first generated token."""
         st = self.slots[slot]
-        st.length = st.request.prompt_len
+        st.prefilled = st.prompt_len
+        st.length = max(st.length, st.prompt_len)
         st.generated.append(int(first_token))
         self._maybe_retire(slot)
 
-    def record(self, tokens: np.ndarray) -> list[int]:
-        """One decode step happened: every active slot consumed its last
-        token (cache grew by one) and sampled the next.  Returns slots
-        retired this step."""
+    def record(self, tokens: np.ndarray, slots: list[int] | None = None,
+               ) -> list[int]:
+        """One decode step happened for ``slots`` (default: every
+        decode-ready slot): each consumed its last token (cache grew by
+        one) and sampled the next.  Returns slots retired this step."""
+        if slots is None:
+            slots = [s for s in self.active_slots
+                     if self.slots[s].decode_ready]
         retired = []
-        for s in self.active_slots:
+        for s in slots:
             st = self.slots[s]
             st.length += 1
             st.generated.append(int(tokens[s]))
@@ -140,7 +260,10 @@ class Scheduler:
         r = st.request
         if r.eos_id >= 0 and r.eos_id in gen:
             gen = gen[:gen.index(r.eos_id) + 1]
-        self.finished[r.rid] = {"tokens": np.asarray(gen, np.int32),
+        self.finished[r.rid] = {"status": "ok",
+                                "tokens": np.asarray(gen, np.int32),
                                 "prompt_len": r.prompt_len}
+        if self.on_retire is not None:
+            self.on_retire(slot, st)
         self.slots[slot] = None
         return True

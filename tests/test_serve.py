@@ -329,9 +329,27 @@ def test_scheduler_slot_lifecycle():
 
 
 def test_scheduler_rejects_oversized_request():
+    """Oversized requests surface as status="rejected" entries in the
+    results dict instead of raising — one bad request must not kill the
+    engine loop or the batch it arrived with."""
     sc = Scheduler(1, 8)
-    with pytest.raises(ValueError):
-        sc.submit(Request(rid=0, tokens=np.zeros(6, np.int32), max_new=4))
+    ok = sc.submit(Request(rid=0, tokens=np.zeros(6, np.int32), max_new=4))
+    assert ok is False and not sc.queue
+    rej = sc.finished[0]
+    assert rej["status"] == "rejected" and len(rej["tokens"]) == 0
+    assert "max_len" in rej["reason"]
+    # end-to-end: the rejected request rides the results dict alongside
+    # the completed one
+    cfg = _smoke("starcoder2_3b")
+    eng = ServeEngine(cfg, num_slots=1, max_len=16, prefill_chunk=8,
+                      seed=0)
+    good = eng.submit(RNG.integers(0, cfg.vocab_size, 6).astype(np.int32),
+                      max_new=2)
+    bad = eng.submit(RNG.integers(0, cfg.vocab_size, 30).astype(np.int32),
+                     max_new=4)
+    out = eng.run()
+    assert out[bad]["status"] == "rejected"
+    assert out[good]["status"] == "ok" and len(out[good]["tokens"]) == 2
 
 
 def test_sampling_greedy_and_top_k():
