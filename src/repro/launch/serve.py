@@ -107,7 +107,8 @@ def serve(args) -> dict:
           f"{s['prefill_cached_tokens']} prefix-cached) in "
           f"{s['prefill_steps']} chunk steps + "
           f"{s['prefill_decode_steps']} replay steps, "
-          f"{s['prefill_s']:.2f}s ({tp['prefill_tok_s']:.1f} tok/s)")
+          f"{s['prefill_s']:.2f}s ({tp['prefill_tok_s']:.1f} computed "
+          f"tok/s, {tp['prefill_effective_tok_s']:.1f} effective)")
     print(f"[serve] decode:  {s['decode_tokens']} tokens in "
           f"{s['decode_steps']} steps, {s['decode_s']:.2f}s "
           f"({tp['decode_tok_s']:.1f} tok/s); wall {wall:.2f}s; "

@@ -313,22 +313,35 @@ class ServeEngine:
         Tp, mn = req.prompt_len, req.max_new
         matched = [] if self.prefix is None \
             else self.prefix.match(req.tokens)
-        m = len(matched) * bs
-        # a fully-cached prompt still recomputes its final token (its
-        # logits seed sampling): reserve the copy-on-write spare for the
-        # shared block that write lands in
-        start = min(m, Tp - 1)
         nk_req = -(-(Tp + mn - 1) // bs)
-        n_fresh = nk_req - len(matched)
-        n_spare = 1 if m >= Tp else 0
-        need = n_fresh + n_spare
-        if self.prefix is not None and self.pool.free_count < need:
-            self.prefix.evict(need - self.pool.free_count, self.pool)
-        got = self.pool.alloc(need)
-        if got is None:
-            self.stats["admission_backoffs"] += 1
-            return None
-        self.pool.retain(matched)
+        while True:
+            m = len(matched) * bs
+            # a fully-cached prompt still recomputes its final token (its
+            # logits seed sampling): reserve the copy-on-write spare for
+            # the shared block that write lands in
+            start = min(m, Tp - 1)
+            n_fresh = nk_req - len(matched)
+            n_spare = 1 if m >= Tp else 0
+            need = n_fresh + n_spare
+            # retain the matched chain BEFORE evicting: at refcount >= 2
+            # the LRU sweep's refcount==1 check cannot free blocks this
+            # request is about to read (evicted-and-reallocated matched
+            # blocks would alias fresh blocks in the table — silent
+            # prefix corruption)
+            self.pool.retain(matched)
+            if self.prefix is not None and self.pool.free_count < need:
+                self.prefix.evict(need - self.pool.free_count, self.pool)
+            got = self.pool.alloc(need)
+            if got is not None:
+                break
+            self.pool.release(matched)      # drop the reservation; the
+            if not matched:                 # cache ref remains
+                self.stats["admission_backoffs"] += 1
+                return None
+            # retry with a shorter match: the popped tail becomes an
+            # evictable leaf again, and a no-longer-full match drops the
+            # spare — trade cached tokens for fit before backing off
+            matched.pop()
         self.stats["prefill_cached_tokens"] += m
         return {"table": matched + got[:n_fresh], "cached": m,
                 "start": start, "spare": got[n_fresh] if n_spare else None}
@@ -498,10 +511,15 @@ class ServeEngine:
         if not self.cached_prefill:
             for slot, req in placed:
                 self._prefill_replay(slot, req)
-        if sc.queue and not sc.active_slots:
-            raise RuntimeError(
-                "request cannot be placed in an empty engine — the KV "
-                "pool is smaller than one request's working set")
+        if sc.queue and not placed and not sc.active_slots:
+            # the head backed off even into an idle engine (its block
+            # working set exceeds the pool after full prefix-cache
+            # eviction): reject it instead of wedging the loop — the
+            # requests queued behind it must still run
+            req = sc.queue.popleft()
+            nk = -(-(req.prompt_len + req.max_new - 1) // self.block_size)
+            sc.reject(req, f"working set of {nk} KV blocks exceeds the "
+                      f"{self.num_blocks}-block pool")
         n_ready = sum(1 for s in sc.active_slots
                       if sc.slots[s].decode_ready)
         prefill_items, decode_slots = sc.plan_step()
@@ -584,8 +602,14 @@ class ServeEngine:
         return self.num_slots * self.max_len
 
     def throughput(self) -> dict[str, float]:
+        """``prefill_tok_s`` counts *computed* tokens only — prefix-cache
+        hits skip compute and must not inflate the rate; the effective
+        rate (prompt tokens served, cached included) is reported
+        separately."""
         s = self.stats
+        dt = max(s["prefill_s"], 1e-9)
         return {
-            "prefill_tok_s": s["prefill_tokens"] / max(s["prefill_s"], 1e-9),
+            "prefill_tok_s": s["prefill_chunk_tokens"] / dt,
+            "prefill_effective_tok_s": s["prefill_tokens"] / dt,
             "decode_tok_s": s["decode_tokens"] / max(s["decode_s"], 1e-9),
         }

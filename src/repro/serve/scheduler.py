@@ -110,21 +110,27 @@ class Scheduler:
 
     # ------------------------------------------------------------- #
     def submit(self, req: Request) -> bool:
-        """Queue one request; oversized requests are recorded as
-        rejected in ``finished`` (returns False) instead of raising —
+        """Queue one request; malformed/oversized requests are recorded
+        as rejected in ``finished`` (returns False) instead of raising —
         a bad request must not kill the engine loop."""
-        if req.prompt_len + req.max_new > self.max_len \
-                or req.prompt_len == 0 or req.max_new <= 0:
-            self.finished[req.rid] = {
-                "status": "rejected",
-                "reason": (f"prompt {req.prompt_len} + max_new "
-                           f"{req.max_new} exceeds max_len {self.max_len}"
-                           if req.prompt_len else "empty prompt"),
-                "tokens": np.zeros((0,), np.int32),
-                "prompt_len": req.prompt_len}
-            return False
-        self.queue.append(req)
-        return True
+        if req.prompt_len == 0:
+            self.reject(req, "empty prompt")
+        elif req.max_new <= 0:
+            self.reject(req, f"non-positive max_new {req.max_new}")
+        elif req.prompt_len + req.max_new > self.max_len:
+            self.reject(req, f"prompt {req.prompt_len} + max_new "
+                        f"{req.max_new} exceeds max_len {self.max_len}")
+        else:
+            self.queue.append(req)
+            return True
+        return False
+
+    def reject(self, req: Request, reason: str) -> None:
+        """Record ``req`` as rejected in ``finished`` (empty tokens)."""
+        self.finished[req.rid] = {
+            "status": "rejected", "reason": reason,
+            "tokens": np.zeros((0,), np.int32),
+            "prompt_len": req.prompt_len}
 
     def admit(self, place: Callable[[Request], dict | None] | None = None,
               ) -> list[tuple[int, Request]]:

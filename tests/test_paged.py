@@ -138,8 +138,11 @@ def test_prefix_sharing_skips_prefill_compute():
     cfg = _smoke()
     Tp = 32                                       # 2 full 16-token blocks
     prompt = RNG.integers(0, cfg.vocab_size, Tp).astype(np.int32)
+    # one block of headroom over the dense-equivalent default: the
+    # fully-cached repeat holds its 2 matched blocks AND needs a fresh
+    # tail block plus the COW spare
     eng = ServeEngine(cfg, num_slots=1, max_len=48, prefill_chunk=8,
-                      seed=0)
+                      num_blocks=4, seed=0)
     assert eng.layout == "paged"
     r0 = eng.submit(prompt, max_new=4)
     eng.run()
@@ -215,14 +218,54 @@ def test_pool_exhaustion_backs_off_admission():
         assert np.array_equal(out[r]["tokens"], ref[r]["tokens"])
 
 
-def test_undersized_pool_for_a_single_request_raises():
+def test_undersized_pool_rejects_unplaceable_request():
+    """A request whose block working set can never fit the pool is
+    rejected (status="rejected", reason naming the pool) instead of
+    killing the loop; requests queued behind it still complete."""
     cfg = _smoke()
-    eng = ServeEngine(cfg, num_slots=1, max_len=64, prefill_chunk=8,
-                      num_blocks=1, prefix_cache=False, seed=0)
-    eng.submit(RNG.integers(0, cfg.vocab_size, 40).astype(np.int32),
-               max_new=8)
-    with pytest.raises(RuntimeError, match="pool"):
-        eng.run()
+    eng = ServeEngine(cfg, num_slots=2, max_len=64, prefill_chunk=8,
+                      num_blocks=2, prefix_cache=False, seed=0)
+    big = eng.submit(RNG.integers(0, cfg.vocab_size, 40).astype(np.int32),
+                     max_new=8)                       # 3 blocks > 2-pool
+    ok = eng.submit(RNG.integers(0, cfg.vocab_size, 10).astype(np.int32),
+                    max_new=4)                        # 1 block
+    out = eng.run()
+    assert out[big]["status"] == "rejected"
+    assert "pool" in out[big]["reason"]
+    assert out[ok]["status"] == "ok" and len(out[ok]["tokens"]) == 4
+
+
+def test_eviction_protects_matched_prefix_blocks():
+    """Admission under pool pressure must not let the LRU sweep free
+    blocks the incoming request still lists as matched (they are
+    retained before eviction, and the match shrinks before any of its
+    blocks may be evicted): the request backs off cleanly instead of
+    aliasing its matched prefix with freshly-allocated copies of the
+    same physical blocks — the old path died with a mid-run COW
+    RuntimeError here — and completes correctly once the live request
+    pinning the pool retires."""
+    cfg = _smoke()
+    P = RNG.integers(0, cfg.vocab_size, 32).astype(np.int32)
+    Q = RNG.integers(0, cfg.vocab_size, 16).astype(np.int32)
+    long_p = np.concatenate(
+        [P, RNG.integers(0, cfg.vocab_size, 16).astype(np.int32)])
+    eng = ServeEngine(cfg, num_slots=2, max_len=64, prefill_chunk=16,
+                      num_blocks=6, seed=0)
+    eng.submit(P, max_new=4)
+    eng.run()                        # P's 2 full blocks stay prefix-cached
+    # Q pins 3 pool blocks while it decodes; long_p then matches P's
+    # chain but needs 2 fresh blocks with only 1 free — its eviction
+    # sweep finds nothing unprotected and backs off
+    rc = eng.submit(Q, max_new=20)
+    rb = eng.submit(long_p, max_new=4)
+    out = eng.run()
+    assert eng.stats["admission_backoffs"] > 0
+    assert out[rc]["status"] == "ok" and out[rb]["status"] == "ok"
+    solo = ServeEngine(cfg, num_slots=1, max_len=64, prefill_chunk=16,
+                       seed=0)
+    rs = solo.submit(long_p.copy(), max_new=4)
+    ref = solo.run()
+    assert np.array_equal(out[rb]["tokens"], ref[rs]["tokens"])
 
 
 # ===================================================================== #

@@ -338,6 +338,14 @@ def test_scheduler_rejects_oversized_request():
     rej = sc.finished[0]
     assert rej["status"] == "rejected" and len(rej["tokens"]) == 0
     assert "max_len" in rej["reason"]
+    # each validation failure names its own cause
+    assert sc.submit(Request(rid=1, tokens=np.zeros(0, np.int32),
+                             max_new=4)) is False
+    assert sc.finished[1]["reason"] == "empty prompt"
+    assert sc.submit(Request(rid=2, tokens=np.zeros(3, np.int32),
+                             max_new=0)) is False
+    assert "max_new" in sc.finished[2]["reason"]
+    assert "max_len" not in sc.finished[2]["reason"]
     # end-to-end: the rejected request rides the results dict alongside
     # the completed one
     cfg = _smoke("starcoder2_3b")
