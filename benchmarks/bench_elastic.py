@@ -1,0 +1,300 @@
+"""Elastic-recovery suite (``elastic``, ``BENCH_elastic.json``):
+degree-replanning recovery + straggler-weighted balancing ground truth
+(DESIGN.md §Recovery).
+
+Three sections:
+
+* **weighted LPT** (host-side numpy, real document pools): a 2x-slow
+  group makes plain load-balanced LPT assignment ~2x *completion*-time
+  imbalanced; capacity-proportional LPT (``lpt_assign(speeds=...)``)
+  routes proportionally less work onto the slow group and pulls the
+  speed-normalized (effective) imbalance back toward 1.  Also exercised
+  end-to-end: a :class:`repro.runtime.StragglerMonitor` fed simulated
+  2x-slow host step times produces the speed vector, and
+  :func:`repro.dispatch.dispatch_step` consumes it live.
+
+* **recovery throughput** (subprocess children under 8 forced CPU
+  devices, the real ``--dispatch`` training driver): one run loses a
+  host mid-run (``--fail-at K:3``) and elastically shrinks; one hits a
+  transient fault at the same step (``--fail-at K``) and restarts on the
+  full grid; one runs uninterrupted (oracle).  Per-step wall times are
+  parsed from the driver's logs; reported are pre-failure vs
+  post-recovery steps/s for both recovery modes.  Simulated host devices
+  share one CPU, so the *measured* post-shrink rate barely moves — the
+  capacity model (surviving/total devices) is reported alongside as the
+  projected shrink on real hardware.
+
+* **loss parity**: the interrupted+shrunk run must land on the oracle's
+  loss trajectory — the deterministic (seed, step) stream plus
+  reshard-on-restore plus token-weighted gradient accumulation make the
+  replayed steps bit-identical and the post-shrink tail fp-close.
+
+Emits ``name,us_per_call,derived`` CSV rows (run.py suite ``elastic``)
+and writes machine-readable ``BENCH_elastic.json`` at the repo root.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import re
+import subprocess
+import sys
+import tempfile
+
+import numpy as np
+
+HERE = os.path.dirname(os.path.abspath(__file__))
+ROOT = os.path.dirname(HERE)
+RESULT_JSON = os.path.join(ROOT, "BENCH_elastic.json")
+
+STEP_RE = re.compile(r"\[train\] step\s+(\d+) .*?([0-9.]+)s\s*$")
+RESTORE_RE = re.compile(r"\[train\] restored step (\d+)")
+
+
+# --------------------------------------------------------------------- #
+# section 1: straggler-weighted LPT (host-side)
+# --------------------------------------------------------------------- #
+def _weighted_lpt_section(rng: np.random.Generator) -> dict:
+    from repro.dispatch import effective_imbalance, lpt_assign
+    from repro.runtime import StragglerMonitor
+
+    # heavy-tail document workload pool, 4 groups, group 3 at half speed
+    n_groups, slow = 4, 3
+    weights = np.clip(rng.lognormal(8.0, 1.0, size=96), 64, 1e5)
+    speeds = np.ones(n_groups)
+    speeds[slow] = 0.5
+
+    plain = lpt_assign(weights, n_groups)
+    weighted = lpt_assign(weights, n_groups, speeds=speeds)
+
+    def group_loads(assign):
+        return np.bincount(assign, weights=weights, minlength=n_groups)
+
+    out = {
+        "n_groups": n_groups,
+        "slow_group": slow,
+        "slow_factor": 2.0,
+        "unweighted_effective_imbalance":
+            float(effective_imbalance(group_loads(plain), speeds)),
+        "weighted_effective_imbalance":
+            float(effective_imbalance(group_loads(weighted), speeds)),
+        "unweighted_raw_imbalance":
+            float(effective_imbalance(group_loads(plain))),
+        "weighted_raw_imbalance":
+            float(effective_imbalance(group_loads(weighted))),
+    }
+
+    # live path: monitor EMAs -> host speed vector -> dispatcher
+    mon = StragglerMonitor()
+    for _ in range(12):
+        for h in range(n_groups):
+            mon.record_host_step(h, 2.0 if h == slow else 1.0)
+    mon_speeds = mon.host_speeds(range(n_groups))
+    out["monitor_speeds"] = [round(float(s), 4) for s in mon_speeds]
+
+    dispatched = _dispatch_with_speeds(mon_speeds)
+    out.update(dispatched)
+    return out
+
+
+def _dispatch_with_speeds(host_speeds: np.ndarray) -> dict:
+    """The full dispatcher on a real pool, unweighted vs monitor-weighted
+    (4 simulated hosts x 2 devices on a 4x2 grid)."""
+    from repro.data.distributions import make_rng
+    from repro.data.packing import sample_doc_pool
+    from repro.dispatch import (DispatchConfig, dispatch_step,
+                                effective_imbalance)
+
+    D, M, seqs, C = 4, 2, 16, 2048
+    pool = sample_doc_pool("wlb_llm", seqs * C, make_rng(7), max_doc_len=C,
+                           min_docs=seqs)
+    dcfg = DispatchConfig(data=D, model=M, seqs=seqs, quantum=16)
+    dev_speeds = np.repeat(np.asarray(host_speeds, float), 2)
+
+    def eff_under_truth(plan):
+        """The plan's completion-time imbalance under the *true* speeds
+        (the unweighted dispatcher never sees them — this is what the
+        slow host actually costs its placement)."""
+        g, n_groups = plan.cp_degree, plan.n_groups
+        gs = dev_speeds[:n_groups * g].reshape(n_groups, g).min(axis=1)
+        return float(effective_imbalance(plan.group_workload,
+                                         gs / gs.max()))
+
+    plain = dispatch_step(pool, dcfg, C)
+    weighted = dispatch_step(pool, dcfg, C, device_speeds=dev_speeds)
+    return {
+        "dispatch_unweighted_work_imbalance": eff_under_truth(plain),
+        "dispatch_unweighted_work_imbalance_raw":
+            float(plain.work_imbalance),
+        # the weighted plan's work_imbalance is already effective
+        # (speed-normalized); _raw is its plain load ratio
+        "dispatch_weighted_work_imbalance": float(weighted.work_imbalance),
+        "dispatch_weighted_work_imbalance_raw":
+            float(weighted.stats().get("work_imbalance_raw",
+                                       weighted.work_imbalance)),
+        "dispatch_cp_degree": int(weighted.cp_degree),
+    }
+
+
+# --------------------------------------------------------------------- #
+# section 2+3: recovery throughput + loss parity (subprocess children)
+# --------------------------------------------------------------------- #
+def _train_child(spec_json: str) -> None:
+    import types
+
+    from repro.launch.train import train
+
+    spec = json.loads(spec_json)
+    base = dict(arch="starcoder2_3b", smoke=True, mesh="2x4",
+                strategy="flashcp", attention_impl="xla", dataset="wlb_llm",
+                seq_len=256, batch=8, steps=10, lr=1e-3, q_chunk=64,
+                grad_compression="none", checkpoint_dir="", ckpt_every=2,
+                log_every=1, resume=False, prefetch=False, no_remat=False,
+                dispatch=True, dispatch_target=1.1, dispatch_min_cp=1,
+                fail_at="", straggle=None, hosts=4, max_restarts=10)
+    base.update(spec)
+    out = train(types.SimpleNamespace(**base))
+    print("RESULT " + json.dumps(
+        {k: out[k] for k in ("final_step", "losses", "recoveries",
+                             "dead_hosts", "mesh", "accum")}))
+
+
+def _run_child(spec: dict) -> tuple[dict, list[str]]:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["JAX_PLATFORMS"] = "cpu"
+    env["PYTHONPATH"] = os.path.join(ROOT, "src") + os.pathsep + \
+        env.get("PYTHONPATH", "")
+    proc = subprocess.run(
+        [sys.executable, os.path.abspath(__file__), "--train-child",
+         json.dumps(spec)],
+        capture_output=True, text=True, env=env, check=True)
+    lines = proc.stdout.splitlines()
+    result = next(json.loads(ln[len("RESULT "):]) for ln in reversed(lines)
+                  if ln.startswith("RESULT "))
+    return result, lines
+
+
+def _rates(lines: list[str]) -> dict:
+    """Pre-failure / post-recovery steps/s from the driver's step logs.
+    Compile steps dominate a cold mesh, so each phase drops its largest
+    sample before the median."""
+    pre, post, seen_restore = [], [], False
+    for ln in lines:
+        if RESTORE_RE.search(ln):
+            seen_restore = True
+            continue
+        m = STEP_RE.search(ln)
+        if m:
+            (post if seen_restore else pre).append(float(m.group(2)))
+
+    def rate(ts):
+        if not ts:
+            return None
+        ts = sorted(ts)[:-1] if len(ts) > 2 else ts
+        return 1.0 / float(np.median(ts))
+
+    return {"pre_rate": rate(pre), "post_rate": rate(post)}
+
+
+def _recovery_sections(steps: int, fail_step: int, seq_len: int) -> dict:
+    with tempfile.TemporaryDirectory() as td:
+        oracle, _ = _run_child(
+            {"checkpoint_dir": os.path.join(td, "oracle"),
+             "steps": steps, "seq_len": seq_len})
+        elastic, el_lines = _run_child(
+            {"checkpoint_dir": os.path.join(td, "elastic"),
+             "steps": steps, "seq_len": seq_len,
+             "fail_at": f"{fail_step}:3"})
+        restart, rs_lines = _run_child(
+            {"checkpoint_dir": os.path.join(td, "restart"),
+             "steps": steps, "seq_len": seq_len,
+             "fail_at": str(fail_step)})
+
+    el = _rates(el_lines)
+    rs = _rates(rs_lines)
+    total_dev, surv_dev = 8, 8 - 2 * len(elastic["dead_hosts"])
+    capacity = surv_dev / total_dev
+    recovery = {
+        "fail_step": fail_step,
+        "steps": steps,
+        "elastic_pre_rate_steps_per_s": el["pre_rate"],
+        "elastic_post_rate_steps_per_s": el["post_rate"],
+        "restart_post_rate_steps_per_s": rs["post_rate"],
+        "recovered_over_restart_measured":
+            (el["post_rate"] / rs["post_rate"]
+             if el["post_rate"] and rs["post_rate"] else None),
+        "capacity_fraction": capacity,
+        "recovered_over_restart_modeled": capacity,
+        "elastic_completed": elastic["final_step"] == steps,
+        "restart_completed": restart["final_step"] == steps,
+        "elastic_mesh": elastic["mesh"],
+        "elastic_accum": elastic["accum"],
+        "elastic_dead_hosts": elastic["dead_hosts"],
+    }
+
+    tail = min(3, steps - fail_step)
+    o_t = np.asarray(oracle["losses"][-tail:])
+    e_t = np.asarray(elastic["losses"][-tail:])
+    parity = {
+        "oracle_final_loss": float(oracle["losses"][-1]),
+        "elastic_final_loss": float(elastic["losses"][-1]),
+        "final_rel_diff": float(abs(e_t[-1] - o_t[-1]) /
+                                max(abs(o_t[-1]), 1e-9)),
+        "tail_max_rel_diff": float(np.max(np.abs(e_t - o_t) /
+                                          np.maximum(np.abs(o_t), 1e-9))),
+        "tail_steps": tail,
+    }
+    return {"recovery": recovery, "parity": parity}
+
+
+# --------------------------------------------------------------------- #
+def run(smoke: bool = False):
+    rng = np.random.default_rng(0)
+    steps, fail_step, seq_len = (8, 5, 256) if smoke else (12, 7, 512)
+
+    results: dict = {"config": {"steps": steps, "fail_step": fail_step,
+                                "seq_len": seq_len, "mesh": "2x4",
+                                "hosts": 4, "smoke": smoke}}
+    results["weighted_lpt"] = _weighted_lpt_section(rng)
+    results.update(_recovery_sections(steps, fail_step, seq_len))
+
+    with open(RESULT_JSON, "w") as f:
+        json.dump(results, f, indent=1)
+
+    w = results["weighted_lpt"]
+    r = results["recovery"]
+    p = results["parity"]
+    rows = [
+        f"elastic_lpt_eff_imb_unweighted,,"
+        f"{w['unweighted_effective_imbalance']:.3f}",
+        f"elastic_lpt_eff_imb_weighted,,"
+        f"{w['weighted_effective_imbalance']:.3f}",
+        f"elastic_dispatch_work_imb_unweighted,,"
+        f"{w['dispatch_unweighted_work_imbalance']:.3f}",
+        f"elastic_dispatch_work_imb_weighted,,"
+        f"{w['dispatch_weighted_work_imbalance']:.3f}",
+        f"elastic_monitor_slow_speed,,{w['monitor_speeds'][3]:.3f}",
+        f"elastic_recovered_completed,,{r['elastic_completed']}",
+        f"elastic_capacity_fraction,,{r['capacity_fraction']:.3f}",
+        f"elastic_recovered_over_restart_modeled,,"
+        f"{r['recovered_over_restart_modeled']:.3f}",
+        f"elastic_shrunk_mesh,,{r['elastic_mesh'][0]}x"
+        f"{r['elastic_mesh'][1]} accum {r['elastic_accum']}",
+        f"elastic_parity_final_rel_diff,,{p['final_rel_diff']:.2e}",
+        f"elastic_parity_tail_max_rel_diff,,{p['tail_max_rel_diff']:.2e}",
+        f"elastic_json,,{os.path.basename(RESULT_JSON)}",
+    ]
+    if r["recovered_over_restart_measured"] is not None:
+        rows.insert(-3, f"elastic_recovered_over_restart_measured,,"
+                        f"{r['recovered_over_restart_measured']:.3f}")
+    return rows
+
+
+if __name__ == "__main__":
+    if "--train-child" in sys.argv:
+        _train_child(sys.argv[sys.argv.index("--train-child") + 1])
+    else:
+        for row in run(smoke="--smoke" in sys.argv):
+            print(row)

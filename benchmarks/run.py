@@ -13,6 +13,8 @@ row is a ratio/summary).  Suites:
   kernel  rect vs flat work-queue kernel grids (BENCH_kernel.json)
   serve   flash-decode vs dense serving + chunked prefill (BENCH_serve.json)
   dispatch  adaptive DP×CP token dispatch vs static (BENCH_dispatch.json)
+  elastic  degree-replanning recovery + straggler-weighted balancing
+           (BENCH_elastic.json)
 
 Usage: PYTHONPATH=src python -m benchmarks.run [suite ...]
        PYTHONPATH=src python -m benchmarks.run --suite kernel [--smoke]
@@ -31,7 +33,7 @@ import time
 
 def main() -> None:
     from . import (bench_breakdown, bench_context_window, bench_dispatch,
-                   bench_e2e_cp, bench_ilp_vs_heuristic,
+                   bench_e2e_cp, bench_elastic, bench_ilp_vs_heuristic,
                    bench_kernel_efficiency, bench_overlap,
                    bench_planner_runtime, bench_serve)
 
@@ -46,6 +48,7 @@ def main() -> None:
         "kernel": bench_kernel_efficiency.run_kernel,
         "serve": bench_serve.run,
         "dispatch": bench_dispatch.run,
+        "elastic": bench_elastic.run,
     }
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("names", nargs="*", metavar="suite",

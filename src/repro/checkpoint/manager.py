@@ -10,8 +10,16 @@ Layout (one directory per step)::
 Properties required at 1000+-node scale:
 * **atomicity** — a crash mid-save never corrupts the latest checkpoint
   (tmp-dir staging + ``os.replace`` commit + LATEST pointer written last);
-* **async** — saves run on a background thread off the training loop's
-  critical path (`save(..., blocking=False)`);
+* **async, never silent** — saves run on a background thread off the
+  training loop's critical path (``save(..., blocking=False)``); an
+  exception in the writer thread is captured and re-raised on the next
+  ``wait()``/``save()`` (a failed save must never vanish — recovery
+  depends on the latest checkpoint actually existing), and the failed
+  attempt's staging dir is cleaned so the next save succeeds;
+* **stale-staging GC** — ``*.tmp`` staging dirs left by crashed
+  *processes* (their pid/tid-scoped names never match a new process's
+  ``os.path.exists`` check) are swept at construction and after every
+  commit;
 * **elastic restore** — arrays are stored in global logical form; restoring
   onto a *different* mesh shape just re-applies the new sharding rules
   (reshard-on-load), which is what lets a job shrink/grow after failures;
@@ -63,29 +71,55 @@ class CheckpointManager:
         self.keep = keep
         os.makedirs(directory, exist_ok=True)
         self._thread: threading.Thread | None = None
+        self._error: BaseException | None = None
+        self._sweep_stale_tmp()
 
     # ------------------------------------------------------------- #
     def save(self, step: int, state: dict[str, Any], *,
              extra: dict | None = None, blocking: bool = True) -> None:
         host_state = jax.tree.map(np.asarray, jax.device_get(state))
-        self.wait()  # never two writers in flight
+        self.wait()  # never two writers in flight; raises a pending error
         if blocking:
-            self._write(step, host_state, extra or {})
+            self._guarded_write(step, host_state, extra or {})
+            self._raise_pending()
         else:
             self._thread = threading.Thread(
-                target=self._write, args=(step, host_state, extra or {}),
-                daemon=True)
+                target=self._guarded_write,
+                args=(step, host_state, extra or {}), daemon=True)
             self._thread.start()
 
     def wait(self) -> None:
+        """Join any in-flight writer.  Re-raises an exception the writer
+        thread hit (async saves must never fail silently — recovery
+        depends on the checkpoint actually existing)."""
         if self._thread is not None:
             self._thread.join()
             self._thread = None
+        self._raise_pending()
 
-    def _write(self, step, host_state, extra):
+    def _raise_pending(self) -> None:
+        if self._error is not None:
+            err, self._error = self._error, None
+            raise RuntimeError(
+                f"checkpoint save failed in {self.directory}") from err
+
+    def _guarded_write(self, step, host_state, extra):
+        """_write with the staging dir cleaned and the exception captured
+        on failure (re-raised by the next ``wait()``/``save()``)."""
+        tmp = self._tmp_path(step)
+        try:
+            self._write(step, host_state, extra, tmp)
+        except BaseException as e:  # noqa: BLE001 — captured, not dropped
+            shutil.rmtree(tmp, ignore_errors=True)
+            self._error = e
+
+    def _tmp_path(self, step: int) -> str:
+        final = os.path.join(self.directory, f"step_{step:09d}")
+        return f"{final}.{os.getpid()}.{threading.get_ident()}.tmp"
+
+    def _write(self, step, host_state, extra, tmp: str):
         name = f"step_{step:09d}"
         final = os.path.join(self.directory, name)
-        tmp = f"{final}.{os.getpid()}.{threading.get_ident()}.tmp"
         if os.path.exists(tmp):
             shutil.rmtree(tmp)
         os.makedirs(tmp)
@@ -108,13 +142,56 @@ class CheckpointManager:
             f.write(name)
         os.replace(os.path.join(self.directory, "LATEST.tmp"),
                    os.path.join(self.directory, "LATEST"))
-        self._gc()
+        self._gc(protect=step)
 
-    def _gc(self):
+    def _gc(self, protect: int | None = None):
+        """Retention by step number, but never the step just committed:
+        a directory reused across runs can hold stale *higher*-numbered
+        steps, and GC-by-number would otherwise delete the new run's
+        checkpoint out from under its own LATEST pointer."""
         steps = self.all_steps()
         for s in steps[:-self.keep]:
+            if s == protect:
+                continue
             shutil.rmtree(os.path.join(self.directory, f"step_{s:09d}"),
                           ignore_errors=True)
+        self._sweep_stale_tmp()
+
+    def _sweep_stale_tmp(self):
+        """Remove ``*.tmp`` staging dirs left behind by dead processes.
+
+        Staging names are pid/tid-scoped (``step_X.<pid>.<tid>.tmp``), so
+        a crashed process's leftovers are never matched by a new writer's
+        ``os.path.exists(tmp)`` check and would leak forever.  A tmp dir
+        is stale when its embedded pid is not a live process; this
+        process's own dirs are left alone (a writer may be in flight —
+        failed same-process writes clean up after themselves)."""
+        for n in os.listdir(self.directory):
+            if not (n.startswith("step_") and n.endswith(".tmp")):
+                continue
+            parts = n[:-len(".tmp")].split(".")
+            pid = None
+            if len(parts) >= 3:
+                try:
+                    pid = int(parts[-2])
+                except ValueError:
+                    pid = None
+            if pid == os.getpid():
+                continue
+            alive = False
+            if pid is not None:
+                try:
+                    os.kill(pid, 0)
+                    alive = True            # pid is a live process: keep
+                except ProcessLookupError:
+                    alive = False           # dead: stale, sweep
+                except PermissionError:
+                    alive = True            # live but foreign: keep
+                except OSError:
+                    alive = False
+            if not alive:
+                shutil.rmtree(os.path.join(self.directory, n),
+                              ignore_errors=True)
 
     # ------------------------------------------------------------- #
     def all_steps(self) -> list[int]:
@@ -125,12 +202,23 @@ class CheckpointManager:
         return sorted(out)
 
     def latest_step(self) -> int | None:
+        """Step named by the LATEST pointer, validated: a pointer left
+        dangling (its step dir gone or incomplete) falls back to the
+        newest step that actually has a manifest on disk."""
         path = os.path.join(self.directory, "LATEST")
-        if not os.path.exists(path):
-            steps = self.all_steps()
-            return steps[-1] if steps else None
-        with open(path) as f:
-            return int(f.read().strip().split("_")[1])
+        if os.path.exists(path):
+            with open(path) as f:
+                step = int(f.read().strip().split("_")[1])
+            if self._complete(step):
+                return step
+        for step in reversed(self.all_steps()):
+            if self._complete(step):
+                return step
+        return None
+
+    def _complete(self, step: int) -> bool:
+        return os.path.exists(os.path.join(
+            self.directory, f"step_{step:09d}", "manifest.json"))
 
     def restore(self, step: int | None = None, *, shardings=None):
         """Load a checkpoint; optionally apply (possibly *different*) target

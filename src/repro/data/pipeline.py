@@ -202,8 +202,8 @@ def make_batch(cfg: PipelineConfig, step: int, dp_rank: int = 0,
     return batch
 
 
-def make_dispatch_batch(cfg: PipelineConfig, dcfg, step: int
-                        ) -> dict[str, Any]:
+def make_dispatch_batch(cfg: PipelineConfig, dcfg, step: int,
+                        device_speeds=None) -> dict[str, Any]:
     """Build one *global* batch through the adaptive DP×CP dispatcher.
 
     One seeded document pool per step (all DP ranks see the same stream),
@@ -220,6 +220,13 @@ def make_dispatch_batch(cfg: PipelineConfig, dcfg, step: int
     tokens — ragged rows pad with masked labels), ``group_id`` (per-row
     subgroup), and ``stats["dispatch"]`` (degree decision, imbalances,
     candidate table, pool profile).
+
+    ``device_speeds`` (optional, length ``data * model``): measured
+    relative device speeds from the straggler monitor — the dispatcher
+    then LPT-balances *completion time* instead of raw load and sizes
+    bin targets capacity-proportionally (DESIGN.md §Recovery).  Token
+    content is unaffected (row streams are content-keyed), only the
+    row→group placement shifts.
     """
     from repro.dispatch import dispatch_step
 
@@ -227,7 +234,8 @@ def make_dispatch_batch(cfg: PipelineConfig, dcfg, step: int
     pool = sample_doc_pool(cfg.dataset, dcfg.seqs * cfg.context_len, rng,
                            max_doc_len=cfg.context_len,
                            min_docs=dcfg.seqs)
-    dplan = dispatch_step(pool, dcfg, cfg.context_len)
+    dplan = dispatch_step(pool, dcfg, cfg.context_len,
+                          device_speeds=device_speeds)
     g = dplan.cp_degree
     assert all(len(r) for r in dplan.rows), \
         "dispatch produced an empty sequence bin (pool too small for seqs)"
@@ -270,12 +278,18 @@ def data_iterator(cfg: PipelineConfig, start_step: int = 0, dp_rank: int = 0,
         step += 1
 
 
-def dispatch_iterator(cfg: PipelineConfig, dcfg,
-                      start_step: int = 0) -> Iterator[dict[str, Any]]:
-    """Global-dispatch batch stream (one iterator per job, not per rank)."""
+def dispatch_iterator(cfg: PipelineConfig, dcfg, start_step: int = 0,
+                      speeds_fn=None) -> Iterator[dict[str, Any]]:
+    """Global-dispatch batch stream (one iterator per job, not per rank).
+
+    ``speeds_fn``: optional zero-arg callable returning the current
+    device-speed vector (or None) — sampled once per batch so a live
+    straggler monitor can steer placement without rebuilding the stream.
+    """
     step = start_step
     while True:
-        yield make_dispatch_batch(cfg, dcfg, step)
+        speeds = speeds_fn() if speeds_fn is not None else None
+        yield make_dispatch_batch(cfg, dcfg, step, device_speeds=speeds)
         step += 1
 
 
@@ -288,16 +302,18 @@ class Prefetcher:
     """
 
     def __init__(self, cfg: PipelineConfig, start_step: int = 0,
-                 dp_rank: int = 0, prefetch: int = 2, dispatch=None):
+                 dp_rank: int = 0, prefetch: int = 2, dispatch=None,
+                 speeds_fn=None):
         self._q: queue.Queue = queue.Queue(maxsize=prefetch)
         self._stop = threading.Event()
         self._thread = threading.Thread(
-            target=self._run, args=(cfg, start_step, dp_rank, dispatch),
+            target=self._run,
+            args=(cfg, start_step, dp_rank, dispatch, speeds_fn),
             daemon=True)
         self._thread.start()
 
-    def _run(self, cfg, start_step, dp_rank, dispatch=None):
-        it = dispatch_iterator(cfg, dispatch, start_step) \
+    def _run(self, cfg, start_step, dp_rank, dispatch=None, speeds_fn=None):
+        it = dispatch_iterator(cfg, dispatch, start_step, speeds_fn) \
             if dispatch is not None else \
             data_iterator(cfg, start_step, dp_rank)
         for batch in it:

@@ -11,15 +11,15 @@ DP×CP groups with cross-rank token/workload balancing.  The emitted
 Host-side numpy only — importable by benchmarks and tests without JAX.
 """
 
-from .balance import (PackedPool, imbalance, lpt_assign, pack_pool,
-                      sequence_workload)
+from .balance import (PackedPool, effective_imbalance, imbalance,
+                      lpt_assign, pack_pool, sequence_workload)
 from .dispatcher import (DispatchConfig, DispatchPlan, cp_degree_options,
                          dispatch_step, estimate_comm_tokens)
 from .profile import LengthProfile, profile_lengths
 
 __all__ = [
-    "PackedPool", "imbalance", "lpt_assign", "pack_pool",
-    "sequence_workload",
+    "PackedPool", "effective_imbalance", "imbalance", "lpt_assign",
+    "pack_pool", "sequence_workload",
     "DispatchConfig", "DispatchPlan", "cp_degree_options", "dispatch_step",
     "estimate_comm_tokens",
     "LengthProfile", "profile_lengths",

@@ -18,6 +18,14 @@ algorithms over the planner's vectorized workload accounting
   receives exactly ``n_bins / n_groups`` sequences, so the batch axis
   shards evenly over the group (``"data"``) mesh axis.
 
+Both primitives are *speed-aware* (DESIGN.md §Recovery): a per-group
+``speeds`` vector turns :func:`lpt_assign` into capacity-proportional LPT
+(the greedy minimizes the *completion time* ``(load + w) / speed``, so a
+group at speed 0.5 receives roughly half the workload), and per-bin fill
+``targets`` let :func:`pack_pool` shape bins to the speed distribution.
+The straggler monitor's per-host EMA feeds these live — persistently slow
+survivors get lighter bins instead of bounding every step.
+
 Everything is pure numpy + Python; determinism follows from stable sorts
 keyed on (weight, original index).
 """
@@ -31,7 +39,7 @@ import numpy as np
 from repro.planner.plan import shard_workload_array
 
 __all__ = ["PackedPool", "sequence_workload", "pack_pool", "lpt_assign",
-           "imbalance"]
+           "imbalance", "effective_imbalance"]
 
 
 def sequence_workload(doc_lens) -> float:
@@ -54,6 +62,21 @@ def imbalance(loads) -> float:
     if avg <= 0.0:
         return 1.0
     return float(loads.max()) / avg
+
+
+def effective_imbalance(loads, speeds=None) -> float:
+    """Completion-time imbalance: max/mean of ``load / speed``.
+
+    With ``speeds=None`` this is plain :func:`imbalance`.  Step time is
+    the max over groups of the time each group needs, so a group at speed
+    0.5 holding the mean load takes 2x the mean time — the quantity the
+    speed-weighted dispatcher balances."""
+    loads = np.asarray(loads, dtype=np.float64)
+    if speeds is None:
+        return imbalance(loads)
+    speeds = np.asarray(speeds, dtype=np.float64)
+    assert speeds.shape == loads.shape and (speeds > 0).all(), speeds
+    return imbalance(loads / speeds)
 
 
 @dataclasses.dataclass
@@ -81,7 +104,7 @@ class PackedPool:
 
 
 def pack_pool(doc_lens, n_bins: int, capacity: int, *,
-              quantum: int = 1) -> PackedPool:
+              quantum: int = 1, targets=None) -> PackedPool:
     """Pack a document pool into ``n_bins`` sequence windows.
 
     Worst-fit-decreasing: documents are placed largest-first into the bin
@@ -92,10 +115,25 @@ def pack_pool(doc_lens, n_bins: int, capacity: int, *,
     each bin is trimmed so its total is a multiple of ``quantum``
     (trimming comes off the bin's largest documents, mirroring the
     per-rank packer's end-of-window truncation).
+
+    ``targets``: optional per-bin fill targets (clipped to ``capacity``) —
+    the speed-weighted dispatcher passes targets proportional to each
+    prospective group's speed so slow groups receive lighter sequences
+    (DESIGN.md §Recovery).  Fill-relative decisions ("lowest fill",
+    "most room") are measured against each bin's own target, so a
+    half-target bin at half fill is as "full" as a full-target bin at
+    full fill.
     """
     doc_lens = np.asarray(doc_lens, dtype=np.int64)
     assert n_bins > 0 and capacity > 0 and quantum >= 1
     assert capacity % quantum == 0, (capacity, quantum)
+    if targets is None:
+        target = np.full(n_bins, capacity, np.int64)
+    else:
+        target = np.minimum(np.asarray(targets, np.int64), capacity)
+        assert target.shape == (n_bins,), target.shape
+        # a bin must hold at least one quantum or it becomes an empty row
+        target = np.maximum(target, quantum)
 
     order = np.lexsort((np.arange(len(doc_lens)), -doc_lens))
     bins: list[list[int]] = [[] for _ in range(n_bins)]
@@ -105,13 +143,15 @@ def pack_pool(doc_lens, n_bins: int, capacity: int, *,
     truncated = 0
 
     for i in order:
-        d = int(min(doc_lens[i], capacity))
+        d = int(min(doc_lens[i], int(target.max())))
         truncated += int(doc_lens[i]) - d
-        room = capacity - fill
+        room = target - fill
         fits = np.nonzero(room >= d)[0]
         if len(fits):
-            # least-loaded bin with room; ties -> lowest index (stable)
-            b = int(fits[np.argmin(fill[fits])])
+            # least-filled bin (relative to target) with room;
+            # ties -> lowest index (stable)
+            rel = fill[fits] / target[fits]
+            b = int(fits[np.argmin(rel)])
             take = d
         else:
             b = int(np.argmax(room))
@@ -146,8 +186,8 @@ def pack_pool(doc_lens, n_bins: int, capacity: int, *,
     )
 
 
-def lpt_assign(weights, n_groups: int, *, per_group: int | None = None
-               ) -> np.ndarray:
+def lpt_assign(weights, n_groups: int, *, per_group: int | None = None,
+               speeds=None) -> np.ndarray:
     """LPT assignment of weighted items to groups.
 
     Returns ``group_of_item`` (int64).  With ``per_group`` set, every group
@@ -156,12 +196,22 @@ def lpt_assign(weights, n_groups: int, *, per_group: int | None = None
     bound ``max_load <= mean_load + max(weight)`` still holds because the
     slot constraint only binds once loads are within one item of each
     other.
+
+    ``speeds``: optional per-group positive speed factors (1.0 = full
+    speed).  The greedy then minimizes projected *completion time*
+    ``(load + w) / speed`` — capacity-proportional LPT on uniform
+    machines (Q||Cmax): a group at speed 0.5 ends up with roughly half
+    the load, so a persistent straggler stops bounding the step
+    (DESIGN.md §Recovery).  ``speeds=None`` is exactly the classic path.
     """
     weights = np.asarray(weights, dtype=np.float64)
     n = len(weights)
     assert n_groups > 0
     if per_group is not None:
         assert per_group * n_groups == n, (n, n_groups, per_group)
+    if speeds is not None:
+        speeds = np.asarray(speeds, dtype=np.float64)
+        assert speeds.shape == (n_groups,) and (speeds > 0).all(), speeds
     order = np.lexsort((np.arange(n), -weights))
     load = np.zeros(n_groups, np.float64)
     count = np.zeros(n_groups, np.int64)
@@ -169,7 +219,11 @@ def lpt_assign(weights, n_groups: int, *, per_group: int | None = None
     for i in order:
         open_g = np.nonzero(count < per_group)[0] if per_group is not None \
             else np.arange(n_groups)
-        g = int(open_g[np.argmin(load[open_g])])
+        if speeds is None:
+            g = int(open_g[np.argmin(load[open_g])])
+        else:
+            eta = (load[open_g] + weights[i]) / speeds[open_g]
+            g = int(open_g[np.argmin(eta)])
         out[i] = g
         load[g] += weights[i]
         count[g] += 1

@@ -43,8 +43,8 @@ import dataclasses
 
 import numpy as np
 
-from .balance import (PackedPool, imbalance, lpt_assign, pack_pool,
-                      sequence_workload)
+from .balance import (PackedPool, effective_imbalance, imbalance,
+                      lpt_assign, pack_pool, sequence_workload)
 from .profile import LengthProfile, profile_lengths
 
 __all__ = ["DispatchConfig", "DispatchPlan", "cp_degree_options",
@@ -107,9 +107,14 @@ class DispatchPlan:
     est_comm_tokens: int
     profile: LengthProfile
     candidates: list[dict]          # per-degree evaluation summaries
+    #: per-group speed factors the plan balanced against (None = uniform).
+    #: When set, ``token_imbalance``/``work_imbalance`` are *effective*
+    #: (speed-normalized completion-time) imbalances — the step-time
+    #: quantity — and the raw load ratios live in the stats dict.
+    group_speeds: np.ndarray | None = None
 
     def stats(self) -> dict:
-        return {
+        out = {
             "cp_degree": self.cp_degree,
             "n_groups": self.n_groups,
             "token_imbalance": self.token_imbalance,
@@ -118,6 +123,11 @@ class DispatchPlan:
             "est_comm_tokens": self.est_comm_tokens,
             "group_tokens": self.group_tokens.tolist(),
         }
+        if self.group_speeds is not None:
+            out["group_speeds"] = [float(s) for s in self.group_speeds]
+            out["work_imbalance_raw"] = imbalance(self.group_workload)
+            out["token_imbalance_raw"] = imbalance(self.group_tokens)
+        return out
 
 
 def cp_degree_options(cfg: DispatchConfig, context_len: int) -> list[int]:
@@ -182,15 +192,36 @@ def estimate_comm_tokens(doc_lens, cp: int, context_len: int) -> int:
     return int(np.maximum(lens - t_loc, 0).sum())
 
 
+def _group_speeds(device_speeds, n_groups: int, g: int) -> np.ndarray | None:
+    """Per-group speed at degree ``g``: the slowest member bounds its
+    group's CP step (groups are contiguous device slices)."""
+    if device_speeds is None:
+        return None
+    ds = np.asarray(device_speeds, dtype=np.float64)
+    assert ds.shape == (n_groups * g,) and (ds > 0).all(), ds
+    gs = ds.reshape(n_groups, g).min(axis=1)
+    gs = gs / gs.max()
+    return None if np.allclose(gs, 1.0) else gs
+
+
 def _evaluate(cfg: DispatchConfig, pool: np.ndarray, context_len: int,
-              g: int) -> dict:
+              g: int, device_speeds=None) -> dict:
     n_groups = cfg.n_devices // g
     per_group = cfg.seqs // n_groups
+    speeds = _group_speeds(device_speeds, n_groups, g)
+    targets = None
+    if speeds is not None:
+        # capacity-proportional bin shaping: per_group bins per group
+        # with fill targets ∝ group speed (quantum-floored) — the light
+        # bins the speed-aware LPT routes onto slow groups.
+        q = _bin_quantum(cfg, g)
+        f = (np.floor(context_len * speeds / q) * q).astype(np.int64)
+        targets = np.repeat(np.maximum(f, q), per_group)
     packed = pack_pool(pool, cfg.seqs, context_len,
-                       quantum=_bin_quantum(cfg, g))
+                       quantum=_bin_quantum(cfg, g), targets=targets)
     tokens = packed.bin_tokens
     work = packed.bin_workloads
-    assign = lpt_assign(work, n_groups, per_group=per_group)
+    assign = lpt_assign(work, n_groups, per_group=per_group, speeds=speeds)
     g_tok = np.bincount(assign, weights=tokens,
                         minlength=n_groups).astype(np.int64)
     g_work = np.bincount(assign, weights=work, minlength=n_groups)
@@ -203,14 +234,15 @@ def _evaluate(cfg: DispatchConfig, pool: np.ndarray, context_len: int,
         "assign": assign,
         "group_tokens": g_tok,
         "group_workload": g_work,
-        "token_imbalance": imbalance(g_tok),
-        "work_imbalance": imbalance(g_work),
+        "group_speeds": speeds,
+        "token_imbalance": effective_imbalance(g_tok, speeds),
+        "work_imbalance": effective_imbalance(g_work, speeds),
         "est_comm_tokens": int(comm),
     }
 
 
-def dispatch_step(doc_pool, cfg: DispatchConfig, context_len: int
-                  ) -> DispatchPlan:
+def dispatch_step(doc_pool, cfg: DispatchConfig, context_len: int,
+                  device_speeds=None) -> DispatchPlan:
     """Size the CP groups and dispatch one step's document pool.
 
     Evaluates every admissible degree (ascending) by actually packing and
@@ -219,10 +251,19 @@ def dispatch_step(doc_pool, cfg: DispatchConfig, context_len: int
     degrees never move more KV, so feasibility alone decides escalation.
     If no degree meets the target, the most-balanced (workload, then
     larger-degree) candidate wins.
+
+    ``device_speeds``: optional per-device speed factors (flat device
+    order, length ``cfg.n_devices``) from the straggler monitor
+    (DESIGN.md §Recovery).  Candidates are then packed with
+    speed-proportional bin targets, assigned by capacity-proportional
+    LPT, and judged on *effective* (speed-normalized completion-time)
+    imbalance — slow survivors get lighter bins instead of bounding
+    every step.
     """
     pool = np.asarray(doc_pool, dtype=np.int64)
     opts = cp_degree_options(cfg, context_len)
-    cands = [_evaluate(cfg, pool, context_len, g) for g in opts]
+    cands = [_evaluate(cfg, pool, context_len, g, device_speeds)
+             for g in opts]
 
     chosen = None
     for c in cands:
@@ -243,7 +284,7 @@ def dispatch_step(doc_pool, cfg: DispatchConfig, context_len: int
     def summary(c):
         return {k: v for k, v in c.items()
                 if k not in ("packed", "assign", "group_tokens",
-                             "group_workload")} | {
+                             "group_workload", "group_speeds")} | {
             "token_imbalance": float(c["token_imbalance"]),
             "work_imbalance": float(c["work_imbalance"])}
 
@@ -262,4 +303,5 @@ def dispatch_step(doc_pool, cfg: DispatchConfig, context_len: int
         est_comm_tokens=chosen["est_comm_tokens"],
         profile=prof,
         candidates=[summary(c) for c in cands],
+        group_speeds=chosen["group_speeds"],
     )

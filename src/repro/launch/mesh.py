@@ -23,12 +23,18 @@ def make_production_mesh(*, multi_pod: bool = False):
     return make_mesh(shape, axes)
 
 
-def make_local_mesh(data: int = 1, model: int = 1):
-    """Small mesh for tests/examples on host devices."""
-    return make_mesh((data, model), ("data", "model"))
+def make_local_mesh(data: int = 1, model: int = 1, *, devices=None):
+    """Small mesh for tests/examples on host devices.
+
+    ``devices``: optional explicit device list — the elastic recovery
+    path (DESIGN.md §Recovery) rebuilds the mesh over the *surviving*
+    devices after a host loss, so the grid must not silently fall back
+    to the default (dead hosts included) enumeration.
+    """
+    return make_mesh((data, model), ("data", "model"), devices=devices)
 
 
-def make_group_mesh(data: int, model: int, cp_degree: int):
+def make_group_mesh(data: int, model: int, cp_degree: int, *, devices=None):
     """Re-tile a ``data x model`` device grid into CP subgroups.
 
     The adaptive dispatcher (DESIGN.md §Dispatch) runs each step at a CP
@@ -42,9 +48,12 @@ def make_group_mesh(data: int, model: int, cp_degree: int):
     ``cp_degree`` must divide the ``model`` axis so each subgroup is a
     contiguous slice of a single CP row (physically adjacent devices on
     the production torus) and never straddles a data row.
+
+    ``devices``: optional explicit device list (elastic recovery re-tiles
+    the *surviving* grid after a host loss, DESIGN.md §Recovery).
     """
     if cp_degree < 1 or model % cp_degree:
         raise ValueError(
             f"cp_degree {cp_degree} does not divide model axis {model}")
     return make_mesh((data * model // cp_degree, cp_degree),
-                     ("data", "model"))
+                     ("data", "model"), devices=devices)

@@ -162,14 +162,42 @@ def build_train_step(cfg: ModelConfig, mesh, run: RunConfig,
                      shape: ShapeConfig, *, abstract: bool = True,
                      q_chunk: int = 512, block_q: int = 128,
                      block_k: int = 128,
-                     interpret: bool = False) -> StepBundle:
+                     interpret: bool = False,
+                     accum: int = 1) -> StepBundle:
+    """One fused (loss + grad + optimizer) training step.
+
+    ``accum > 1`` splits the batch into that many micro-batches and
+    accumulates gradients before the single optimizer update — the
+    elastic recovery path (DESIGN.md §Recovery) uses it to preserve the
+    global batch after a mesh shrink (ElasticPlan.accum_factor).  Rows
+    are group-major on the batch axis; micro ``m`` takes rows
+    ``[g*spg + m*spg/accum, g*spg + (m+1)*spg/accum)`` of every group
+    ``g`` (a sharding-preserving reshape — each device slices its own
+    rows locally).  Gradients are token-weighted across micros, so the
+    accumulated update equals the fused one on the same batch: the
+    global masked CE mean is ``Σ ce_sum / Σ tokens`` either way.
+    """
     plan_strategy = effective_strategy(cfg, run.cp_strategy)
     exec_strategy = exec_strategy_of(plan_strategy)
     baxes = batch_axes_of(mesh)
     cp = mesh.shape["model"]
+    if accum > 1:
+        G = mesh.shape["data"]
+        B_total = shape.global_batch
+        assert B_total % (G * accum) == 0, \
+            (f"accum {accum} needs per-group rows divisible: "
+             f"batch {B_total}, groups {G}")
 
-    def train_step(params, opt_state, batch, step):
-        ctx = make_cp_context(
+    def _micro(batch, m):
+        """Micro-batch m: a sharding-preserving strided row slice."""
+        def sl(v):
+            B = v.shape[0]
+            x = v.reshape((G, accum, B // (G * accum)) + v.shape[1:])
+            return x[:, m].reshape((B // accum,) + v.shape[1:])
+        return {k: sl(v) for k, v in batch.items()}
+
+    def _ctx_of(batch):
+        return make_cp_context(
             mesh, _plan_keys(batch), strategy=exec_strategy,
             impl=run.attention_impl, batch_axes=baxes,
             head_dim=cfg.resolved_head_dim, q_chunk=q_chunk,
@@ -177,14 +205,40 @@ def build_train_step(cfg: ModelConfig, mesh, run: RunConfig,
             block_q=block_q, block_k=block_k, grid=run.kernel_grid,
             kv_comm_dtype=run.kv_comm_dtype)
 
+    def _loss_and_grads(params, batch):
         # loss_fn's CE is a *global* masked mean: sum(ce * mask) /
         # sum(mask) over the whole (possibly ragged) batch, so dispatch
         # groups of unequal token counts are token-weighted — a group
         # holding 30% of the step's valid tokens contributes 30% of the
         # loss and of the gradient, never 1/n_groups.
-        (loss, metrics), grads = jax.value_and_grad(
+        ctx = _ctx_of(batch)
+        return jax.value_and_grad(
             lambda p: loss_fn(p, cfg, ctx, batch, remat=run.remat),
             has_aux=True)(params)
+
+    def train_step(params, opt_state, batch, step):
+        if accum == 1:
+            (loss, metrics), grads = _loss_and_grads(params, batch)
+        else:
+            g_sum, metr_sum = None, None
+            loss_sum = tok_sum = 0.0
+            for m in range(accum):
+                mb = _micro(batch, m)
+                (l_m, metr_m), g_m = _loss_and_grads(params, mb)
+                tok = jnp.sum(mb["labels"] >= 0).astype(jnp.float32)
+                add = lambda a, b: a + b    # noqa: E731
+                g_m = jax.tree.map(lambda g: g * tok, g_m)
+                g_sum = g_m if g_sum is None else \
+                    jax.tree.map(add, g_sum, g_m)
+                metr_m = jax.tree.map(lambda v: v * tok, metr_m)
+                metr_sum = metr_m if metr_sum is None else \
+                    jax.tree.map(add, metr_sum, metr_m)
+                loss_sum = loss_sum + l_m * tok
+                tok_sum = tok_sum + tok
+            denom = jnp.maximum(tok_sum, 1.0)
+            grads = jax.tree.map(lambda g: g / denom, g_sum)
+            metrics = jax.tree.map(lambda v: v / denom, metr_sum)
+            loss = loss_sum / denom
         grads, gnorm = clip_by_global_norm(grads, run.grad_clip)
         if run.grad_compression != "none":
             grads, _ = compress_tree(grads, jax.tree.map(

@@ -1,6 +1,9 @@
 from .elastic import ElasticPlan, shrink_mesh_shape
 from .fault_tolerance import (FailureAction, FailurePolicy, HeartbeatMonitor,
                               TrainingFailure, run_with_recovery)
+from .recovery import (ElasticSupervisor, FailureInjector, HostTopology,
+                       RecoveryPlan, StragglerSim, parse_fail_spec,
+                       parse_straggle_specs, replan_after_failure)
 from .sharding import (batch_axes_of, batch_specs, cache_specs, named,
                        param_shardings)
 from .straggler import StragglerMonitor
@@ -8,4 +11,7 @@ from .straggler import StragglerMonitor
 __all__ = ["ElasticPlan", "shrink_mesh_shape", "FailureAction",
            "FailurePolicy", "HeartbeatMonitor", "TrainingFailure",
            "run_with_recovery", "batch_axes_of", "batch_specs",
-           "cache_specs", "named", "param_shardings", "StragglerMonitor"]
+           "cache_specs", "named", "param_shardings", "StragglerMonitor",
+           "ElasticSupervisor", "FailureInjector", "HostTopology",
+           "RecoveryPlan", "StragglerSim", "parse_fail_spec",
+           "parse_straggle_specs", "replan_after_failure"]

@@ -65,14 +65,24 @@ class FailurePolicy:
     restarts: int = 0
 
     def decide(self, alive_hosts: int, failed: list[int]) -> FailureAction:
-        self.restarts += 1
-        if self.restarts > self.max_restarts:
+        """RESTART / ELASTIC_SHRINK / ABORT for one failure event.
+
+        ``alive_hosts`` must be the *real* survivor count (total hosts
+        minus every host lost so far) — :func:`run_with_recovery` and
+        :class:`repro.runtime.recovery.ElasticSupervisor` thread it
+        through from the heartbeat/failure set.  The restart budget is
+        charged only when a recovery attempt is actually granted; an
+        ABORT verdict never burns a slot (aborting is free, retrying is
+        not).
+        """
+        if alive_hosts < self.min_hosts:
             return FailureAction.ABORT
-        if not failed:
-            return FailureAction.RESTART
-        if alive_hosts >= self.min_hosts:
+        if self.restarts >= self.max_restarts:
+            return FailureAction.ABORT
+        self.restarts += 1
+        if failed:
             return FailureAction.ELASTIC_SHRINK
-        return FailureAction.ABORT
+        return FailureAction.RESTART
 
 
 def run_with_recovery(
@@ -83,20 +93,44 @@ def run_with_recovery(
     policy: FailurePolicy,
     on_restore: Callable[[FailureAction, list[int]], int],
     logger: Callable[[str], None] = print,
+    num_hosts: int | None = None,
+    monitor: HeartbeatMonitor | None = None,
 ) -> int:
     """Supervised step loop.  ``step_fn(step)`` runs one training step;
     ``on_restore(action, failed_hosts)`` reloads state (and possibly
     rebuilds the mesh), returning the step to resume from.  Returns the
-    final step reached."""
+    final step reached.
+
+    The policy sees the *real* survivor count: hosts named by each
+    :class:`TrainingFailure` (plus any the heartbeat ``monitor`` has
+    declared dead) accumulate into a dead set, and ``alive = num_hosts -
+    len(dead)`` is what :meth:`FailurePolicy.decide` judges against
+    ``min_hosts``.  ``num_hosts`` defaults to the monitor's host count,
+    else to ``policy.min_hosts`` (the degenerate legacy contract for
+    callers that never lose hosts — alive then equals min_hosts, so
+    host-less failures still RESTART).
+
+    For degree-replanning recovery (mesh shrink + resharded restore) use
+    :class:`repro.runtime.recovery.ElasticSupervisor`, which layers the
+    surviving-topology bookkeeping on top of this loop's semantics.
+    """
+    if num_hosts is None:
+        num_hosts = monitor.num_hosts if monitor is not None \
+            else policy.min_hosts
     step = start_step
+    dead: set[int] = set()
     while step < total_steps:
         try:
             step_fn(step)
             step += 1
         except TrainingFailure as e:
-            alive = policy.min_hosts  # caller refines via on_restore
+            dead.update(e.failed_hosts)
+            if monitor is not None:
+                dead.update(monitor.failed_hosts())
+            alive = num_hosts - len(dead)
             action = policy.decide(alive, e.failed_hosts)
-            logger(f"[ft] step {step} failed ({e}); action={action.value}")
+            logger(f"[ft] step {step} failed ({e}); alive={alive}; "
+                   f"action={action.value}")
             if action == FailureAction.ABORT:
                 raise
             step = on_restore(action, e.failed_hosts)

@@ -80,3 +80,106 @@ def test_overwrite_same_step(tmp_path):
     np.testing.assert_array_equal(
         np.asarray(restored["params"]["w"]),
         np.asarray(_state(1)["params"]["w"]))
+
+
+# --------------------------------------------------------------------- #
+# crash-safety (DESIGN.md §Recovery)
+# --------------------------------------------------------------------- #
+def _fail_writes(mgr, monkeypatch):
+    def boom(self, step, host_state, extra, tmp):
+        os.makedirs(tmp, exist_ok=True)           # stage partially...
+        raise OSError("disk full")                # ...then die pre-commit
+
+    monkeypatch.setattr(CheckpointManager, "_write", boom)
+
+
+def test_async_save_error_reraised_not_silent(tmp_path, monkeypatch):
+    """A failed background save surfaces on the next wait() — never
+    silently vanishes — and the manager recovers for the next save."""
+    mgr = CheckpointManager(str(tmp_path))
+    _fail_writes(mgr, monkeypatch)
+    mgr.save(1, _state(), blocking=False)
+    with pytest.raises(RuntimeError, match="checkpoint save failed"):
+        mgr.wait()
+    mgr.wait()                                    # error is consumed once
+    monkeypatch.undo()
+    mgr.save(2, _state())
+    assert mgr.latest_step() == 2
+
+
+def test_async_save_error_reraised_by_next_save(tmp_path, monkeypatch):
+    mgr = CheckpointManager(str(tmp_path))
+    _fail_writes(mgr, monkeypatch)
+    mgr.save(1, _state(), blocking=False)
+    monkeypatch.undo()
+    with pytest.raises(RuntimeError, match="checkpoint save failed"):
+        mgr.save(2, _state())
+    mgr.save(2, _state())                         # manager still usable
+    assert mgr.latest_step() == 2
+
+
+def test_crash_mid_save_keeps_previous_checkpoint(tmp_path, monkeypatch):
+    """Atomicity: a save that dies before commit leaves the previous
+    checkpoint as latest, restorable, with no staging leftovers."""
+    mgr = CheckpointManager(str(tmp_path))
+    st = _state(1)
+    mgr.save(1, st)
+    _fail_writes(mgr, monkeypatch)
+    with pytest.raises(RuntimeError):
+        mgr.save(2, _state(2))
+    assert mgr.latest_step() == 1
+    assert mgr.all_steps() == [1]
+    assert not [n for n in os.listdir(str(tmp_path)) if n.endswith(".tmp")]
+    _, restored, _ = mgr.restore()
+    np.testing.assert_array_equal(np.asarray(restored["params"]["w"]),
+                                  np.asarray(st["params"]["w"]))
+    monkeypatch.undo()
+    mgr.save(2, _state(2))
+    assert mgr.latest_step() == 2
+
+
+def test_gc_never_collects_just_written_step(tmp_path):
+    """A directory reused across runs can hold stale higher-numbered
+    steps; retention-by-number must not delete the checkpoint the new
+    run just committed (and LATEST still points at)."""
+    stale = CheckpointManager(str(tmp_path), keep=2)
+    for s in (7, 8):
+        stale.save(s, _state(s))                  # previous run's leftovers
+
+    mgr = CheckpointManager(str(tmp_path), keep=2)
+    mgr.save(3, _state(3))                        # new run, smaller step
+    assert mgr.latest_step() == 3                 # LATEST written last wins
+    _, restored, _ = mgr.restore()
+    np.testing.assert_array_equal(np.asarray(restored["params"]["w"]),
+                                  np.asarray(_state(3)["params"]["w"]))
+
+
+def test_dangling_latest_pointer_falls_back(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=5)
+    mgr.save(1, _state(1))
+    mgr.save(2, _state(2))
+    import shutil
+    shutil.rmtree(os.path.join(str(tmp_path), "step_000000002"))
+    assert mgr.latest_step() == 1                 # LATEST=2 is dangling
+    step, restored, _ = mgr.restore()
+    assert step == 1
+
+
+def test_stale_tmp_from_dead_process_swept(tmp_path):
+    """Staging dirs whose embedded pid is dead are GC'd at construction;
+    this process's own in-flight staging dirs are kept."""
+    import subprocess
+    import sys
+
+    proc = subprocess.Popen([sys.executable, "-c", "pass"])
+    proc.wait()                                   # reaped: pid is dead
+    dead = os.path.join(str(tmp_path), f"step_000000001.{proc.pid}.7.tmp")
+    mine = os.path.join(str(tmp_path),
+                        f"step_000000002.{os.getpid()}.7.tmp")
+    junk = os.path.join(str(tmp_path), "step_000000003.zz.tmp")
+    for d in (dead, mine, junk):
+        os.makedirs(d)
+    CheckpointManager(str(tmp_path))
+    assert not os.path.exists(dead)
+    assert os.path.exists(mine)
+    assert not os.path.exists(junk)               # unparseable pid: swept

@@ -1,0 +1,390 @@
+"""Elastic degree-replanning recovery (DESIGN.md §Recovery): fail-spec
+parsing, surviving-topology replanning, speed-weighted balancing, the
+straggler monitor's host EMAs, gradient-accumulation parity, and the
+supervisor's shrink flow."""
+
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.dispatch import (DispatchConfig, dispatch_step,
+                            effective_imbalance, imbalance, lpt_assign,
+                            pack_pool)
+from repro.runtime import (ElasticSupervisor, FailureAction, FailureInjector,
+                           FailurePolicy, HostTopology, StragglerMonitor,
+                           TrainingFailure, parse_fail_spec,
+                           parse_straggle_specs, replan_after_failure)
+
+
+# --------------------------------------------------------------------- #
+# injection-spec parsing
+# --------------------------------------------------------------------- #
+def test_parse_fail_spec():
+    assert parse_fail_spec(None) == (-1, [])
+    assert parse_fail_spec("") == (-1, [])
+    assert parse_fail_spec(-1) == (-1, [])
+    assert parse_fail_spec(7) == (7, [])            # legacy int callers
+    assert parse_fail_spec("12") == (12, [])
+    assert parse_fail_spec("12:3") == (12, [3])
+    assert parse_fail_spec("12:1,3") == (12, [1, 3])
+    with pytest.raises(ValueError):
+        parse_fail_spec("twelve")
+
+
+def test_parse_straggle_specs():
+    assert parse_straggle_specs(None) == {}
+    assert parse_straggle_specs(["2:2.0", "0:1.5"]) == {2: 2.0, 0: 1.5}
+    with pytest.raises(ValueError):
+        parse_straggle_specs(["3"])                 # missing factor
+    with pytest.raises(ValueError):
+        parse_straggle_specs(["3:0.5"])             # speedups not allowed
+
+
+def test_failure_injector_fires_once():
+    inj = FailureInjector(fail_step=4, fail_hosts=[1])
+    inj.maybe_fail(3)
+    with pytest.raises(TrainingFailure) as ei:
+        inj.maybe_fail(4)
+    assert ei.value.failed_hosts == [1]
+    inj.maybe_fail(4)                               # replay passes
+
+
+# --------------------------------------------------------------------- #
+# surviving topology
+# --------------------------------------------------------------------- #
+def test_host_topology():
+    topo = HostTopology(num_hosts=4, devices_per_host=2)
+    assert topo.num_devices == 8
+    assert topo.host_of_device(5) == 2
+    assert topo.surviving_hosts({1, 3}) == [0, 2]
+    assert topo.surviving_devices({1, 3}) == [0, 1, 4, 5]
+
+
+def test_replan_after_failure_shrinks_data_axis():
+    topo = HostTopology(num_hosts=4, devices_per_host=2)
+    plan = replan_after_failure(topo, {3}, data=2, model=4)
+    # 6 survivors, model axis kept at 4 -> data shrinks to 1, and the
+    # global batch is preserved via 2x gradient accumulation
+    assert (plan.data_axis, plan.model_axis) == (1, 4)
+    assert plan.devices == [0, 1, 2, 3]             # contiguous prefix
+    assert plan.surviving_hosts == [0, 1, 2]
+    assert plan.accum_factor == 2
+    assert plan.n_devices == 4
+
+
+def test_replan_infeasible_raises():
+    topo = HostTopology(num_hosts=4, devices_per_host=2)
+    with pytest.raises(ValueError):
+        replan_after_failure(topo, {1, 2, 3}, data=2, model=4)
+
+
+# --------------------------------------------------------------------- #
+# speed-weighted balancing primitives
+# --------------------------------------------------------------------- #
+def test_lpt_speeds_none_matches_uniform_speeds():
+    rng = np.random.default_rng(0)
+    for _ in range(10):
+        w = rng.integers(1, 1000, size=24).astype(float)
+        classic = lpt_assign(w, 4)
+        uniform = lpt_assign(w, 4, speeds=np.ones(4))
+        np.testing.assert_array_equal(classic, uniform)
+
+
+def test_weighted_lpt_beats_unweighted_under_slow_group():
+    """Capacity-proportional LPT: with one group at half speed, the
+    effective (completion-time) imbalance must beat plain LPT's — and
+    meet the paper-grade <=1.1 bound on a fine-grained pool."""
+    rng = np.random.default_rng(1)
+    speeds = np.asarray([1.0, 1.0, 1.0, 0.5])
+    for trial in range(5):
+        w = np.clip(rng.lognormal(8.0, 1.0, size=96), 64, 1e5)
+        plain = np.bincount(lpt_assign(w, 4), weights=w, minlength=4)
+        wtd = np.bincount(lpt_assign(w, 4, speeds=speeds), weights=w,
+                          minlength=4)
+        eff_plain = effective_imbalance(plain, speeds)
+        eff_wtd = effective_imbalance(wtd, speeds)
+        assert eff_wtd < eff_plain
+        assert eff_plain >= 1.4                     # slow group binds
+        assert eff_wtd <= 1.1                       # ...until weighted
+        # the slow group really holds ~half a fast group's load
+        assert wtd[3] < 0.7 * wtd[:3].mean()
+
+
+def test_lpt_per_group_cardinality_with_speeds():
+    w = np.arange(1, 13).astype(float)
+    assign = lpt_assign(w, 4, per_group=3,
+                        speeds=np.asarray([1.0, 1.0, 0.5, 1.0]))
+    assert np.bincount(assign, minlength=4).tolist() == [3, 3, 3, 3]
+
+
+def test_pack_pool_targets_default_is_legacy():
+    rng = np.random.default_rng(2)
+    lens = rng.integers(32, 2048, size=40)
+    a = pack_pool(lens, 8, 2048, quantum=16)
+    b = pack_pool(lens, 8, 2048, quantum=16,
+                  targets=np.full(8, 2048, np.int64))
+    for ba, bb in zip(a.bins, b.bins):
+        np.testing.assert_array_equal(ba, bb)
+    assert a.truncated_tokens == b.truncated_tokens
+
+
+def test_pack_pool_targets_shape_bins():
+    """Halved-target bins end up ~half as full; fills never exceed the
+    target (clipped to capacity)."""
+    rng = np.random.default_rng(3)
+    lens = rng.integers(16, 256, size=64)
+    targets = np.asarray([1024, 1024, 512, 512], np.int64)
+    packed = pack_pool(lens, 4, 1024, quantum=16, targets=targets)
+    fills = packed.bin_tokens
+    assert (fills <= targets).all()
+    assert fills[2:].mean() < 0.75 * fills[:2].mean()
+    # conservation: placed + truncated == pool total
+    assert int(fills.sum()) + packed.truncated_tokens == int(lens.sum())
+
+
+def test_effective_imbalance():
+    loads = np.asarray([100.0, 100.0])
+    assert effective_imbalance(loads) == imbalance(loads) == 1.0
+    # equal loads, one group at half speed -> its completion is 2x the
+    # fast one's, max/mean = 2/1.5
+    assert effective_imbalance(loads, np.asarray([1.0, 0.5])) == \
+        pytest.approx(2.0 / 1.5)
+    with pytest.raises(AssertionError):
+        effective_imbalance(loads, np.asarray([1.0, 0.0]))
+
+
+# --------------------------------------------------------------------- #
+# straggler monitor: host EMAs -> speeds -> dispatcher
+# --------------------------------------------------------------------- #
+def test_monitor_host_speeds():
+    mon = StragglerMonitor()
+    for _ in range(12):
+        for h in range(4):
+            mon.record_host_step(h, 2.0 if h == 3 else 1.0)
+    speeds = mon.host_speeds(range(4))
+    np.testing.assert_allclose(speeds[:3], 1.0)
+    assert speeds[3] == pytest.approx(0.5, abs=0.02)
+    # unobserved hosts are assumed healthy
+    assert mon.host_speeds([0, 7])[1] == 1.0
+
+
+def test_monitor_slow_hosts_need_patience():
+    mon = StragglerMonitor(slow_speed=0.6, slow_patience=3)
+    for i in range(6):
+        mon.record_host_step(0, 1.0)
+        mon.record_host_step(1, 4.0)
+        if i < 2:
+            assert mon.slow_hosts() == []
+    assert mon.slow_hosts() == [1]
+    assert mon.slow_hosts([0]) == []
+
+
+def test_dispatch_step_uses_device_speeds():
+    from repro.data.distributions import make_rng
+    from repro.data.packing import sample_doc_pool
+
+    D, M, seqs, C = 4, 2, 16, 2048
+    pool = sample_doc_pool("wlb_llm", seqs * C, make_rng(7),
+                           max_doc_len=C, min_docs=seqs)
+    dcfg = DispatchConfig(data=D, model=M, seqs=seqs, quantum=16)
+    dev_speeds = np.repeat([1.0, 1.0, 1.0, 0.5], 2)
+
+    plain = dispatch_step(pool, dcfg, C)
+    wtd = dispatch_step(pool, dcfg, C, device_speeds=dev_speeds)
+    assert plain.group_speeds is None
+    assert wtd.group_speeds is not None
+
+    # judge both placements under the true speeds: the weighted plan's
+    # completion-time imbalance must improve on the blind one
+    def eff(plan):
+        gs = dev_speeds[:plan.n_groups * plan.cp_degree].reshape(
+            plan.n_groups, plan.cp_degree).min(axis=1)
+        return effective_imbalance(plan.group_workload, gs / gs.max())
+
+    assert eff(wtd) < eff(plain)
+    st = wtd.stats()
+    assert "work_imbalance_raw" in st and "group_speeds" in st
+
+
+def test_dispatch_batch_replay_is_deterministic():
+    """The dispatch stream is a pure function of (seed, step): replaying
+    a step after recovery yields bit-identical tokens/labels/plans, and
+    speed weighting never changes token *content* (only placement)."""
+    from repro.data.pipeline import PipelineConfig, make_dispatch_batch
+
+    pipe = PipelineConfig(dataset="wlb_llm", context_len=512,
+                          batch_per_host=8, cp_size=4, strategy="flashcp",
+                          seed=3, align=16)
+    dcfg = DispatchConfig(data=2, model=4, seqs=8, quantum=16)
+    a = make_dispatch_batch(pipe, dcfg, step=5)
+    b = make_dispatch_batch(pipe, dcfg, step=5)
+    for k in ("tokens", "labels", "seq_tokens", "group_id", "doc", "pos"):
+        np.testing.assert_array_equal(a[k], b[k])
+
+    # content invariance under speeds: same multiset of (row tokens)
+    c = make_dispatch_batch(pipe, dcfg, step=5,
+                            device_speeds=np.repeat([1.0, 0.5], 4))
+    assert sorted(int(t) for t in a["seq_tokens"]) != [] and \
+        int(a["tokens"].clip(min=0).sum()) > 0
+    assert a["tokens"].shape == c["tokens"].shape
+
+
+# --------------------------------------------------------------------- #
+# gradient accumulation parity
+# --------------------------------------------------------------------- #
+def test_accum_step_matches_fused():
+    """accum=2 token-weighted accumulation equals the fused step (same
+    batch, same params) — the property that makes the post-shrink
+    trajectory land on the oracle's."""
+    import jax
+
+    from repro.compat import set_mesh
+    from repro.configs import RunConfig, get_config, reduce_for_smoke
+    from repro.configs.base import ShapeConfig
+    from repro.data.pipeline import PipelineConfig, make_batch
+    from repro.launch.mesh import make_local_mesh
+    from repro.launch.steps import build_train_step
+    from repro.launch.train import device_put_batch
+    from repro.models import init_params
+    from repro.optim import adamw_init
+
+    cfg = reduce_for_smoke(get_config("starcoder2_3b"))
+    run = RunConfig(arch="starcoder2_3b", cp_strategy="flashcp",
+                    total_steps=4, warmup_steps=1, remat=False)
+    shape = ShapeConfig("t", 128, 2, "train")
+    mesh = make_local_mesh(1, 1)
+    pipe = PipelineConfig(dataset="wlb_llm", context_len=128,
+                          batch_per_host=2, cp_size=1, strategy="flashcp",
+                          vocab_size=cfg.vocab_size, seed=0, align=1)
+    batch = make_batch(pipe, 0)
+
+    outs = {}
+    with set_mesh(mesh):
+        params = init_params(jax.random.PRNGKey(0), cfg)
+        opt = adamw_init(params)
+        for accum in (1, 2):
+            bundle = build_train_step(cfg, mesh, run, shape, q_chunk=64,
+                                      accum=accum)
+            db = device_put_batch(batch, bundle.in_shardings[2])
+            db = {k: v for k, v in db.items()
+                  if k in bundle.abstract_inputs[2]}
+            fn = jax.jit(bundle.fn)
+            p, _, metrics = fn(params, opt, db,
+                               jax.numpy.asarray(0, jax.numpy.int32))
+            outs[accum] = (p, metrics)
+
+    (p1, m1), (p2, m2) = outs[1], outs[2]
+    assert float(m2["loss"]) == pytest.approx(float(m1["loss"]), rel=1e-5)
+    assert int(m1["tokens"]) == int(m2["tokens"])
+    for a, b in zip(jax.tree.leaves(p1), jax.tree.leaves(p2)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=2e-4, atol=2e-5)
+
+
+# --------------------------------------------------------------------- #
+# supervisor flow
+# --------------------------------------------------------------------- #
+def _supervised_run(fail_step, fail_hosts, *, num_hosts=4, dph=2,
+                    data=2, model=4, min_hosts=2, ckpt_step=3, steps=8):
+    topo = HostTopology(num_hosts=num_hosts, devices_per_host=dph)
+    sup = ElasticSupervisor(topo, FailurePolicy(min_hosts=min_hosts),
+                            data=data, model=model, logger=lambda *_: None)
+    inj = FailureInjector(fail_step, fail_hosts)
+    ran, restores = [], []
+
+    def step(s):
+        inj.maybe_fail(s)
+        ran.append(s)
+
+    def on_restore(action, plan):
+        restores.append((action, plan))
+        return ckpt_step
+
+    final = sup.run(step, start_step=0, total_steps=steps,
+                    on_restore=on_restore)
+    return sup, final, ran, restores
+
+
+def test_supervisor_restart_flow():
+    sup, final, ran, restores = _supervised_run(5, [])
+    assert final == 8
+    assert ran == [0, 1, 2, 3, 4, 3, 4, 5, 6, 7]    # replay from ckpt
+    (action, plan), = restores
+    assert action == FailureAction.RESTART and plan is None
+    assert sup.plan is None and sup.current_axes() == (2, 4)
+
+
+def test_supervisor_shrink_flow():
+    sup, final, ran, restores = _supervised_run(5, [3])
+    assert final == 8
+    (action, plan), = restores
+    assert action == FailureAction.ELASTIC_SHRINK
+    assert (plan.data_axis, plan.model_axis) == (1, 4)
+    assert plan.devices == [0, 1, 2, 3]
+    assert sup.dead == {3}
+    assert sup.alive_hosts == 3
+    assert sup.current_axes() == (1, 4)
+
+
+def test_supervisor_aborts_below_min_hosts():
+    with pytest.raises(TrainingFailure):
+        _supervised_run(5, [1, 2, 3], min_hosts=2)
+
+
+def test_supervisor_infeasible_shrink_reraises():
+    # survivors (1 host x 2 devices) cannot hold the model axis of 4
+    with pytest.raises(TrainingFailure):
+        _supervised_run(5, [1, 2, 3], min_hosts=1)
+
+
+def test_supervisor_device_speeds_follow_survivors():
+    topo = HostTopology(num_hosts=4, devices_per_host=2)
+    mon = StragglerMonitor()
+    sup = ElasticSupervisor(topo, FailurePolicy(min_hosts=1),
+                            data=2, model=4, monitor=mon,
+                            logger=lambda *_: None)
+    for _ in range(8):
+        for h in range(4):
+            mon.record_host_step(h, 2.0 if h == 2 else 1.0)
+    speeds = sup.device_speeds()
+    assert speeds.shape == (8,)
+    assert speeds[4] == pytest.approx(speeds[5])
+    assert speeds[4] < 0.6                          # host 2's devices
+
+    # after losing host 2 the renumbered grid is all-fast
+    inj = FailureInjector(1, [2])
+
+    def step(s):
+        inj.maybe_fail(s)
+
+    sup.run(step, start_step=0, total_steps=2,
+            on_restore=lambda a, p: 1)
+    speeds = sup.device_speeds()
+    assert speeds.shape == (4,)                     # 1x4 shrunk grid
+    np.testing.assert_allclose(speeds, 1.0)
+
+
+def test_run_with_recovery_tracks_cumulative_dead():
+    """Satellite fix: run_with_recovery judges the policy against the
+    real survivor count, accumulated across failures."""
+    from repro.runtime import run_with_recovery
+
+    calls = {"n": 0}
+
+    def step(s):
+        if s == 2 and calls["n"] == 0:
+            calls["n"] += 1
+            raise TrainingFailure("lost 0", failed_hosts=[0])
+        if s == 4 and calls["n"] == 1:
+            calls["n"] += 1
+            raise TrainingFailure("lost 1", failed_hosts=[1])
+
+    # 4 hosts, min 3: first loss leaves 3 (shrink), second leaves 2
+    # (abort) — under the old constant-alive bug the second loss would
+    # also have been granted
+    with pytest.raises(TrainingFailure, match="lost 1"):
+        run_with_recovery(step, start_step=0, total_steps=8,
+                          policy=FailurePolicy(min_hosts=3),
+                          on_restore=lambda a, f: 2, num_hosts=4,
+                          logger=lambda *_: None)

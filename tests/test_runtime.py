@@ -25,11 +25,14 @@ def test_heartbeat_monitor():
 
 
 def test_failure_policy():
-    pol = FailurePolicy(min_hosts=2, max_restarts=3)
+    pol = FailurePolicy(min_hosts=2, max_restarts=2)
     assert pol.decide(4, []) == FailureAction.RESTART
-    assert pol.decide(3, [1]) == FailureAction.ELASTIC_SHRINK
+    # an ABORT verdict (too few survivors) never burns a restart slot
     assert pol.decide(1, [0, 2]) == FailureAction.ABORT
+    assert pol.restarts == 1
+    assert pol.decide(3, [1]) == FailureAction.ELASTIC_SHRINK
     assert pol.decide(4, []) == FailureAction.ABORT  # restart budget spent
+    assert pol.restarts == 2
 
 
 def test_run_with_recovery_restarts_and_finishes():
@@ -55,6 +58,53 @@ def test_run_with_recovery_restarts_and_finishes():
     assert final == 6
     assert restores == [FailureAction.RESTART]
     assert steps_run == [0, 1, 2, 2, 3, 4, 5]   # replay from checkpoint
+
+
+def test_run_with_recovery_threads_real_alive_count():
+    """Satellite fix: the loop tracks cumulative dead hosts, so the
+    policy's min_hosts check sees the real survivor count instead of a
+    constant (which used to grant every shrink forever)."""
+    losses = iter([[0], [1]])
+
+    def step(s):
+        if s == 2:
+            hosts = next(losses, None)
+            if hosts is not None:
+                raise TrainingFailure("host down", failed_hosts=hosts)
+
+    actions = []
+
+    def on_restore(action, failed):
+        actions.append(action)
+        return 1
+
+    # 4 hosts, min 3: losing host 0 leaves 3 (shrink OK); losing host 1
+    # as well leaves 2 < 3 -> abort re-raises the failure
+    with pytest.raises(TrainingFailure, match="host down"):
+        run_with_recovery(step, start_step=0, total_steps=8,
+                          policy=FailurePolicy(min_hosts=3),
+                          on_restore=on_restore, num_hosts=4,
+                          logger=lambda *_: None)
+    assert actions == [FailureAction.ELASTIC_SHRINK]
+
+
+def test_run_with_recovery_num_hosts_from_monitor():
+    mon = HeartbeatMonitor(num_hosts=6, timeout_s=1e6)
+    for h in range(6):
+        mon.beat(h)                               # all healthy at start
+
+    fail_once = {"done": False}
+
+    def step(s):
+        if s == 1 and not fail_once["done"]:
+            fail_once["done"] = True
+            raise TrainingFailure("x", failed_hosts=[5])
+
+    final = run_with_recovery(step, start_step=0, total_steps=3,
+                              policy=FailurePolicy(min_hosts=5),
+                              on_restore=lambda a, f: 0, monitor=mon,
+                              logger=lambda *_: None)
+    assert final == 3                             # 5 survivors >= min 5
 
 
 def test_elastic_shrink():
