@@ -15,6 +15,8 @@ row is a ratio/summary).  Suites:
   dispatch  adaptive DP×CP token dispatch vs static (BENCH_dispatch.json)
   elastic  degree-replanning recovery + straggler-weighted balancing
            (BENCH_elastic.json)
+  resilience  overload shedding goodput + chaos quarantine +
+           kill/restore parity (BENCH_resilience.json)
 
 Usage: PYTHONPATH=src python -m benchmarks.run [suite ...]
        PYTHONPATH=src python -m benchmarks.run --suite kernel [--smoke]
@@ -35,7 +37,7 @@ def main() -> None:
     from . import (bench_breakdown, bench_context_window, bench_dispatch,
                    bench_e2e_cp, bench_elastic, bench_ilp_vs_heuristic,
                    bench_kernel_efficiency, bench_overlap,
-                   bench_planner_runtime, bench_serve)
+                   bench_planner_runtime, bench_resilience, bench_serve)
 
     suites = {
         "fig3": bench_kernel_efficiency.run,
@@ -49,6 +51,7 @@ def main() -> None:
         "serve": bench_serve.run,
         "dispatch": bench_dispatch.run,
         "elastic": bench_elastic.run,
+        "resilience": bench_resilience.run,
     }
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("names", nargs="*", metavar="suite",

@@ -163,6 +163,16 @@ class RunConfig:
     # tokens one engine step may spend across prefill chunks + decodes
     # (SplitFuse-style unified step; 0 = num_slots + prefill_chunk)
     serve_token_budget: int = 0
+    # serving resilience (DESIGN.md §Serving-resilience): queue bound
+    # (0 = unbounded), overload policy ("fifo" sheds the incoming
+    # request, "deadline" sheds the least-slack one), and how many
+    # placeable requests may jump a pool-blocked head (0 = strict FIFO)
+    serve_max_queue: int = 0
+    serve_admission: Literal["fifo", "deadline"] = "fifo"
+    serve_admit_lookahead: int = 4
+    # consecutive planned-but-no-progress engine steps before the
+    # watchdog aborts a slot's request
+    serve_stall_patience: int = 8
     # chunked = overlapped KV exchange (ppermute hops merged via online
     # LSE); none = the monolithic blocking-collective islands
     cp_overlap: Literal["chunked", "none"] = "chunked"

@@ -24,6 +24,17 @@ CPU-scale example:
 ``--attn-shards N`` splits the dense-layout decode cache into N
 LSE-merged segments — the in-process form of the CP-sharded cache merge
 (the shard_map form is checked in tests/multidevice/decode_cp_check.py).
+
+Resilience (DESIGN.md §Serving-resilience): ``--max-queue`` bounds the
+queue and ``--admission deadline`` sheds the least-slack request under
+overload (``--deadline N`` attaches an N-step deadline to every
+request); ``--chaos-nan RID:STEP`` / ``--chaos-stuck RID:STEP`` /
+``--chaos-delay STEP:SECONDS`` inject faults the watchdog must
+quarantine; ``--kill-at STEP`` with ``--snapshot-every N
+--snapshot-dir D`` kills the engine mid-run and restores it from the
+latest snapshot in-process (``--drain-at STEP`` is the orderly
+variant: snapshot + stop + restore).  Every submitted request ends in
+the results dict — ok, rejected, shed, or aborted; nothing is lost.
 """
 
 from __future__ import annotations
@@ -36,7 +47,7 @@ import numpy as np
 
 from repro.configs import get_config, reduce_for_smoke
 from repro.configs.base import RunConfig
-from repro.serve import ServeEngine
+from repro.serve import EngineKilled, ServeEngine, parse_chaos
 
 _RC = RunConfig()   # serve defaults live on RunConfig (single source)
 
@@ -62,24 +73,45 @@ def serve(args) -> dict:
     lens = np.maximum(lens, shared_prefix + 1)
     max_len = int(lens.max() + gen)
 
-    eng = ServeEngine(
-        cfg, num_slots=slots, max_len=max_len,
-        prefill_chunk=getattr(args, "prefill_chunk", 64),
-        decode_impl=getattr(args, "decode_impl", "flash"),
-        attn_shards=getattr(args, "attn_shards", 1),
-        seed=getattr(args, "seed", 0),
-        kv_layout=getattr(args, "kv_layout", _RC.kv_layout),
-        block_size=getattr(args, "block_size", _RC.serve_block_size),
-        num_blocks=getattr(args, "num_blocks", 0),
-        token_budget=getattr(args, "token_budget", _RC.serve_token_budget),
-        prefix_cache=getattr(args, "prefix_cache", True),
-        unified=getattr(args, "unified", True))
+    chaos = parse_chaos(getattr(args, "chaos_nan", ()),
+                        getattr(args, "chaos_stuck", ()),
+                        getattr(args, "chaos_delay", ()),
+                        kill_at=getattr(args, "kill_at", -1))
+    snapshot_dir = getattr(args, "snapshot_dir", "")
+    snapshot_every = getattr(args, "snapshot_every", 0)
+    drain_at = getattr(args, "drain_at", -1)
+
+    def build(with_chaos):
+        return ServeEngine(
+            cfg, num_slots=slots, max_len=max_len,
+            prefill_chunk=getattr(args, "prefill_chunk", 64),
+            decode_impl=getattr(args, "decode_impl", "flash"),
+            attn_shards=getattr(args, "attn_shards", 1),
+            seed=getattr(args, "seed", 0),
+            kv_layout=getattr(args, "kv_layout", _RC.kv_layout),
+            block_size=getattr(args, "block_size", _RC.serve_block_size),
+            num_blocks=getattr(args, "num_blocks", 0),
+            token_budget=getattr(args, "token_budget",
+                                 _RC.serve_token_budget),
+            prefix_cache=getattr(args, "prefix_cache", True),
+            unified=getattr(args, "unified", True),
+            max_queue=getattr(args, "max_queue", _RC.serve_max_queue),
+            admission=getattr(args, "admission", _RC.serve_admission),
+            admit_lookahead=getattr(args, "admit_lookahead",
+                                    _RC.serve_admit_lookahead),
+            watchdog=getattr(args, "watchdog", True),
+            stall_patience=getattr(args, "stall_patience",
+                                   _RC.serve_stall_patience),
+            chaos=with_chaos)
+
+    eng = build(chaos)
     eng.warmup(prompt_len=int(lens.max()))
 
     sys_prompt = rng.integers(0, cfg.vocab_size, shared_prefix) \
         .astype(np.int32)
     temperature = getattr(args, "temperature", 0.0)
     top_k = getattr(args, "top_k", 0)
+    deadline = getattr(args, "deadline", -1)
     for i in range(B):
         frames = None
         if cfg.frontend == "audio_frames":
@@ -91,11 +123,38 @@ def serve(args) -> dict:
                             int(lens[i]) - shared_prefix).astype(np.int32)
         eng.submit(np.concatenate([sys_prompt, toks]),
                    max_new=gen, temperature=temperature, top_k=top_k,
-                   frames=frames)
+                   frames=frames, deadline_steps=deadline)
 
+    max_steps = getattr(args, "max_steps", 100_000)
     t0 = time.perf_counter()
-    results = eng.run()
+    restored_from = None
+    try:
+        results = eng.run(max_steps=max_steps,
+                          snapshot_every=snapshot_every,
+                          snapshot_dir=snapshot_dir or None,
+                          drain_at=drain_at)
+        interrupted = drain_at >= 0 and eng.sched.has_work
+        if interrupted:
+            print(f"[serve] drained at step {eng.stats['steps']} "
+                  f"into {snapshot_dir}")
+    except EngineKilled as e:
+        print(f"[serve] {e}; restoring from {snapshot_dir}")
+        interrupted = True
+    if interrupted:
+        # restart-from-snapshot round trip, in-process: a fresh engine
+        # (no chaos — the fault fired) resumes the in-flight work
+        eng = build(None)
+        eng.warmup(prompt_len=int(lens.max()))
+        step = eng.restore_snapshot(snapshot_dir)
+        restored_from = step
+        print(f"[serve] restored snapshot at step {step}; resuming")
+        results = eng.run(max_steps=max_steps)
     wall = time.perf_counter() - t0
+
+    # the resilience contract: every submitted request terminates in
+    # the results dict — a lost rid is a bug, fail loudly
+    missing = [r for r in range(B) if r not in results]
+    assert not missing, f"requests lost from results: {missing}"
 
     s = eng.stats
     tp = eng.throughput()
@@ -124,8 +183,22 @@ def serve(args) -> dict:
             print(f"[serve] prefix:  {xs['nodes']} cached blocks, "
                   f"hit rate {xs['hit_rate']:.2f} "
                   f"({xs['hit_tokens']} tokens skipped)")
+    statuses = {}
+    for r in results.values():
+        statuses[r["status"]] = statuses.get(r["status"], 0) + 1
+    lat = eng.latency_percentiles()
+    print(f"[serve] outcomes: {statuses}; "
+          f"rejected {s['rejected_by_reason']}, "
+          f"shed {s['shed_by_reason']}, "
+          f"aborted {s['aborted_by_reason']}")
+    print(f"[serve] latency (ok): p50 {lat['p50_steps']:.0f} steps / "
+          f"{lat['p50_s'] * 1e3:.0f} ms, p99 {lat['p99_steps']:.0f} "
+          f"steps / {lat['p99_s'] * 1e3:.0f} ms"
+          + (f"; restored from step {restored_from}"
+             if restored_from is not None else ""))
     return {"results": results, "stats": dict(s), "throughput": tp,
             "prompt_lens": lens, "kv_layout": eng.layout,
+            "latency": lat, "restored_from": restored_from,
             "pool": None if eng.pool is None else eng.pool.stats(),
             "prefix": None if eng.prefix is None else eng.prefix.stats(),
             "tokens": {r: results[r]["tokens"] for r in results
@@ -172,6 +245,50 @@ def main():
     ap.add_argument("--uniform", action="store_false", dest="ragged",
                     help="all prompts at --prompt-len (default: ragged)")
     ap.add_argument("--seed", type=int, default=0)
+    # resilience (DESIGN.md §Serving-resilience)
+    ap.add_argument("--max-queue", type=int,
+                    default=_RC.serve_max_queue, dest="max_queue",
+                    help="queue bound (0 = unbounded)")
+    ap.add_argument("--admission", choices=("fifo", "deadline"),
+                    default=_RC.serve_admission,
+                    help="overload policy: shed incoming (fifo) or "
+                         "least-slack (deadline)")
+    ap.add_argument("--admit-lookahead", type=int,
+                    default=_RC.serve_admit_lookahead,
+                    dest="admit_lookahead",
+                    help="requests that may jump a pool-blocked head "
+                         "(0 = strict FIFO)")
+    ap.add_argument("--deadline", type=int, default=-1,
+                    help="deadline_steps attached to every request "
+                         "(-1 = none)")
+    ap.add_argument("--no-watchdog", action="store_false",
+                    dest="watchdog",
+                    help="disable fault quarantine (pre-resilience "
+                         "engine)")
+    ap.add_argument("--stall-patience", type=int,
+                    default=_RC.serve_stall_patience,
+                    dest="stall_patience")
+    ap.add_argument("--chaos-nan", action="append", default=[],
+                    dest="chaos_nan", metavar="RID:STEP",
+                    help="poison a request's logits to NaN from STEP on")
+    ap.add_argument("--chaos-stuck", action="append", default=[],
+                    dest="chaos_stuck", metavar="RID:STEP",
+                    help="drop a request's planned work from STEP on")
+    ap.add_argument("--chaos-delay", action="append", default=[],
+                    dest="chaos_delay", metavar="STEP:SECONDS",
+                    help="inject a latency spike at STEP")
+    ap.add_argument("--kill-at", type=int, default=-1, dest="kill_at",
+                    help="raise EngineKilled at this step (restore "
+                         "needs --snapshot-every + --snapshot-dir)")
+    ap.add_argument("--drain-at", type=int, default=-1, dest="drain_at",
+                    help="orderly drain: snapshot + stop at this step, "
+                         "then restore and finish in-process")
+    ap.add_argument("--snapshot-every", type=int, default=0,
+                    dest="snapshot_every",
+                    help="snapshot the engine every N steps")
+    ap.add_argument("--snapshot-dir", default="", dest="snapshot_dir")
+    ap.add_argument("--max-steps", type=int, default=100_000,
+                    dest="max_steps")
     args = ap.parse_args()
     serve(args)
 

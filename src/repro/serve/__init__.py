@@ -6,16 +6,23 @@ prefix sharing (``PrefixCache``); the dense per-slot stripe layout
 survives as the parity oracle and the recurrent-arch fallback.
 ``Scheduler``/``Request`` manage slot admission, the SplitFuse-style
 token budget, and retirement; ``sampling`` holds the per-request keyed
-greedy/temperature/top-k sampler.  See launch/serve.py for the CLI and
-README "Serving engine" for the architecture.
+greedy/temperature/top-k sampler.  ``resilience`` adds bounded
+deadline-aware admission, the fault-quarantine watchdog, chaos
+injection, and engine snapshot/restore (DESIGN.md
+§Serving-resilience).  See launch/serve.py for the CLI and README
+"Serving engine" for the architecture.
 """
 
 from .block_pool import BlockPool
 from .engine import ServeEngine
 from .prefix import PrefixCache
+from .resilience import (AdmissionConfig, ChaosInjector, EngineKilled,
+                         Watchdog, parse_chaos)
 from .sampling import (apply_top_k, sample_tokens, sample_tokens_keyed)
 from .scheduler import Request, Scheduler, SlotState
 
 __all__ = ["ServeEngine", "Request", "Scheduler", "SlotState",
            "BlockPool", "PrefixCache",
+           "AdmissionConfig", "ChaosInjector", "EngineKilled",
+           "Watchdog", "parse_chaos",
            "apply_top_k", "sample_tokens", "sample_tokens_keyed"]

@@ -27,6 +27,15 @@ Three jitted program families: chunked cache-writing **prefill**
 **sampling** — every request samples from its own
 ``fold_in(fold_in(engine_key, rid), n_generated)`` key stream, so
 results are per-request reproducible regardless of batch composition.
+
+Resilience (DESIGN.md §Serving-resilience): admission is bounded and
+deadline-aware (``max_queue`` / ``admission`` / ``admit_lookahead``), a
+watchdog quarantines requests with non-finite logits or stalled slots
+(the decode programs return a per-row finite mask so NaN never reaches
+a healthy request's results), and :meth:`snapshot` /
+:meth:`restore_snapshot` persist the whole engine mid-decode through
+the checkpoint manager's atomic-commit path — a killed engine restores
+with zero request loss and bitwise token parity.
 """
 
 from __future__ import annotations
@@ -45,6 +54,8 @@ from repro.models import (decode_step, init_cache, init_paged_cache,
                           supports_cached_prefill, supports_paged_cache)
 from .block_pool import BlockPool
 from .prefix import PrefixCache
+from .resilience import (AdmissionConfig, ChaosInjector, Watchdog,
+                         restore_engine, snapshot_engine)
 from .sampling import sample_tokens_keyed, sample_tokens_keyed_jit
 from .scheduler import Request, Scheduler, SlotState
 
@@ -84,6 +95,16 @@ class ServeEngine:
     ``decode_impl`` "flash" (default) or "dense" (XLA softmax oracle);
     ``attn_shards`` splits the *dense* decode cache into LSE-merged
     segments; ``interpret=None`` auto-selects Pallas interpret off-TPU.
+
+    Resilience knobs: ``max_queue`` bounds the queue (0 = unbounded),
+    ``admission`` picks the overload policy ("fifo" sheds the incoming
+    request, "deadline" sheds the least-slack one), ``admit_lookahead``
+    lets placeable requests jump a pool-blocked head (0 = strict FIFO)
+    under ``starvation_limit``; ``watchdog=False`` disables fault
+    quarantine (the pre-resilience engine, kept for the chaos
+    regression tests); ``stall_patience`` is the consecutive
+    planned-but-no-progress steps before a slot aborts; ``chaos`` takes
+    a :class:`~.resilience.ChaosInjector`.
     """
 
     def __init__(self, cfg: ModelConfig, params=None, *,
@@ -93,7 +114,11 @@ class ServeEngine:
                  interpret: bool | None = None, seed: int = 0,
                  kv_layout: str = "auto", block_size: int = 16,
                  num_blocks: int = 0, token_budget: int = 0,
-                 prefix_cache: bool = True, unified: bool = True):
+                 prefix_cache: bool = True, unified: bool = True,
+                 max_queue: int = 0, admission: str = "fifo",
+                 admit_lookahead: int = 4, starvation_limit: int = 8,
+                 watchdog: bool = True, stall_patience: int = 8,
+                 chaos: ChaosInjector | None = None):
         self.cfg = cfg
         self.num_slots = num_slots
         self.max_len = max_len
@@ -135,10 +160,18 @@ class ServeEngine:
             self.prefix = None
             self.cache = init_cache(cfg, num_slots, max_len)
 
-        self.sched = Scheduler(num_slots, max_len,
-                               prefill_chunk=self.prefill_chunk,
-                               token_budget=token_budget, unified=unified)
+        self.sched = Scheduler(
+            num_slots, max_len, prefill_chunk=self.prefill_chunk,
+            token_budget=token_budget, unified=unified,
+            admission=AdmissionConfig(
+                max_queue=max_queue, policy=admission,
+                lookahead=admit_lookahead,
+                starvation_limit=starvation_limit))
         self.sched.on_retire = self._on_retire
+        self.watchdog = Watchdog(stall_patience) if watchdog else None
+        self.chaos = chaos
+        self._seed = seed
+        self._snap_mgrs: dict[str, Any] = {}
         self._base_key = jax.random.PRNGKey(seed)
         self._next_rid = 0
         self.stats: dict[str, Any] = {
@@ -149,7 +182,13 @@ class ServeEngine:
             "admitted": 0, "retired": 0, "steps": 0,
             "stalled_decode_steps": 0, "cow_copies": 0,
             "admission_backoffs": 0,
-            "pool_block_steps": 0, "live_token_steps": 0}
+            "pool_block_steps": 0, "live_token_steps": 0,
+            "chaos_delay_s": 0.0, "snapshots": 0,
+            # reason-keyed terminal counters, aliased from the
+            # scheduler (single source; mutated in place)
+            "rejected_by_reason": self.sched.outcomes["rejected"],
+            "shed_by_reason": self.sched.outcomes["shed"],
+            "aborted_by_reason": self.sched.outcomes["aborted"]}
 
         bs = block_size
         dec_kw = dict(attn_impl=decode_impl, attn_shards=attn_shards,
@@ -163,28 +202,40 @@ class ServeEngine:
                 return {"frame_embeds": frames}
             return {"tokens": tok}
 
-        def decode_fn(params, cache, tok, pos_t, active, key, rids,
-                      counts, temps, topk):
+        def _sample_guarded(logits, poison, key, rids, counts, temps, topk):
+            # chaos NaN lands here (post-attention, pre-sampler — the
+            # observable effect of a corrupted KV page); the per-row
+            # finite mask travels back so the host can quarantine the
+            # poisoned row without a second device round trip
+            logits = logits.astype(jnp.float32)
+            logits = jnp.where(poison[:, None], jnp.nan, logits)
+            finite = jnp.all(jnp.isfinite(logits), axis=-1)
+            nxt = sample_tokens_keyed(key, rids, counts, logits, temps,
+                                      topk)
+            return nxt, logits, finite
+
+        def decode_fn(params, cache, tok, pos_t, active, poison, key,
+                      rids, counts, temps, topk):
             frames = jnp.zeros((num_slots, cfg.d_model), jnp.dtype(cfg.dtype))
             logits, new_cache = decode_step(
                 params, cfg, cache, _decode_batch(tok, frames), pos_t,
                 **dec_kw)
             new_cache = _mask_rows(new_cache, cache, active)
-            nxt = sample_tokens_keyed(key, rids, counts,
-                                      logits.astype(jnp.float32), temps, topk)
-            return nxt, logits, new_cache
+            nxt, logits, finite = _sample_guarded(
+                logits, poison, key, rids, counts, temps, topk)
+            return nxt, logits, finite, new_cache
 
-        def decode_paged_fn(params, cache, tok, pos_t, tables, active, key,
-                            rids, counts, temps, topk):
+        def decode_paged_fn(params, cache, tok, pos_t, tables, active,
+                            poison, key, rids, counts, temps, topk):
             frames = jnp.zeros((num_slots, cfg.d_model), jnp.dtype(cfg.dtype))
             logits, new_cache = decode_step(
                 params, cfg, cache, _decode_batch(tok, frames), pos_t,
                 attn_impl=decode_impl, block_k=block_k,
                 interpret=interpret, block_tables=tables, block_size=bs,
                 write_mask=active)
-            nxt = sample_tokens_keyed(key, rids, counts,
-                                      logits.astype(jnp.float32), temps, topk)
-            return nxt, logits, new_cache
+            nxt, logits, finite = _sample_guarded(
+                logits, poison, key, rids, counts, temps, topk)
+            return nxt, logits, finite, new_cache
 
         def _chunk_batch(tokens, frames):
             batch = {"tokens": tokens}
@@ -288,16 +339,22 @@ class ServeEngine:
 
     # ------------------------------------------------------------- #
     def submit(self, tokens, *, max_new: int = 16, temperature: float = 0.0,
-               top_k: int = 0, eos_id: int = -1, frames=None) -> int:
+               top_k: int = 0, eos_id: int = -1, frames=None,
+               deadline_steps: int = -1, priority: int = 0) -> int:
         """Queue one request; returns its request id.  Oversized
-        requests land in the results dict with status="rejected"."""
+        requests land in the results dict with status="rejected";
+        overload victims (bounded queue) with status="shed".
+        ``deadline_steps`` is the engine-step budget the request must
+        finish within (-1 = none); lower ``priority`` sheds first."""
         rid = self._next_rid
         self._next_rid += 1
+        self.sched.clock = self.stats["steps"]
         self.sched.submit(Request(
             rid=rid, tokens=np.asarray(tokens, np.int32), max_new=max_new,
             temperature=temperature, top_k=top_k, eos_id=eos_id,
             frames=None if frames is None
-            else np.asarray(frames, np.float32)))
+            else np.asarray(frames, np.float32),
+            deadline_steps=deadline_steps, priority=priority))
         return rid
 
     # ------------------------------------------------------------- #
@@ -348,6 +405,8 @@ class ServeEngine:
 
     def _on_retire(self, slot: int, st: SlotState) -> None:
         self.stats["retired"] += 1
+        if self.watchdog is not None:
+            self.watchdog.clear(slot)
         if self.layout == "paged":
             self.pool.release(st.table)
             if st.spare is not None:
@@ -394,9 +453,12 @@ class ServeEngine:
             jnp.asarray([req.top_k], jnp.int32))
         return int(np.asarray(tok)[0])
 
-    def _run_prefill_chunk(self, slot: int, start: int, n: int) -> None:
+    def _run_prefill_chunk(self, slot: int, start: int, n: int) -> bool:
         """Prefill prompt tokens [start, start+n) of one slot; on the
-        final chunk, sample the first token and start decoding."""
+        final chunk, sample the first token and start decoding.
+        Returns False when the slot was aborted (non-finite final
+        logits — the poisoned request is quarantined before its blocks
+        reach the prefix cache)."""
         sc = self.sched
         st = sc.slots[slot]
         req = st.request
@@ -429,21 +491,32 @@ class ServeEngine:
         self.stats["prefill_steps"] += 1
         self.stats["prefill_chunk_tokens"] += n
         if with_logits:
+            row = np.asarray(logits[0, n - 1], np.float32)
+            if self.chaos is not None \
+                    and self.chaos.poisons(req.rid, self.stats["steps"]):
+                row = np.full_like(row, np.nan)
+            if self.watchdog is not None and not np.isfinite(row).all():
+                self.stats["prefill_s"] += time.perf_counter() - t0
+                sc.abort(slot, "non-finite prefill logits at step "
+                         f"{self.stats['steps']}", kind="nan_logits")
+                return False
             if self.layout == "paged" and self.prefix is not None:
                 nfull = Tp // self.block_size
                 if nfull:
                     self.prefix.insert(req.tokens[:nfull * self.block_size],
                                        st.table[:nfull], self.pool)
-            first = self._first_token(req, logits[0, n - 1])
+            first = self._first_token(req, row)
             self.stats["prefill_tokens"] += Tp
             sc.start(slot, first)
         self.stats["prefill_s"] += time.perf_counter() - t0
+        return True
 
-    def _prefill_replay(self, slot: int, req: Request) -> None:
+    def _prefill_replay(self, slot: int, req: Request) -> bool:
         """Recurrent-mixer fallback (dense layout): feed the whole
         prompt through the decode path one token at a time at admission,
         updates masked to this slot's row.  Audio prompts replay their
-        *real* frame embeddings."""
+        *real* frame embeddings.  Returns False when the slot was
+        aborted (non-finite final logits)."""
         t0 = time.perf_counter()
         B = self.num_slots
         onehot = jnp.zeros((B,), bool).at[slot].set(True)
@@ -458,26 +531,41 @@ class ServeEngine:
             logits, self.cache = self._replay_fn(
                 self.params, self.cache, tok, frames, pos_t, onehot)
             self.stats["prefill_decode_steps"] += 1
-        first = self._first_token(req, logits[slot])
+        row = np.asarray(logits[slot], np.float32)
+        if self.chaos is not None \
+                and self.chaos.poisons(req.rid, self.stats["steps"]):
+            row = np.full_like(row, np.nan)
         self.stats["prefill_tokens"] += req.prompt_len
         self.stats["prefill_chunk_tokens"] += req.prompt_len
         self.stats["prefill_s"] += time.perf_counter() - t0
-        self.sched.start(slot, first)
+        if self.watchdog is not None and not np.isfinite(row).all():
+            self.sched.abort(slot, "non-finite prefill logits at step "
+                             f"{self.stats['steps']}", kind="nan_logits")
+            return False
+        self.sched.start(slot, self._first_token(req, row))
+        return True
 
     # ------------------------------------------------------------- #
-    def _decode_once(self, decode_slots: list[int]) -> None:
+    def _decode_once(self, decode_slots: list[int]) -> list[int]:
+        """One batched decode step; poisoned rows (non-finite logits)
+        are quarantined — only healthy slots record their token.
+        Returns the healthy slots."""
         sc = self.sched
         B = self.num_slots
         dmask = np.zeros((B,), bool)
         dmask[decode_slots] = True
         tok = np.zeros((B,), np.int32)
+        poison = np.zeros((B,), bool)
         for s in decode_slots:
             tok[s] = sc.slots[s].generated[-1]
+            if self.chaos is not None and self.chaos.poisons(
+                    sc.slots[s].request.rid, self.stats["steps"]):
+                poison[s] = True
         lengths = np.where(dmask, sc.lengths(), 0).astype(np.int32)
         t0 = time.perf_counter()
         common = (jnp.asarray(tok), jnp.asarray(lengths))
-        tail = (self._base_key, jnp.asarray(sc.rids()),
-                jnp.asarray(sc.sample_counts()),
+        tail = (jnp.asarray(poison), self._base_key,
+                jnp.asarray(sc.rids()), jnp.asarray(sc.sample_counts()),
                 jnp.asarray(sc.temperatures()), jnp.asarray(sc.top_ks()))
         if self.layout == "paged":
             # safety net: a decode write must never land in a shared
@@ -488,24 +576,43 @@ class ServeEngine:
             for s in decode_slots:
                 self._ensure_private(
                     sc.slots[s], sc.slots[s].length // self.block_size)
-            nxt, _, self.cache = self._decode_paged_fn(
+            nxt, _, finite, self.cache = self._decode_paged_fn(
                 self.params, self.cache, *common,
                 jnp.asarray(self._tables_matrix()), jnp.asarray(dmask),
                 *tail)
         else:
-            nxt, _, self.cache = self._decode_fn(
+            nxt, _, finite, self.cache = self._decode_fn(
                 self.params, self.cache, *common, jnp.asarray(dmask), *tail)
         nxt = np.asarray(jax.block_until_ready(nxt))
         self.stats["decode_s"] += time.perf_counter() - t0
         self.stats["decode_steps"] += 1
-        self.stats["decode_tokens"] += len(decode_slots)
-        sc.record(nxt, decode_slots)
+        if self.watchdog is None:
+            healthy = list(decode_slots)
+        else:
+            finite = np.asarray(finite)
+            healthy = [s for s in decode_slots if finite[s]]
+            for s in decode_slots:
+                if not finite[s]:
+                    sc.abort(s, "non-finite decode logits at step "
+                             f"{self.stats['steps']}", kind="nan_logits")
+        self.stats["decode_tokens"] += len(healthy)
+        sc.record(nxt, healthy)
+        return healthy
 
     # ------------------------------------------------------------- #
     def step(self) -> bool:
         """One engine step: admit what fits, spend the token budget on
-        prefill chunks + decode tokens.  Returns False when idle."""
+        prefill chunks + decode tokens, then run the fault watchdog.
+        Returns False when idle."""
         sc = self.sched
+        step_no = self.stats["steps"]
+        sc.clock = step_no
+        if self.chaos is not None:
+            self.chaos.maybe_kill(step_no)
+            d = self.chaos.delay(step_no)
+            if d > 0:
+                time.sleep(d)
+                self.stats["chaos_delay_s"] += d
         placed = sc.admit(self._place)
         self.stats["admitted"] += len(placed)
         if not self.cached_prefill:
@@ -519,19 +626,42 @@ class ServeEngine:
             req = sc.queue.popleft()
             nk = -(-(req.prompt_len + req.max_new - 1) // self.block_size)
             sc.reject(req, f"working set of {nk} KV blocks exceeds the "
-                      f"{self.num_blocks}-block pool")
+                      f"{self.num_blocks}-block pool",
+                      kind="pool_unplaceable")
         n_ready = sum(1 for s in sc.active_slots
                       if sc.slots[s].decode_ready)
         prefill_items, decode_slots = sc.plan_step()
+        planned = {s for s, _, _ in prefill_items} | set(decode_slots)
+        if self.chaos is not None:
+            # a stuck slot's planned work is dropped before execution
+            # (a wedged device callback) — the watchdog must catch it
+            def _stuck(s):
+                return self.chaos.is_stuck(sc.slots[s].request.rid,
+                                           step_no)
+            prefill_items = [it for it in prefill_items
+                             if not _stuck(it[0])]
+            decode_slots = [s for s in decode_slots if not _stuck(s)]
+        progressed: set[int] = set()
         for slot, start, n in prefill_items:
-            self._run_prefill_chunk(slot, start, n)
+            if self._run_prefill_chunk(slot, start, n):
+                progressed.add(slot)
+            else:
+                planned.discard(slot)       # aborted, not stalled
         if decode_slots:
-            self._decode_once(decode_slots)
+            healthy = self._decode_once(decode_slots)
+            progressed |= set(healthy)
+            planned -= set(decode_slots) - set(healthy)
         elif n_ready:
             # decode-ready slots got no token this step (serial mode
             # draining a long prefill) — the stall the unified budget
             # eliminates
             self.stats["stalled_decode_steps"] += 1
+        if self.watchdog is not None:
+            for slot, n_stalled in self.watchdog.observe(planned,
+                                                         progressed):
+                sc.abort(slot, f"no scheduler progress for {n_stalled} "
+                         f"planned steps (stuck slot {slot})",
+                         kind="stall")
         self.stats["steps"] += 1
         self.stats["live_token_steps"] += sum(
             sc.slots[s].length for s in sc.active_slots)
@@ -539,14 +669,35 @@ class ServeEngine:
             self.stats["pool_block_steps"] += self.pool.allocated_count
         return sc.has_work
 
-    def run(self, max_steps: int = 100_000) -> dict[int, dict[str, Any]]:
+    def run(self, max_steps: int = 100_000, *, snapshot_every: int = 0,
+            snapshot_dir: str | None = None, drain_at: int = -1,
+            ) -> dict[int, dict[str, Any]]:
         """Drain the queue; returns {rid: {"status", "tokens",
-        "prompt_len", ...}} — rejected requests carry status="rejected"
-        and an empty token array."""
+        "prompt_len", ...}} — every submitted rid is present with
+        status "ok", "rejected", "shed", or "aborted" (hitting
+        ``max_steps`` aborts the in-flight requests with their partial
+        tokens rather than dropping them).  ``snapshot_every`` persists
+        the engine to ``snapshot_dir`` every N steps; ``drain_at``
+        stops at that engine step with a final snapshot (orderly
+        drain — a restored engine resumes the in-flight work)."""
+        if (snapshot_every > 0 or drain_at >= 0) and not snapshot_dir:
+            raise ValueError("snapshot_every/drain_at require "
+                             "snapshot_dir")
         steps = 0
-        while self.step():
+        while True:
+            if drain_at >= 0 and self.stats["steps"] >= drain_at \
+                    and self.sched.has_work:
+                self.snapshot(snapshot_dir)
+                break
+            more = self.step()
             steps += 1
+            if snapshot_every > 0 and steps % snapshot_every == 0:
+                self.snapshot(snapshot_dir)
+            if not more:
+                break
             if steps >= max_steps:
+                self.sched.abort_all(
+                    f"engine step cap {max_steps} reached")
                 break
         return self.sched.finished
 
@@ -561,13 +712,13 @@ class ServeEngine:
         zi = jnp.zeros((B,), jnp.int32)
         zmask = jnp.zeros((B,), bool)
         zf = jnp.zeros((B,), jnp.float32)
-        tail = (self._base_key, zi, zi, zf, zi)
+        tail = (zmask, self._base_key, zi, zi, zf, zi)
         if self.layout == "paged":
             ztab = jnp.zeros((B, self._nk), jnp.int32)
-            _, _, self.cache = self._decode_paged_fn(
+            _, _, _, self.cache = self._decode_paged_fn(
                 self.params, self.cache, zi, zi, ztab, zmask, *tail)
         else:
-            _, _, self.cache = self._decode_fn(
+            _, _, _, self.cache = self._decode_fn(
                 self.params, self.cache, zi, zi, zmask, *tail)
         sample_tokens_keyed_jit(
             self._base_key, jnp.zeros((1,), jnp.int32),
@@ -589,6 +740,47 @@ class ServeEngine:
         for is_last, view in set(self._prefill_buckets(prompt_len or C)):
             _, self.cache = self._prefill_fn(is_last, view)(
                 self.params, self.cache, lead, *zchunk)
+
+    # ------------------------------------------------------------- #
+    def _snapshot_manager(self, directory: str):
+        if directory not in self._snap_mgrs:
+            from repro.checkpoint import CheckpointManager
+            self._snap_mgrs[directory] = CheckpointManager(directory)
+        return self._snap_mgrs[directory]
+
+    def snapshot(self, directory: str) -> int:
+        """Persist the full engine state (KV cache, scheduler, block
+        pool, prefix trie, per-request RNG counters) atomically; see
+        :func:`~.resilience.snapshot_engine`.  Returns the snapshot's
+        step id."""
+        step = snapshot_engine(self, directory)
+        self.stats["snapshots"] += 1
+        return step
+
+    def restore_snapshot(self, directory: str,
+                         step: int | None = None) -> int:
+        """Resume from a snapshot taken by an engine with identical
+        geometry (call after construction + :meth:`warmup`; warmup's
+        all-inactive calls leave cache *values* untouched, so the order
+        does not matter).  Returns the restored step id."""
+        return restore_engine(self, directory, step)
+
+    def latency_percentiles(self, statuses=("ok",)) -> dict[str, float]:
+        """p50/p99 request latency (submit -> terminal entry) over
+        ``finished`` entries with the given statuses, in engine steps
+        and wall seconds."""
+        fin = [e for e in self.sched.finished.values()
+               if e["status"] in statuses and "latency_steps" in e]
+        if not fin:
+            return {"n": 0, "p50_steps": 0.0, "p99_steps": 0.0,
+                    "p50_s": 0.0, "p99_s": 0.0}
+        steps = np.asarray([e["latency_steps"] for e in fin], np.float64)
+        secs = np.asarray([e["latency_s"] for e in fin], np.float64)
+        return {"n": len(fin),
+                "p50_steps": float(np.percentile(steps, 50)),
+                "p99_steps": float(np.percentile(steps, 99)),
+                "p50_s": float(np.percentile(secs, 50)),
+                "p99_s": float(np.percentile(secs, 99))}
 
     # ------------------------------------------------------------- #
     def kv_cache_bytes(self) -> int:

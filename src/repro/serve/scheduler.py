@@ -1,9 +1,9 @@
 """Token-budget scheduler: slot admission, unified prefill/decode planning.
 
 The engine owns ``num_slots`` request slots over a shared KV store (paged
-block pool or dense stripes).  Requests queue FIFO; free slots admit the
-head of the queue (``admit`` consults a placement callback so the engine
-can refuse — pool exhaustion — without losing FIFO order), and a slot
+block pool or dense stripes).  Requests queue FIFO; free slots admit from
+the queue head (``admit`` consults a placement callback so the engine
+can refuse — pool exhaustion — without losing a request), and a slot
 frees the moment its request finishes (EOS or ``max_new``).
 
 Each engine step is planned as **one token budget** spent across pending
@@ -14,10 +14,17 @@ in-flight decodes.  ``unified=False`` restores the serial discipline
 (drain all pending prefill before any decode) as the stall baseline the
 serve bench measures against.
 
-Oversized requests (``prompt_len + max_new > max_len``) are *rejected*,
-not raised: they appear in ``finished`` with ``status="rejected"`` so
-one bad request cannot kill the engine loop; completed requests carry
-``status="ok"``.
+Resilience (DESIGN.md §Serving-resilience): the queue is bounded and
+overload sheds by deadline slack under ``AdmissionConfig``'s
+``"deadline"`` policy (strict ``"fifo"`` is the parity baseline), a
+blocked head can be jumped by up to ``lookahead`` placeable requests
+under a starvation guard, and faults abort individual requests without
+touching the rest.  Every submitted request terminates in ``finished``
+with one of four statuses — ``"ok"``, ``"rejected"`` (malformed or
+unplaceable), ``"shed"`` (overload victim), ``"aborted"`` (fault
+quarantine or engine step cap) — so one bad request can never kill the
+engine loop *and* no request is ever silently dropped.  Per-status
+reason-keyed counters live in ``outcomes``.
 
 Host-side bookkeeping only — all array work lives in the engine.
 """
@@ -25,10 +32,13 @@ Host-side bookkeeping only — all array work lives in the engine.
 from __future__ import annotations
 
 import dataclasses
+import time
 from collections import deque
 from typing import Any, Callable
 
 import numpy as np
+
+from .resilience import AdmissionConfig, deadline_slack, shed_key
 
 __all__ = ["Request", "SlotState", "Scheduler"]
 
@@ -44,6 +54,14 @@ class Request:
     # audio-frontend prompts: per-token frame embeddings (Tp, d_model);
     # ``tokens`` still carries the codec ids for bookkeeping
     frames: np.ndarray | None = None
+    # resilience: engine steps from submission within which the request
+    # must finish (-1 = no deadline) and its shed priority — lower
+    # priority sheds first under overload
+    deadline_steps: int = -1
+    priority: int = 0
+    # stamped by Scheduler.submit (engine-step clock + wall clock)
+    submit_step: int = 0
+    submit_s: float = 0.0
 
     @property
     def prompt_len(self) -> int:
@@ -93,68 +111,202 @@ class Scheduler:
     placement callback; ``plan_step()`` splits the budget; ``record()``
     appends decode tokens and retires finished slots.  An engine hooks
     ``on_retire(slot, state)`` to release KV blocks.
+
+    ``admission`` bounds the queue and selects the overload policy
+    (see :class:`~.resilience.AdmissionConfig`); ``clock`` is the
+    engine-step counter the deadline math runs on (the engine advances
+    it every step).
     """
 
     def __init__(self, num_slots: int, max_len: int, *,
                  prefill_chunk: int = 64, token_budget: int = 0,
-                 unified: bool = True):
+                 unified: bool = True,
+                 admission: AdmissionConfig | None = None):
         self.num_slots = num_slots
         self.max_len = max_len
         self.prefill_chunk = prefill_chunk
         self.token_budget = token_budget or (num_slots + prefill_chunk)
         self.unified = unified
+        self.admission = admission or AdmissionConfig()
         self.queue: deque[Request] = deque()
         self.slots: list[SlotState | None] = [None] * num_slots
         self.finished: dict[int, dict[str, Any]] = {}
         self.on_retire: Callable[[int, SlotState], None] | None = None
+        self.clock = 0
+        # per-status, reason-keyed terminal counters (engine.stats
+        # aliases these dicts — mutate in place, never rebind)
+        self.outcomes: dict[str, dict[str, int]] = {
+            "rejected": {}, "shed": {}, "aborted": {}}
+        self.duplicates: list[dict[str, Any]] = []
+        # look-ahead starvation guard: how often the current blocked
+        # head has been jumped, and who that head is
+        self._head_rid: int | None = None
+        self._head_skips = 0
+
+    # ------------------------------------------------------------- #
+    def _count(self, status: str, kind: str) -> None:
+        c = self.outcomes[status]
+        c[kind] = c.get(kind, 0) + 1
+
+    def _entry(self, req: Request, status: str, tokens,
+               reason: str | None = None) -> dict[str, Any]:
+        latency = self.clock - req.submit_step
+        e: dict[str, Any] = {
+            "status": status,
+            "tokens": np.asarray(tokens, np.int32),
+            "prompt_len": req.prompt_len,
+            "submit_step": req.submit_step, "finish_step": self.clock,
+            "latency_steps": latency,
+            "latency_s": time.perf_counter() - req.submit_s,
+            "deadline_steps": req.deadline_steps,
+            # only a completed request can meet its deadline; goodput
+            # counts (status ok) x (within deadline, if any)
+            "deadline_met": status == "ok"
+            and (req.deadline_steps < 0 or latency <= req.deadline_steps),
+        }
+        if reason is not None:
+            e["reason"] = reason
+        return e
+
+    def _tracks(self, rid: int) -> bool:
+        return rid in self.finished \
+            or any(r.rid == rid for r in self.queue) \
+            or any(st is not None and st.request.rid == rid
+                   for st in self.slots)
 
     # ------------------------------------------------------------- #
     def submit(self, req: Request) -> bool:
-        """Queue one request; malformed/oversized requests are recorded
-        as rejected in ``finished`` (returns False) instead of raising —
-        a bad request must not kill the engine loop."""
+        """Queue one request; malformed/oversized/overflow requests are
+        recorded in ``finished`` (returns False) instead of raising — a
+        bad request must not kill the engine loop.  A duplicate rid is
+        refused *without* touching ``finished`` (it would clobber the
+        earlier request's entry) and logged in ``duplicates``."""
+        req.submit_step = self.clock
+        req.submit_s = time.perf_counter()
+        if self._tracks(req.rid):
+            self._count("rejected", "duplicate_rid")
+            self.duplicates.append({
+                "rid": req.rid,
+                "reason": f"duplicate rid {req.rid}: a request with this "
+                          "id is already queued, active, or finished"})
+            return False
         if req.prompt_len == 0:
-            self.reject(req, "empty prompt")
+            self.reject(req, "empty prompt", kind="empty_prompt")
         elif req.max_new <= 0:
-            self.reject(req, f"non-positive max_new {req.max_new}")
+            self.reject(req, f"non-positive max_new {req.max_new}",
+                        kind="bad_max_new")
         elif req.prompt_len + req.max_new > self.max_len:
             self.reject(req, f"prompt {req.prompt_len} + max_new "
-                        f"{req.max_new} exceeds max_len {self.max_len}")
+                        f"{req.max_new} exceeds max_len {self.max_len}",
+                        kind="oversized")
+        elif self.admission.max_queue \
+                and len(self.queue) >= self.admission.max_queue:
+            return self._overflow(req)
         else:
             self.queue.append(req)
             return True
         return False
 
-    def reject(self, req: Request, reason: str) -> None:
+    def _overflow(self, req: Request) -> bool:
+        """Queue full.  FIFO policy sheds the incoming request (strict
+        arrival order — the parity baseline); deadline policy sheds the
+        queued-or-incoming request with the worst ``shed_key`` (lowest
+        priority, then least deadline slack)."""
+        if self.admission.policy != "deadline":
+            self.shed(req, f"queue full ({len(self.queue)} waiting)",
+                      kind="queue_full")
+            return False
+        victim = min([*self.queue, req],
+                     key=lambda r: shed_key(r, self.clock,
+                                            self.prefill_chunk))
+        slack = deadline_slack(victim, self.clock, self.prefill_chunk)
+        self.shed(victim, f"queue full ({len(self.queue)} waiting): "
+                  f"least-slack victim (priority {victim.priority}, "
+                  f"slack {slack})", kind="queue_full")
+        if victim is req:
+            return False
+        self.queue.remove(victim)
+        self.queue.append(req)
+        return True
+
+    def reject(self, req: Request, reason: str,
+               kind: str = "unplaceable") -> None:
         """Record ``req`` as rejected in ``finished`` (empty tokens)."""
-        self.finished[req.rid] = {
-            "status": "rejected", "reason": reason,
-            "tokens": np.zeros((0,), np.int32),
-            "prompt_len": req.prompt_len}
+        self._count("rejected", kind)
+        self.finished[req.rid] = self._entry(
+            req, "rejected", np.zeros((0,), np.int32), reason)
+
+    def shed(self, req: Request, reason: str, kind: str) -> None:
+        """Record ``req`` as an overload-shedding victim."""
+        self._count("shed", kind)
+        self.finished[req.rid] = self._entry(
+            req, "shed", np.zeros((0,), np.int32), reason)
+
+    def _shed_expired(self) -> None:
+        """Deadline policy: drop queued requests whose deadline is
+        unmeetable even if admitted this instant (optimistic estimate —
+        a shed request provably could not have finished in time)."""
+        keep: deque[Request] = deque()
+        while self.queue:
+            r = self.queue.popleft()
+            slack = deadline_slack(r, self.clock, self.prefill_chunk)
+            if slack < 0:
+                self.shed(r, "deadline unmeetable in queue "
+                          f"(slack {slack} steps at admission)",
+                          kind="deadline_expired")
+            else:
+                keep.append(r)
+        self.queue = keep
 
     def admit(self, place: Callable[[Request], dict | None] | None = None,
               ) -> list[tuple[int, Request]]:
-        """Fill free slots from the queue head.  ``place`` reserves
+        """Fill free slots from the queue.  ``place`` reserves
         engine-side resources for a request and returns placement info
         ({"table": [...], "cached": m, "start": s, "spare": b} for the
-        paged layout, {} for dense) or None — meaning the request cannot
-        be placed *now* (pool exhausted); admission stops there to keep
-        FIFO order (backoff, retried next step)."""
-        placed = []
-        for s in range(self.num_slots):
-            if self.slots[s] is not None or not self.queue:
-                continue
-            req = self.queue[0]
+        paged layout, {} for dense) or None — the request cannot be
+        placed *now* (pool exhausted) and stays queued in order.
+
+        With ``admission.lookahead == 0`` a blocked request stops
+        admission entirely (strict FIFO: head-of-line blocking).  With
+        lookahead N, up to N requests past the first blocked one are
+        probed, so a small request behind a pool-hogging head still
+        admits — bounded by the starvation guard: once the same head
+        has been jumped ``starvation_limit`` times, look-ahead pauses
+        until that head places (or sheds), so it cannot starve."""
+        if self.admission.policy == "deadline":
+            self._shed_expired()
+        placed: list[tuple[int, Request]] = []
+        free = [s for s in range(self.num_slots) if self.slots[s] is None]
+        lookahead = self.admission.lookahead
+        if self._head_skips >= self.admission.starvation_limit:
+            lookahead = 0
+        blocked: list[Request] = []
+        while free and self.queue and len(blocked) <= lookahead:
+            req = self.queue.popleft()
             info = place(req) if place is not None else {}
             if info is None:
-                break
-            self.queue.popleft()
+                blocked.append(req)
+                continue
+            s = free.pop(0)
             st = SlotState(req, table=list(info.get("table", [])),
                            cached_tokens=int(info.get("cached", 0)),
                            spare=info.get("spare"))
             st.prefilled = st.length = int(info.get("start", 0))
             self.slots[s] = st
             placed.append((s, req))
+        for r in reversed(blocked):
+            self.queue.appendleft(r)
+        # starvation accounting: the head pops first, so any placement
+        # in a call where the head blocked is a jump over it
+        if blocked:
+            head = blocked[0]
+            if head.rid != self._head_rid:
+                self._head_rid, self._head_skips = head.rid, 0
+            if placed:
+                self._head_skips += 1
+        elif self._head_rid is not None \
+                and not any(r.rid == self._head_rid for r in self.queue):
+            self._head_rid, self._head_skips = None, 0
         return placed
 
     # ------------------------------------------------------------- #
@@ -258,6 +410,34 @@ class Scheduler:
                 retired.append(s)
         return retired
 
+    def abort(self, slot: int, reason: str, kind: str = "fault") -> None:
+        """Quarantine one active request: record it as ``"aborted"``
+        with the tokens generated so far, release its KV (``on_retire``)
+        and free the slot.  Healthy slots are untouched — per-request
+        keyed sampling keeps their token streams bitwise identical."""
+        st = self.slots[slot]
+        assert st is not None, f"abort of idle slot {slot}"
+        r = st.request
+        self._count("aborted", kind)
+        self.finished[r.rid] = self._entry(
+            r, "aborted", np.asarray(st.generated, np.int32), reason)
+        if self.on_retire is not None:
+            self.on_retire(slot, st)
+        self.slots[slot] = None
+
+    def abort_all(self, reason: str, kind: str = "step_cap") -> None:
+        """Abort every in-flight and queued request (engine step cap /
+        shutdown): partial tokens are preserved, nothing is silently
+        dropped from ``finished``."""
+        for s in list(self.active_slots):
+            self.abort(s, reason, kind=kind)
+        while self.queue:
+            r = self.queue.popleft()
+            self._count("aborted", kind)
+            self.finished[r.rid] = self._entry(
+                r, "aborted", np.zeros((0,), np.int32),
+                f"{reason} (queued, never admitted)")
+
     def _maybe_retire(self, slot: int) -> bool:
         st = self.slots[slot]
         if not st.done:
@@ -266,9 +446,7 @@ class Scheduler:
         r = st.request
         if r.eos_id >= 0 and r.eos_id in gen:
             gen = gen[:gen.index(r.eos_id) + 1]
-        self.finished[r.rid] = {"status": "ok",
-                                "tokens": np.asarray(gen, np.int32),
-                                "prompt_len": r.prompt_len}
+        self.finished[r.rid] = self._entry(r, "ok", gen)
         if self.on_retire is not None:
             self.on_retire(slot, st)
         self.slots[slot] = None

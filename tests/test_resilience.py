@@ -1,0 +1,504 @@
+"""Serving-resilience tests (DESIGN.md §Serving-resilience): bounded
+deadline-aware admission (strict-FIFO backoff, look-ahead + starvation
+guard, shed-order correctness — properties via hypothesis where
+available, fixed-seed fallback otherwise), fault-quarantine chaos
+regressions (NaN logits, stuck slots) that fail on the pre-fix engine,
+engine snapshot/kill/drain-restore bitwise parity, the step-cap and
+duplicate-rid satellite bugfixes, and the outcome/latency
+observability counters."""
+
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+from repro.configs import get_config, reduce_for_smoke
+from repro.serve import (AdmissionConfig, ChaosInjector, EngineKilled,
+                         Request, Scheduler, ServeEngine, parse_chaos)
+from repro.serve.resilience import (deadline_slack, estimate_steps,
+                                    shed_key)
+
+
+def _smoke(arch="starcoder2_3b"):
+    return reduce_for_smoke(get_config(arch))
+
+
+def _req(rid, n=8, max_new=4, **kw):
+    return Request(rid=rid, tokens=np.arange(n, dtype=np.int32),
+                   max_new=max_new, **kw)
+
+
+# ===================================================================== #
+# admission: config + slack math
+# ===================================================================== #
+def test_admission_config_validates_policy():
+    with pytest.raises(ValueError):
+        AdmissionConfig(policy="lifo")
+
+
+def test_estimate_and_slack():
+    # 2 prompt chunks (the last yields token 1) + 3 decode steps
+    assert estimate_steps(prompt_len=10, max_new=4, prefill_chunk=8) == 5
+    r = _req(0, n=10, max_new=4, deadline_steps=9)
+    r.submit_step = 2
+    assert deadline_slack(r, clock=2, prefill_chunk=8) == 4
+    assert deadline_slack(r, clock=7, prefill_chunk=8) == -1
+    r2 = _req(1, n=10, max_new=4)            # no deadline: infinite slack
+    assert deadline_slack(r2, 100, 8) == float("inf")
+
+
+def test_shed_order_priority_then_slack_then_newest():
+    # lowest priority sheds first; among equals, least slack; among
+    # those, the newest arrival (highest rid)
+    a = _req(0, n=8, max_new=4, deadline_steps=30, priority=1)
+    b = _req(1, n=8, max_new=4, deadline_steps=5, priority=0)
+    c = _req(2, n=8, max_new=4, deadline_steps=50, priority=0)
+    d = _req(3, n=8, max_new=4, deadline_steps=5, priority=0)
+    victim = min([a, b, c, d], key=lambda r: shed_key(r, 0, 8))
+    assert victim is d                        # same (0, slack) as b, newer
+
+
+# ===================================================================== #
+# admission: FIFO backoff, look-ahead, starvation guard
+# ===================================================================== #
+def test_strict_fifo_head_blocks_everything():
+    sc = Scheduler(2, 64, admission=AdmissionConfig(lookahead=0))
+    for rid in range(3):
+        assert sc.submit(_req(rid))
+    placed = sc.admit(lambda r: None if r.rid == 0 else {})
+    assert placed == []                       # head-of-line blocking
+    assert [r.rid for r in sc.queue] == [0, 1, 2]
+
+
+def test_lookahead_admits_past_blocked_head():
+    sc = Scheduler(2, 64, admission=AdmissionConfig(lookahead=2))
+    for rid in range(3):
+        sc.submit(_req(rid))
+    placed = sc.admit(lambda r: None if r.rid == 0 else {})
+    assert [r.rid for _, r in placed] == [1, 2]
+    assert [r.rid for r in sc.queue] == [0]   # head keeps its turn
+
+
+def test_lookahead_is_bounded():
+    sc = Scheduler(4, 64, admission=AdmissionConfig(lookahead=1))
+    for rid in range(4):
+        sc.submit(_req(rid))
+    # rids 0 and 1 both blocked: probing stops after lookahead+1
+    # blocked requests, so 2 and 3 stay queued despite free slots
+    placed = sc.admit(lambda r: None if r.rid < 2 else {})
+    assert placed == []
+    assert [r.rid for r in sc.queue] == [0, 1, 2, 3]
+
+
+def test_starvation_guard_pauses_lookahead_until_head_places():
+    sc = Scheduler(1, 64, admission=AdmissionConfig(
+        lookahead=4, starvation_limit=3))
+    for rid in range(8):
+        sc.submit(_req(rid))
+    blocked = lambda r: None if r.rid == 0 else {}
+    jumped = []
+    for _ in range(3):                        # 3 jumps allowed
+        placed = sc.admit(blocked)
+        assert len(placed) == 1
+        jumped.append(placed[0][1].rid)
+        sc.slots[0] = None                    # free the slot (test-only)
+    assert jumped == [1, 2, 3]
+    # guard engaged: look-ahead is suspended, the head blocks admission
+    assert sc.admit(blocked) == []
+    assert sc.admit(blocked) == []
+    # the head becomes placeable: it admits first, guard resets
+    placed = sc.admit(lambda r: {})
+    assert placed[0][1].rid == 0
+    assert sc._head_skips == 0
+
+
+def _admission_invariants_case(seed, n_ops):
+    """Random submit/admit/retire traffic against a random unplaceable
+    set: no request is ever lost or duplicated, the queue bound holds,
+    strict FIFO admits in arrival order, and look-ahead never jumps a
+    request over more than ``lookahead`` older waiting requests."""
+    rng = np.random.default_rng(seed)
+    lookahead = int(rng.integers(0, 4))
+    max_queue = int(rng.integers(0, 6))
+    policy = "deadline" if rng.integers(2) else "fifo"
+    sc = Scheduler(2, 64, admission=AdmissionConfig(
+        max_queue=max_queue, policy=policy, lookahead=lookahead,
+        starvation_limit=4))
+    unplaceable: set[int] = set()
+    place = lambda r: None if r.rid in unplaceable else {}
+    next_rid = 0
+    submitted = []
+    for _ in range(n_ops):
+        op = rng.integers(3)
+        if op == 0:
+            rid = next_rid
+            next_rid += 1
+            if rng.integers(4) == 0:
+                unplaceable.add(rid)
+            sc.submit(_req(rid, n=int(1 + rng.integers(8)),
+                           deadline_steps=int(rng.integers(-1, 20))))
+            submitted.append(rid)
+        elif op == 1:
+            placed = sc.admit(place)
+            queued = [r.rid for r in sc.queue]
+            for _, r in placed:
+                older_waiting = sum(1 for q in queued if q < r.rid)
+                assert older_waiting <= lookahead, \
+                    (r.rid, queued, lookahead)
+            if lookahead == 0 and placed and queued:
+                assert max(r.rid for _, r in placed) < min(queued)
+        else:
+            sc.clock += 1
+            for s in list(sc.active_slots):
+                if rng.integers(2):
+                    sc.abort(s, "test retire", kind="test")
+        if max_queue:
+            assert len(sc.queue) <= max_queue
+    tracked = [r.rid for r in sc.queue] \
+        + [sc.slots[s].request.rid for s in sc.active_slots] \
+        + list(sc.finished)
+    assert len(tracked) == len(set(tracked)), "request double-tracked"
+    assert set(tracked) == set(submitted), "request lost"
+
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=60, deadline=None)
+    @given(seed=st.integers(0, 2**31 - 1), n_ops=st.integers(1, 80))
+    def test_admission_invariants(seed, n_ops):
+        _admission_invariants_case(seed, n_ops)
+else:
+    @pytest.mark.parametrize("seed,n_ops",
+                             [(0, 40), (1, 80), (2, 17), (3, 66),
+                              (4, 80), (5, 55), (6, 29), (7, 80)])
+    def test_admission_invariants(seed, n_ops):
+        """Fixed-seed fallback when hypothesis is unavailable."""
+        _admission_invariants_case(seed, n_ops)
+
+
+# ===================================================================== #
+# admission: overload shedding
+# ===================================================================== #
+def test_fifo_overflow_sheds_incoming():
+    sc = Scheduler(1, 64, admission=AdmissionConfig(max_queue=2))
+    assert sc.submit(_req(0)) and sc.submit(_req(1))
+    assert not sc.submit(_req(2))
+    assert sc.finished[2]["status"] == "shed"
+    assert sc.outcomes["shed"] == {"queue_full": 1}
+    assert [r.rid for r in sc.queue] == [0, 1]
+
+
+def test_deadline_overflow_sheds_least_slack_victim():
+    sc = Scheduler(1, 64, admission=AdmissionConfig(
+        max_queue=2, policy="deadline"))
+    sc.submit(_req(0, deadline_steps=50))
+    sc.submit(_req(1, deadline_steps=6))      # least slack: the victim
+    assert sc.submit(_req(2, deadline_steps=50))   # admitted in its place
+    assert sc.finished[1]["status"] == "shed"
+    assert "least-slack" in sc.finished[1]["reason"]
+    assert [r.rid for r in sc.queue] == [0, 2]
+
+
+def test_deadline_expired_in_queue_sheds_on_admit():
+    sc = Scheduler(1, 64, admission=AdmissionConfig(policy="deadline"))
+    sc.submit(_req(0, n=8, max_new=4, deadline_steps=100))
+    sc.submit(_req(1, n=8, max_new=4, deadline_steps=5))
+    sc.clock = 30                 # rid 1's deadline is long gone
+    placed = sc.admit(lambda r: {})
+    assert [r.rid for _, r in placed] == [0]
+    assert sc.finished[1]["status"] == "shed"
+    assert sc.outcomes["shed"] == {"deadline_expired": 1}
+
+
+# ===================================================================== #
+# satellite bugfixes
+# ===================================================================== #
+def test_duplicate_rid_keeps_earlier_request():
+    sc = Scheduler(1, 64)
+    a, b = _req(7, n=8), _req(7, n=4)
+    assert sc.submit(a) is True
+    assert sc.submit(b) is False              # refused, not clobbered
+    assert len(sc.queue) == 1 and sc.queue[0] is a
+    assert sc.outcomes["rejected"] == {"duplicate_rid": 1}
+    assert sc.duplicates[0]["rid"] == 7
+    # the sharper pre-fix failure: a duplicate of an already-*finished*
+    # rid used to overwrite that request's results entry
+    sc.admit(lambda r: {})
+    sc.start(0, first_token=3)
+    sc.record(np.full((1,), 5), [0])          # runs a to completion...
+    sc.record(np.full((1,), 5), [0])
+    sc.record(np.full((1,), 5), [0])
+    done = sc.finished[7]
+    assert done["status"] == "ok" and len(done["tokens"]) == 4
+    assert sc.submit(_req(7, n=4)) is False
+    assert sc.finished[7] is done             # entry untouched
+
+
+def test_step_cap_aborts_instead_of_dropping():
+    """Pre-fix, run(max_steps) hitting the cap silently dropped every
+    in-flight and queued request from the results dict."""
+    cfg = _smoke()
+    eng = ServeEngine(cfg, num_slots=2, max_len=64, prefill_chunk=16)
+    eng.warmup(prompt_len=32)
+    rng = np.random.default_rng(0)
+    for _ in range(4):
+        eng.submit(rng.integers(0, cfg.vocab_size, 32).astype(np.int32),
+                   max_new=6)
+    res = eng.run(max_steps=4)
+    assert set(res) == {0, 1, 2, 3}, "requests lost at the step cap"
+    statuses = {r: res[r]["status"] for r in res}
+    assert all(v == "aborted" for v in statuses.values())
+    # in-flight slots keep their partial tokens; queued ones never ran
+    assert any("never admitted" in res[r]["reason"] for r in res)
+    assert any(len(res[r]["tokens"]) > 0 for r in res)
+    assert sum(eng.stats["aborted_by_reason"].values()) == 4
+
+
+# ===================================================================== #
+# chaos: fault quarantine
+# ===================================================================== #
+@pytest.fixture(scope="module")
+def chaos_workload():
+    cfg = _smoke()
+    rng = np.random.default_rng(3)
+    prompts = [rng.integers(0, cfg.vocab_size, 24).astype(np.int32)
+               for _ in range(4)]
+    kw = dict(num_slots=2, max_len=48, prefill_chunk=8)
+
+    def run(chaos=None, watchdog=True, **extra):
+        eng = ServeEngine(cfg, chaos=chaos, watchdog=watchdog,
+                          **{**kw, **extra})
+        eng.warmup(prompt_len=24)
+        for p in prompts:
+            eng.submit(p, max_new=5)
+        return eng, eng.run(max_steps=300)
+
+    _, baseline = run()
+    assert all(baseline[r]["status"] == "ok" for r in baseline)
+    return {"cfg": cfg, "prompts": prompts, "run": run,
+            "baseline": baseline}
+
+
+def _assert_healthy_bitwise(results, baseline, poisoned):
+    for r in baseline:
+        if r in poisoned:
+            continue
+        assert results[r]["status"] == "ok", (r, results[r])
+        assert np.array_equal(results[r]["tokens"],
+                              baseline[r]["tokens"]), \
+            f"healthy request {r} diverged from the uninjected run"
+
+
+def test_nan_decode_aborts_only_poisoned(chaos_workload):
+    w = chaos_workload
+    eng, res = w["run"](chaos=ChaosInjector(nan_logits={1: 6}))
+    assert res[1]["status"] == "aborted"
+    assert "non-finite" in res[1]["reason"]
+    _assert_healthy_bitwise(res, w["baseline"], {1})
+    assert eng.stats["aborted_by_reason"] == {"nan_logits": 1}
+
+
+def test_nan_prefill_aborts_before_prefix_insert(chaos_workload):
+    w = chaos_workload
+    # poisoned from step 0: the fault fires on the request's *prefill*
+    # final chunk, and its blocks must not reach the prefix cache
+    eng, res = w["run"](chaos=ChaosInjector(nan_logits={0: 0}))
+    assert res[0]["status"] == "aborted"
+    assert "prefill" in res[0]["reason"]
+    assert len(res[0]["tokens"]) == 0
+    _assert_healthy_bitwise(res, w["baseline"], {0})
+    if eng.prefix is not None:
+        # every pool block referenced by the trie must be the cache's
+        # own (refcount >= 1) — an aborted request leaks nothing
+        for bid in eng.prefix._lru:
+            assert eng.pool.refcount(bid) >= 1
+
+
+def test_nan_served_silently_without_watchdog(chaos_workload):
+    """The pre-fix engine: with the watchdog disabled, the poisoned
+    request completes with status "ok" — NaN-sampled garbage is served
+    to the caller with no signal anything went wrong."""
+    w = chaos_workload
+    _, res = w["run"](chaos=ChaosInjector(nan_logits={1: 6}),
+                      watchdog=False)
+    assert res[1]["status"] == "ok"           # silently corrupt
+
+
+def test_stuck_slot_watchdog_aborts(chaos_workload):
+    w = chaos_workload
+    eng, res = w["run"](chaos=ChaosInjector(stuck={2: 4}),
+                        stall_patience=4)
+    assert res[2]["status"] == "aborted"
+    assert "no scheduler progress" in res[2]["reason"]
+    _assert_healthy_bitwise(res, w["baseline"], {2})
+    assert eng.stats["aborted_by_reason"] == {"stall": 1}
+    # quarantine bounded the damage: the run ended well before the cap
+    assert eng.stats["steps"] < 100
+
+
+def test_chaos_delay_is_counted(chaos_workload):
+    w = chaos_workload
+    eng, res = w["run"](chaos=ChaosInjector(delays={3: 0.05}))
+    assert all(res[r]["status"] == "ok" for r in res)
+    assert eng.stats["chaos_delay_s"] == pytest.approx(0.05)
+
+
+def test_parse_chaos_specs():
+    ch = parse_chaos(["1:6", "3:2"], ["2:8"], ["5:0.25"], kill_at=9)
+    assert ch.nan_logits == {1: 6, 3: 2}
+    assert ch.stuck == {2: 8}
+    assert ch.delays == {5: 0.25}
+    assert ch.kill_at == 9
+    assert parse_chaos([], [], [], kill_at=-1) is None
+
+
+# ===================================================================== #
+# snapshot / restore
+# ===================================================================== #
+@pytest.mark.parametrize("layout", ["paged", "dense"])
+def test_kill_restore_bitwise_parity(tmp_path, layout):
+    """Mid-decode kill -> restore on a fresh engine: every request
+    finishes, tokens bitwise-equal to the uninterrupted run — including
+    temperature sampling (per-request RNG counters restore)."""
+    cfg = _smoke()
+    rng = np.random.default_rng(5)
+    prompts = [rng.integers(0, cfg.vocab_size, 24).astype(np.int32)
+               for _ in range(4)]
+    kw = dict(num_slots=2, max_len=48, prefill_chunk=8, kv_layout=layout)
+
+    def submit_all(eng):
+        for p in prompts:
+            eng.submit(p, max_new=5, temperature=1.0, top_k=8)
+
+    ref = ServeEngine(cfg, **kw)
+    ref.warmup(prompt_len=24)
+    submit_all(ref)
+    expected = ref.run()
+
+    snap = str(tmp_path / f"snap_{layout}")
+    killed = ServeEngine(cfg, chaos=ChaosInjector(kill_at=7), **kw)
+    killed.warmup(prompt_len=24)
+    submit_all(killed)
+    with pytest.raises(EngineKilled):
+        killed.run(snapshot_every=3, snapshot_dir=snap)
+
+    eng = ServeEngine(cfg, **kw)
+    eng.warmup(prompt_len=24)
+    step = eng.restore_snapshot(snap)
+    assert step == 6                          # latest multiple of 3
+    res = eng.run()
+    assert set(res) == set(expected), "request lost across restore"
+    for r in expected:
+        assert res[r]["status"] == "ok"
+        assert np.array_equal(res[r]["tokens"], expected[r]["tokens"]), r
+
+
+def test_drain_restore_finishes_inflight(tmp_path):
+    cfg = _smoke()
+    rng = np.random.default_rng(6)
+    prompts = [rng.integers(0, cfg.vocab_size, 24).astype(np.int32)
+               for _ in range(3)]
+    kw = dict(num_slots=2, max_len=48, prefill_chunk=8)
+    ref = ServeEngine(cfg, **kw)
+    ref.warmup(prompt_len=24)
+    for p in prompts:
+        ref.submit(p, max_new=5)
+    expected = ref.run()
+
+    snap = str(tmp_path / "drain")
+    d = ServeEngine(cfg, **kw)
+    d.warmup(prompt_len=24)
+    for p in prompts:
+        d.submit(p, max_new=5)
+    d.run(drain_at=5, snapshot_dir=snap)
+    assert d.sched.has_work                   # drained mid-flight
+
+    eng = ServeEngine(cfg, **kw)
+    eng.warmup(prompt_len=24)
+    eng.restore_snapshot(snap)
+    res = eng.run()
+    for r in expected:
+        assert np.array_equal(res[r]["tokens"], expected[r]["tokens"]), r
+
+
+def test_restore_rejects_geometry_mismatch(tmp_path):
+    cfg = _smoke()
+    eng = ServeEngine(cfg, num_slots=2, max_len=48, prefill_chunk=8)
+    eng.snapshot(str(tmp_path))
+    other = ServeEngine(cfg, num_slots=4, max_len=48, prefill_chunk=8)
+    with pytest.raises(ValueError, match="geometry"):
+        other.restore_snapshot(str(tmp_path))
+
+
+# ===================================================================== #
+# look-ahead under real pool pressure
+# ===================================================================== #
+def test_lookahead_fixes_head_of_line_blocking_in_engine():
+    """A pool-hogging head backs off; a small request behind it fits.
+    Strict FIFO serves it only after the head; look-ahead serves it
+    immediately — both complete everything."""
+    cfg = _smoke()
+    rng = np.random.default_rng(7)
+    big = [rng.integers(0, cfg.vocab_size, 40).astype(np.int32)
+           for _ in range(2)]
+    small = rng.integers(0, cfg.vocab_size, 8).astype(np.int32)
+
+    def run(lookahead):
+        eng = ServeEngine(cfg, num_slots=2, max_len=48, prefill_chunk=8,
+                          num_blocks=4, prefix_cache=False,
+                          admit_lookahead=lookahead)
+        eng.warmup(prompt_len=40)
+        a = eng.submit(big[0], max_new=8)     # 3 blocks: admits
+        b = eng.submit(big[1], max_new=8)     # 3 blocks: backs off
+        c = eng.submit(small, max_new=4)      # 1 block: fits now
+        res = eng.run()
+        assert all(res[r]["status"] == "ok" for r in (a, b, c))
+        return res, (a, b, c)
+
+    res_la, (a, b, c) = run(lookahead=4)
+    res_fifo, _ = run(lookahead=0)
+    # look-ahead: the small request finishes before the blocked big one
+    # — and before the head itself
+    assert res_la[c]["finish_step"] < res_la[b]["finish_step"]
+    assert res_la[c]["finish_step"] < res_la[a]["finish_step"]
+    # strict FIFO: it cannot start until the head retires and frees the
+    # pool, so it finishes after the head
+    assert res_fifo[c]["finish_step"] > res_fifo[a]["finish_step"]
+    # and look-ahead strictly improves the small request's latency
+    assert res_la[c]["latency_steps"] < res_fifo[c]["latency_steps"]
+
+
+# ===================================================================== #
+# observability
+# ===================================================================== #
+def test_latency_fields_and_percentiles(chaos_workload):
+    w = chaos_workload
+    eng, res = w["run"]()
+    for r in res.values():
+        assert {"submit_step", "finish_step", "latency_steps",
+                "latency_s", "deadline_steps", "deadline_met"} <= set(r)
+        assert r["latency_steps"] == r["finish_step"] - r["submit_step"]
+        assert r["deadline_met"]              # no deadline + ok = met
+    lat = eng.latency_percentiles()
+    assert lat["n"] == len(res)
+    steps = sorted(r["latency_steps"] for r in res.values())
+    assert steps[0] <= lat["p50_steps"] <= lat["p99_steps"] <= steps[-1]
+    # counters are live views of the scheduler's outcome dicts
+    assert eng.stats["rejected_by_reason"] is eng.sched.outcomes["rejected"]
+    assert eng.stats["shed_by_reason"] is eng.sched.outcomes["shed"]
+    assert eng.stats["aborted_by_reason"] is eng.sched.outcomes["aborted"]
+
+
+def test_deadline_met_recorded_on_completion(chaos_workload):
+    w = chaos_workload
+    cfg = w["cfg"]
+    eng = ServeEngine(cfg, num_slots=2, max_len=48, prefill_chunk=8)
+    eng.warmup(prompt_len=24)
+    eng.submit(w["prompts"][0], max_new=5, deadline_steps=200)
+    eng.submit(w["prompts"][1], max_new=5, deadline_steps=1)
+    res = eng.run()
+    assert res[0]["status"] == "ok" and res[0]["deadline_met"]
+    assert res[1]["status"] == "ok" and not res[1]["deadline_met"]
