@@ -11,7 +11,7 @@ from __future__ import annotations
 
 import numpy as np
 
-from repro.core.baselines import BASELINE_PLANNERS
+from repro.planner.baselines import BASELINE_PLANNERS
 from repro.data.distributions import make_rng
 from repro.data.packing import pack_sequence
 

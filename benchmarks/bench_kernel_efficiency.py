@@ -39,12 +39,12 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from repro.core.baselines import per_doc_plan
-from repro.core.plan import Shard, ShardingPlan
+from repro.planner.baselines import per_doc_plan
+from repro.planner.plan import Shard, ShardingPlan
 from repro.kernels.doc_attention import build_block_tables
 from repro.kernels.ops import doc_attention_xla
 
-from .cost_model import HW, ModelDims, step_breakdown
+from .cost_model import ModelDims, step_breakdown
 
 ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 KERNEL_JSON = os.path.join(ROOT, "BENCH_kernel.json")

@@ -29,7 +29,6 @@ from __future__ import annotations
 
 import argparse
 import inspect
-import sys
 import time
 
 

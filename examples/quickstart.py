@@ -15,8 +15,8 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 import numpy as np
 
-from repro.core.baselines import BASELINE_PLANNERS
-from repro.core.heuristic import flashcp_plan
+from repro.planner.baselines import BASELINE_PLANNERS
+from repro.planner.heuristic import flashcp_plan
 from repro.core.workload import comm_saving
 from repro.data.distributions import make_rng
 from repro.data.packing import pack_sequence

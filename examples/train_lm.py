@@ -20,7 +20,6 @@ import sys
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
-import dataclasses
 import types
 
 import repro.configs as configs

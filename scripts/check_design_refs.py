@@ -1,6 +1,6 @@
 #!/usr/bin/env python
 """Docs-integrity check: every ``DESIGN.md §<id>`` reference in ``src/``
-must resolve to a real heading in DESIGN.md.
+and ``scripts/`` must resolve to a real heading in DESIGN.md.
 
 The source tree cites design sections by stable id (``DESIGN.md §4``,
 ``DESIGN.md §Arch-applicability``); this check keeps those citations from
@@ -26,8 +26,10 @@ HEADING_RE = re.compile(r"^#{1,6}\s+§([A-Za-z0-9_][A-Za-z0-9_-]*)",
 
 
 def collect_refs(src: Path) -> dict[str, list[str]]:
-    """section id -> ["path:line", ...] over every .py file under src."""
+    """section id -> ["path:line", ...] over every .py file in a tree."""
     refs: dict[str, list[str]] = {}
+    if not src.is_dir():
+        return refs
     for path in sorted(src.rglob("*.py")):
         if "__pycache__" in path.parts:
             continue
@@ -48,7 +50,10 @@ def design_anchors(design: Path) -> set[str]:
 def check(root: Path = ROOT
           ) -> tuple[dict[str, list[str]], set[str], dict[str, list[str]]]:
     """Returns (dangling refs, available anchors, all refs)."""
-    refs = collect_refs(root / "src")
+    refs: dict[str, list[str]] = {}
+    for sub in ("src", "scripts"):
+        for sec, sites in collect_refs(root / sub).items():
+            refs.setdefault(sec, []).extend(sites)
     anchors = design_anchors(root / "DESIGN.md")
     dangling = {sec: sites for sec, sites in refs.items()
                 if sec not in anchors}

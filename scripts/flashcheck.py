@@ -1,0 +1,249 @@
+#!/usr/bin/env python
+"""flashcheck — static plan/HLO/source verifier (DESIGN.md §Static-analysis).
+
+Proves the comm-efficiency and determinism invariants *before anything
+runs*: every check here is host-side numpy, AST walking, or AOT HLO
+inspection — no step is ever executed.
+
+Three layers:
+
+1. **Plan checks** (``repro.analysis.plan_check``) — run every
+   registered-planner output for the whole config zoo through the
+   structural invariants: exact-once coverage, Eq.2 equal tokens,
+   causal-closure of the Eq.5 compact exchange, block-table soundness
+   against the dense causal-visibility oracle, work-queue flag/LPT
+   discipline, and serve block-pool refcount conservation.
+2. **HLO audit** (``repro.analysis.hlo_audit``) — opt-in via
+   ``--hlo-attn`` / ``--hlo-train`` (subprocesses with a simulated
+   device mesh): the lowered programs' collectives must match the
+   analytic comm budget byte-for-byte (1% slack).
+3. **Source lint** (``repro.analysis.lint``) — unseeded RNG and
+   set-order dependence in planner/dispatch code, traced-value python
+   branches in Pallas kernel bodies, deprecated-shim imports, import
+   hygiene.
+
+Exit status 0 = no error-severity findings; 1 = at least one.
+
+Usage::
+
+    python scripts/flashcheck.py              # lint + full plan sweep
+    python scripts/flashcheck.py --fast       # lint + 2-arch plan spot
+    python scripts/flashcheck.py --hlo-attn   # + attention-island audit
+    python scripts/flashcheck.py --hlo-train  # + train-step audit
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+import numpy as np
+
+ROOT = Path(__file__).resolve().parent.parent
+sys.path.insert(0, str(ROOT / "src"))
+
+from repro.analysis import errors, format_findings  # noqa: E402
+from repro.analysis.lint import default_targets, lint_paths  # noqa: E402
+from repro.analysis.plan_check import (  # noqa: E402
+    check_block_tables, check_encoding, check_plan, check_serve_state,
+    check_work_queue)
+
+CONTEXT_LEN = 1024
+CP_DEGREES = (1, 2, 4)
+BLOCK = 128
+FAST_ARCHS = ("starcoder2_3b", "xlstm_350m")
+
+#: loose declared bound for the balanced planners (PLAN004); FlashCP's
+#: Eq.3 objective lands far below this on every zoo mix — tripping it
+#: means the balancer regressed, not that the mix is adversarial.
+BALANCED_IMBALANCE = 1.5
+
+
+def arch_doc_mix(arch: str, context_len: int = CONTEXT_LEN) -> np.ndarray:
+    """Deterministic per-arch document-length mix summing to the context.
+
+    Seeded from a stable digest of the arch name (``hash()`` is
+    process-salted), lognormal-ish so every arch exercises a different
+    long-tail shape."""
+    seed = int.from_bytes(
+        hashlib.blake2b(arch.encode(), digest_size=4).digest(), "little")
+    rng = np.random.default_rng(seed)
+    lens: list[int] = []
+    left = context_len
+    while left > 0:
+        d = int(min(max(rng.lognormal(mean=4.5, sigma=1.0), 8), left))
+        lens.append(d)
+        left -= d
+    return np.asarray(lens, dtype=np.int64)
+
+
+def _flashcp_kv_metadata(enc, num_workers: int):
+    """Per-rank KV metadata of the blocking flashcp layout:
+    ``[local | gathered-with-self-masked]`` (mirrors the device concat in
+    :func:`repro.planner.encode.emit_visit_tables`)."""
+    N = num_workers
+    t_loc, buf = enc.t_loc, enc.buf_len
+    ld = enc.doc.reshape(N, t_loc)
+    lp = enc.pos.reshape(N, t_loc)
+    L = enc.gath_doc.shape[-1]
+    gd = np.broadcast_to(enc.gath_doc, (N, L)).copy()
+    seg = np.arange(L) // buf
+    gd[seg[None, :] == np.arange(N)[:, None]] = -2
+    gp = np.broadcast_to(enc.gath_pos, (N, L))
+    kd = np.concatenate([ld, gd], axis=-1)
+    kp = np.concatenate([lp, gp], axis=-1)
+    return ld, lp, kd, kp
+
+
+def check_config(arch: str, cp: int) -> list:
+    """Layer-1 sweep for one (arch, CP degree): plan, encoding, rect
+    tables, and both flat work queues, under the strategy the step
+    builder would actually pick for the family."""
+    from repro.configs import get_config
+    from repro.kernels.doc_attention import build_block_tables
+    from repro.launch.steps import effective_strategy
+    from repro.planner import encode_plan
+    from repro.planner.registry import get_planner
+
+    cfg = get_config(arch)
+    strategy = effective_strategy(cfg, "flashcp")
+    planner = get_planner(strategy)
+    doc_lens = arch_doc_mix(arch)
+    ctx = f"{arch}/cp{cp}/{strategy}"
+
+    plan = planner(doc_lens, cp)
+    max_imb = BALANCED_IMBALANCE if strategy in ("flashcp", "bnb") else None
+    out = check_plan(plan, max_imbalance=max_imb,
+                     require_equal_tokens=planner.info.needs_equal_tokens,
+                     context=f"{ctx}/plan")
+    enc = encode_plan(plan)
+    out += check_encoding(plan, enc, context=f"{ctx}/encoding")
+
+    if planner.info.comm_style == "flashcp":
+        ld, lp, kd, kp = _flashcp_kv_metadata(enc, cp)
+    else:  # full-exchange baselines attend the whole packed sequence
+        t_loc = enc.t_loc
+        ld = enc.doc.reshape(cp, t_loc)
+        lp = enc.pos.reshape(cp, t_loc)
+        kd = np.broadcast_to(enc.doc, (cp, enc.doc.shape[0]))
+        kp = np.broadcast_to(enc.pos, (cp, enc.pos.shape[0]))
+
+    t = build_block_tables(ld, lp, kd, kp, block_q=BLOCK, block_k=BLOCK)
+    out += check_block_tables(ld, lp, kd, kp, t.kv_idx, t.kv_nvis,
+                              block_q=BLOCK, block_k=BLOCK,
+                              context=f"{ctx}/rect")
+    out += check_work_queue(t.kv_idx, t.kv_nvis,
+                            t.fq_row, t.fq_col, t.fq_flags,
+                            context=f"{ctx}/flat-fq")
+    out += check_work_queue(t.q_idx, t.q_nvis,
+                            t.rq_row, t.rq_col, t.rq_flags,
+                            context=f"{ctx}/flat-rq")
+    return out
+
+
+def check_serve_scenario() -> list:
+    """SRV001-SRV003 over a live prefix-sharing scenario: two requests
+    sharing a cached 3-block prefix, then the first request draining."""
+    from repro.serve.block_pool import BlockPool
+    from repro.serve.prefix import PrefixCache
+
+    pool = BlockPool(num_blocks=32, block_size=16)
+    pc = PrefixCache(block_size=16)
+    tokens = list(range(100, 148))                   # 3 full blocks
+
+    blocks_a = pool.alloc(4)                         # prefix + 1 unique
+    pc.insert(tokens, blocks_a[:3], pool)
+    shared = pc.match(tokens)
+    pool.retain(shared)
+    blocks_b = shared + pool.alloc(2)
+    tables = {"req_a": list(blocks_a), "req_b": list(blocks_b)}
+    out = check_serve_state(pool, tables, pc, context="serve/steady")
+
+    pool.release(tables.pop("req_a"))                # req_a drains
+    out += check_serve_state(pool, tables, pc, context="serve/drained")
+    return out
+
+
+def run_lint() -> list:
+    return lint_paths(default_targets(ROOT), root=ROOT)
+
+
+def run_hlo(which: str) -> int:
+    """Run one HLO audit phase in a subprocess (it forces its own
+    simulated device count before importing jax)."""
+    script = ROOT / "tests" / "multidevice" / "hlo_audit_check.py"
+    proc = subprocess.run(
+        [sys.executable, str(script), which], cwd=ROOT,
+        env={**os.environ, "PYTHONPATH": str(ROOT / "src"),
+             "JAX_PLATFORMS": "cpu"})
+    return proc.returncode
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="flashcheck", description=__doc__.splitlines()[0])
+    ap.add_argument("--fast", action="store_true",
+                    help="lint + plan checks on two small archs only "
+                         "(CI tier-1 profile)")
+    ap.add_argument("--no-lint", action="store_true",
+                    help="skip the source-lint layer")
+    ap.add_argument("--hlo-attn", action="store_true",
+                    help="also audit the lowered flashcp attention island "
+                         "(subprocess, simulated 4-way CP)")
+    ap.add_argument("--hlo-train", action="store_true",
+                    help="also audit the lowered smoke train step "
+                         "(subprocess, simulated 2x4 mesh)")
+    args = ap.parse_args(argv)
+
+    findings = []
+    n_configs = 0
+
+    if not args.no_lint:
+        lint = run_lint()
+        findings += lint
+        print(f"[lint] {len(list(default_targets(ROOT)))} files, "
+              f"{len(errors(lint))} errors / "
+              f"{len(lint) - len(errors(lint))} warnings")
+
+    from repro.configs import ARCHS
+    archs = FAST_ARCHS if args.fast else tuple(ARCHS)
+    cps = CP_DEGREES[:2] if args.fast else CP_DEGREES
+    for arch in archs:
+        for cp in cps:
+            fs = check_config(arch, cp)
+            findings += fs
+            n_configs += 1
+            if errors(fs):
+                print(f"[plan] {arch} cp={cp}: "
+                      f"{len(errors(fs))} errors")
+    print(f"[plan] {n_configs} configs "
+          f"({len(archs)} archs x CP{list(cps)}), "
+          f"{len(errors(findings))} total errors so far")
+
+    if not args.fast:
+        fs = check_serve_scenario()
+        findings += fs
+        print(f"[serve] prefix-sharing scenario: "
+              f"{len(errors(fs))} errors")
+
+    rc = 0
+    for flag, phase in ((args.hlo_attn, "attn"), (args.hlo_train, "train")):
+        if flag:
+            print(f"[hlo] auditing {phase} program (subprocess)...")
+            rc |= run_hlo(phase)
+
+    if findings:
+        print()
+        print(format_findings(findings))
+    errs = errors(findings)
+    print(f"\nflashcheck: {len(errs)} error(s), "
+          f"{len(findings) - len(errs)} warning(s)")
+    return 1 if errs or rc else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

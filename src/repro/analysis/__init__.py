@@ -1,0 +1,19 @@
+"""Static plan/jaxpr/HLO verification (DESIGN.md §Static-analysis).
+
+Three layers, no execution required:
+
+* Layer 1 — :mod:`repro.analysis.plan_check`: host-numpy structural
+  checks over planner outputs (shard plans, encodings, visit tables,
+  work queues) and serve block tables.
+* Layer 2 — :mod:`repro.analysis.hlo_audit`: audits lowered HLO of
+  jitted step bundles against the plan's analytic comm budget.
+* Layer 3 — :mod:`repro.analysis.lint`: AST rules for determinism and
+  kernel-tracing failure modes.
+
+Each layer emits :class:`repro.analysis.findings.Finding` records;
+``scripts/flashcheck.py`` is the CLI driver.
+"""
+
+from repro.analysis.findings import Finding, RULES, errors, format_findings
+
+__all__ = ["Finding", "RULES", "errors", "format_findings"]

@@ -1,0 +1,302 @@
+"""Layer 2 — lowered-program audit (DESIGN.md §Static-analysis).
+
+Audits the partitioned HLO text of a jitted step bundle against the
+plan's *analytic* communication budget, with no execution: every
+collective the program runs must be one the plan predicted (kind and
+volume), and the program must be free of the classic silent-perf killers
+— sharding-propagation full gathers, f64 upcasts, host transfers,
+non-donated hot-loop buffers.
+
+Built on :func:`repro.launch.hlo_analysis.collect_collectives`, which
+rolls per-instruction wire bytes through ``while`` trip counts, so a
+collective inside a scan-over-layers loop is charged once per trip.
+
+Rule ids: HLO101-HLO106.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+
+from repro.analysis.findings import Finding
+from repro.core.workload import comm_bytes
+from repro.launch.hlo_analysis import collect_collectives
+
+__all__ = ["CommBudget", "kv_exchange_budget", "audit_collectives",
+           "audit_numerics", "audit_host_transfers", "audit_donation",
+           "audit_program", "collective_totals"]
+
+
+@dataclasses.dataclass(frozen=True)
+class CommBudget:
+    """Analytic per-device wire-byte caps, by collective kind.
+
+    ``allowed`` maps an HLO collective kind ("all-gather",
+    "collective-permute", ...) to the maximum total wire bytes the plan
+    predicts for it; a kind absent from the map is *forbidden* (HLO101).
+    ``slack`` is the fractional tolerance on the caps (compiler rounding,
+    layout padding).  ``full_gather_bytes``: if set, any single
+    all-gather whose result is at least this size trips HLO103 even when
+    all-gathers are budgeted — the signature of sharding propagation
+    re-materializing a tensor the plan meant to keep sharded.
+    """
+
+    allowed: dict[str, float]
+    slack: float = 0.01
+    full_gather_bytes: float | None = None
+    note: str = ""
+
+
+def kv_exchange_budget(buf_len: int, num_workers: int, kv_heads: int,
+                       head_dim: int, *, dtype_bytes: int = 2,
+                       fwd_and_bwd: bool = False, overlap: str = "chunked",
+                       batch: int = 1, layers: int = 1,
+                       slack: float = 0.01,
+                       extra: dict[str, float] | None = None) -> CommBudget:
+    """The attention KV exchange's analytic budget (Eq.4/Eq.5 outer).
+
+    ``buf_len`` is the *static* per-rank exchange size — the Eq.5 pow2
+    bucket for flashcp (:attr:`PlanEncoding.buf_len`), ``C / N`` for the
+    full-exchange baselines.  The device moves exactly this (the paper's
+    single continuous communication buffer), so the audited wire bytes
+    must match :func:`repro.core.workload.comm_bytes` on it to within
+    ``slack`` — the chunked ppermute rotation (N-1 hops of one buffer)
+    and the blocking all-gather ((N-1)/N of N buffers) both reduce to the
+    same total.
+
+    The plan metadata riding the exchange (int32 doc + pos per buffer
+    slot) is budgeted alongside the K/V payload on the same kind.
+    ``batch`` and ``layers`` scale the budget to per-device sample count
+    and attention-layer count (every attention layer runs its own
+    exchange in a full step program); ``extra`` admits additional kinds
+    (e.g. gradient all-reduce for a full train step).
+    """
+    mult = batch * layers
+    payload = mult * comm_bytes(buf_len, num_workers, kv_heads, head_dim,
+                                dtype_bytes=dtype_bytes,
+                                fwd_and_bwd=fwd_and_bwd)
+    # doc + pos: two int32 streams with the same (buf, N-1) geometry —
+    # comm_bytes' leading "K and V" factor 2 counts exactly the pair.
+    # Only the chunked rotation moves them, exactly once per program
+    # (forward only — the indices are fwd residuals, not re-exchanged in
+    # the backward pass, and the rotation is shared across layers); the
+    # blocking layout reads the host-replicated copies.
+    meta = batch * comm_bytes(buf_len, num_workers, 1, 1, dtype_bytes=4,
+                              fwd_and_bwd=False) \
+        if overlap == "chunked" else 0
+    kind = "collective-permute" if overlap == "chunked" else "all-gather"
+    allowed = {kind: float(payload + meta)}
+    for k, v in (extra or {}).items():
+        allowed[k] = allowed.get(k, 0.0) + v
+    return CommBudget(allowed=allowed, slack=slack,
+                      note=f"kv-exchange {kind} buf_len={buf_len}")
+
+
+def collective_totals(text: str) -> dict[str, float]:
+    """Total wire bytes per collective kind, trip-count-aware."""
+    totals: dict[str, float] = {}
+    for c in collect_collectives(text):
+        totals[c.kind] = totals.get(c.kind, 0.0) + c.wire_bytes * c.trips
+    return totals
+
+
+def audit_collectives(text: str, budget: CommBudget, *,
+                      context: str = "hlo") -> list[Finding]:
+    """HLO101/HLO102/HLO103 — diff the program's collectives against the
+    analytic budget."""
+    out: list[Finding] = []
+    colls = collect_collectives(text)
+    totals: dict[str, float] = {}
+    biggest: dict[str, object] = {}
+    for c in colls:
+        totals[c.kind] = totals.get(c.kind, 0.0) + c.wire_bytes * c.trips
+        if c.kind not in biggest or \
+                c.wire_bytes > biggest[c.kind].wire_bytes:
+            biggest[c.kind] = c
+
+    for kind, tot in sorted(totals.items()):
+        cap = budget.allowed.get(kind)
+        top = biggest[kind]
+        if cap is None:
+            out.append(Finding(
+                "HLO101", "error", context,
+                f"unpredicted collective kind `{kind}`: {tot:.3g} wire "
+                f"bytes the plan's comm budget does not account for "
+                f"(largest: {top.var} in {top.computation}, "
+                f"{top.result_bytes} result bytes x{top.trips:g})",
+                hint="redundant KV communication or stray collective — "
+                     "the plan predicted none of this kind (Eq.5)"))
+        elif tot > cap * (1.0 + budget.slack):
+            out.append(Finding(
+                "HLO102", "error", context,
+                f"`{kind}` moves {tot:.6g} wire bytes, analytic budget "
+                f"{cap:.6g} (+{budget.slack:.0%} slack) "
+                f"[{budget.note}]".rstrip(" []"),
+                hint="the lowered exchange exceeds the plan's Eq.4/Eq.5 "
+                     "volume — check sharding specs and bucket sizes"))
+
+    if budget.full_gather_bytes is not None:
+        for c in colls:
+            if c.kind == "all-gather" and \
+                    c.result_bytes >= budget.full_gather_bytes:
+                out.append(Finding(
+                    "HLO103", "error", context,
+                    f"full-size all-gather {c.var} in {c.computation}: "
+                    f"{c.result_bytes} result bytes (threshold "
+                    f"{budget.full_gather_bytes:.6g}) x{c.trips:g} trips",
+                    hint="sharding propagation re-gathered a tensor the "
+                         "plan keeps sharded; pin its PartitionSpec"))
+    return out
+
+
+_F64_RE = re.compile(r"\bf64\[")
+
+
+def audit_numerics(text: str, *, context: str = "hlo") -> list[Finding]:
+    """HLO104 — f64 anywhere in the module (CPU sharding or an unguarded
+    numpy scalar silently upcasting the step to double)."""
+    out: list[Finding] = []
+    hits = []
+    for i, line in enumerate(text.splitlines(), 1):
+        if _F64_RE.search(line):
+            hits.append((i, line.strip()[:100]))
+    if hits:
+        i, frag = hits[0]
+        out.append(Finding(
+            "HLO104", "error", context,
+            f"{len(hits)} f64-typed instruction(s); first at module line "
+            f"{i}: `{frag}`",
+            hint="an f32->f64 upcast doubles memory traffic; find the "
+                 "float64 constant/np scalar leaking into the trace"))
+    return out
+
+
+_HOST_OPCODES = ("infeed", "outfeed")
+_CALLBACK_RE = re.compile(
+    r'custom_call_target="[^"]*(callback|host)[^"]*"', re.I)
+
+
+def audit_host_transfers(text: str, *,
+                         context: str = "hlo") -> list[Finding]:
+    """HLO105 — infeed/outfeed, host send/recv, python callbacks."""
+    out: list[Finding] = []
+    for i, line in enumerate(text.splitlines(), 1):
+        s = line.strip()
+        hit = None
+        for opc in _HOST_OPCODES:
+            if re.search(rf"\b{opc}\(", s):
+                hit = opc
+        if re.search(r"\b(send|recv)\(", s) and \
+                "is_host_transfer=true" in s:
+            hit = "host send/recv"
+        if _CALLBACK_RE.search(s):
+            hit = "host callback custom-call"
+        if hit:
+            out.append(Finding(
+                "HLO105", "error", f"{context}:{i}",
+                f"host transfer in the step program ({hit}): "
+                f"`{s[:100]}`",
+                hint="host round-trips serialize the device stream; move "
+                     "the logic into the traced program or off the hot "
+                     "loop"))
+            if len(out) >= 8:
+                break
+    return out
+
+
+_ALIAS_PAIR_RE = re.compile(r"\(\s*(\d+)\s*,")
+
+
+def _alias_map_body(text: str) -> str:
+    """The brace-balanced body of the module's ``input_output_alias={...}``
+    attribute (nested ``{}`` inside alias entries defeats a non-greedy
+    regex)."""
+    start = text.find("input_output_alias={")
+    if start < 0:
+        return ""
+    i = text.index("{", start)
+    depth = 0
+    for j in range(i, min(len(text), i + 100_000)):
+        if text[j] == "{":
+            depth += 1
+        elif text[j] == "}":
+            depth -= 1
+            if depth == 0:
+                return text[i + 1: j]
+    return ""
+_ENTRY_PARAM_RE = re.compile(
+    r"=\s*((?:\([^)]*\)|[a-z0-9]+\[[\d,]*\])[^\s]*)\s+parameter\((\d+)\)")
+
+
+def _entry_param_bytes(text: str) -> dict[int, int]:
+    """param number -> result bytes, from the ENTRY computation body."""
+    from repro.launch.hlo_analysis import _type_bytes
+    params: dict[int, int] = {}
+    in_entry = False
+    for raw in text.splitlines():
+        if raw.startswith("ENTRY"):
+            in_entry = True
+            continue
+        if in_entry and raw.startswith("}"):
+            break
+        if not in_entry:
+            continue
+        m = _ENTRY_PARAM_RE.search(raw)
+        if m:
+            params[int(m.group(2))] = _type_bytes(m.group(1))
+    return params
+
+
+def audit_donation(text: str, *, min_bytes: int = 1 << 20,
+                   expect_params=None,
+                   context: str = "hlo") -> list[Finding]:
+    """HLO106 — large entry parameters not aliased to an output.
+
+    ``expect_params``: parameter numbers the step builder donated
+    (``donate_argnums``-derived) — each must appear in the module's
+    ``input_output_alias``; a miss is an error (the donation silently
+    fell off, doubling peak memory).  Without it, any non-aliased
+    parameter of at least ``min_bytes`` is reported as a warning.
+    """
+    out: list[Finding] = []
+    aliased = {int(p)
+               for p in _ALIAS_PAIR_RE.findall(_alias_map_body(text))}
+    params = _entry_param_bytes(text)
+
+    if expect_params is not None:
+        for p in sorted(set(expect_params)):
+            if p not in aliased:
+                out.append(Finding(
+                    "HLO106", "error", context,
+                    f"entry parameter {p} "
+                    f"({params.get(p, 0)} bytes) was donated by the step "
+                    f"builder but is not in input_output_alias",
+                    hint="donation fell off (shape/dtype mismatch between "
+                         "donated input and outputs?) — peak memory "
+                         "doubles"))
+        return out
+
+    for p, nbytes in sorted(params.items()):
+        if nbytes >= min_bytes and p not in aliased:
+            out.append(Finding(
+                "HLO106", "warning", context,
+                f"large entry parameter {p} ({nbytes} bytes) is not "
+                f"donated",
+                hint="if this buffer is dead after the step (params, opt "
+                     "state, KV cache), donate it"))
+    return out
+
+
+def audit_program(text: str, budget: CommBudget | None = None, *,
+                  donate_expect=None, donate_min_bytes: int = 1 << 20,
+                  context: str = "hlo") -> list[Finding]:
+    """All Layer-2 rules over one lowered module."""
+    out: list[Finding] = []
+    if budget is not None:
+        out += audit_collectives(text, budget, context=context)
+    out += audit_numerics(text, context=context)
+    out += audit_host_transfers(text, context=context)
+    out += audit_donation(text, expect_params=donate_expect,
+                          min_bytes=donate_min_bytes, context=context)
+    return out

@@ -2,6 +2,12 @@
 :mod:`repro.planner.baselines`; resolve by name via
 :func:`repro.planner.get_planner`."""
 
+import warnings
+
+warnings.warn(
+    "repro.core.baselines is deprecated; import from repro.planner.baselines instead",
+    DeprecationWarning, stacklevel=2)
+
 from repro.planner.baselines import (BASELINE_PLANNERS,  # noqa: F401
                                      contiguous_plan, llama3_plan,
                                      per_doc_plan, ring_zigzag_plan)

@@ -48,7 +48,7 @@ across ranks.
 from __future__ import annotations
 
 import functools
-from typing import Any, Callable
+from typing import Any
 
 import jax
 import jax.numpy as jnp

@@ -2,6 +2,12 @@
 :mod:`repro.planner.heuristic` (vectorized, registry-registered as
 ``"flashcp"``)."""
 
+import warnings
+
+warnings.warn(
+    "repro.core.heuristic is deprecated; import from repro.planner.heuristic instead",
+    DeprecationWarning, stacklevel=2)
+
 from repro.planner.heuristic import (HeuristicStats,  # noqa: F401
                                      _ArrayState, _repair_equal_tokens,
                                      flashcp_plan, zigzag_doc_shards)

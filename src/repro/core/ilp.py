@@ -1,6 +1,12 @@
 """Legacy import path — the exact branch-and-bound reference lives in
 :mod:`repro.planner.ilp` (registry name ``"bnb"``)."""
 
+import warnings
+
+warnings.warn(
+    "repro.core.ilp is deprecated; import from repro.planner.ilp instead",
+    DeprecationWarning, stacklevel=2)
+
 from repro.planner.ilp import BnBResult, bnb_plan  # noqa: F401
 
 __all__ = ["bnb_plan", "BnBResult"]

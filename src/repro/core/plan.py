@@ -1,6 +1,12 @@
 """Legacy import path — the plan data structures live in
 :mod:`repro.planner.plan` (vectorized ShardArrays core)."""
 
+import warnings
+
+warnings.warn(
+    "repro.core.plan is deprecated; import from repro.planner.plan instead",
+    DeprecationWarning, stacklevel=2)
+
 from repro.planner.plan import (Shard, ShardArrays, ShardingPlan,  # noqa: F401
                                 make_whole_doc_plan,
                                 merge_adjacent_shards,

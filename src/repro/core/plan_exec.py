@@ -1,6 +1,12 @@
 """Legacy import path — the plan encoder lives in
 :mod:`repro.planner.encode` (vectorized)."""
 
+import warnings
+
+warnings.warn(
+    "repro.core.plan_exec is deprecated; import from repro.planner.encode instead",
+    DeprecationWarning, stacklevel=2)
+
 from repro.planner.encode import (PlanEncoding, encode_plan,  # noqa: F401
                                   encode_plan_batch, pick_buffer_bucket,
                                   plan_shape_hints, trivial_plan)

@@ -18,7 +18,7 @@ from __future__ import annotations
 
 import numpy as np
 
-from .plan import Shard, ShardingPlan
+from repro.planner.plan import ShardingPlan
 
 __all__ = [
     "shard_workload",

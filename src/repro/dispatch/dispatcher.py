@@ -44,7 +44,7 @@ import dataclasses
 import numpy as np
 
 from .balance import (PackedPool, effective_imbalance, imbalance,
-                      lpt_assign, pack_pool, sequence_workload)
+                      lpt_assign, pack_pool)
 from .profile import LengthProfile, profile_lengths
 
 __all__ = ["DispatchConfig", "DispatchPlan", "cp_degree_options",

@@ -27,7 +27,6 @@ import json
 import time
 import traceback
 
-import jax
 
 from repro.compat import set_mesh
 from repro.configs import ARCHS, SHAPES, RunConfig, get_config

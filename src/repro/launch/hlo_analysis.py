@@ -28,7 +28,8 @@ from __future__ import annotations
 import dataclasses
 import re
 
-__all__ = ["analyze_hlo", "HloCost", "schedule_model", "ScheduleCost"]
+__all__ = ["analyze_hlo", "HloCost", "schedule_model", "ScheduleCost",
+           "Collective", "collect_collectives"]
 
 _DTYPE_BYTES = {
     "pred": 1, "s8": 1, "u8": 1, "s4": 1, "u4": 1, "s16": 2, "u16": 2,
@@ -87,6 +88,10 @@ class _Op:
     while_target: str | None = None
     trip: int = 1
     fusion_targets: tuple = ()
+    # collective details (set iff wire > 0), for collect_collectives
+    coll_kind: str = ""
+    result_bytes: int = 0
+    group: int = 1
 
 
 @dataclasses.dataclass
@@ -273,8 +278,10 @@ def _parse_computations(text: str, exclude_result_bytes=frozenset()
             op_bytes_sched = op_bytes
         base = opcode.replace("-start", "").replace("-done", "")
         op_wire = 0.0
+        op_group = 1
         if base in _COLLECTIVES and not opcode.endswith("-done"):
-            wire = _collective_wire(base, result_bytes, _group_size(rest))
+            op_group = _group_size(rest)
+            wire = _collective_wire(base, result_bytes, op_group)
             op_wire = wire
             cur.coll[base] = cur.coll.get(base, 0.0) + wire
             cur.coll["_count"] = cur.coll.get("_count", 0.0) + 1
@@ -288,7 +295,10 @@ def _parse_computations(text: str, exclude_result_bytes=frozenset()
             var=var, opcode=opcode, flops=op_flops, bytes=op_bytes_sched,
             wire=op_wire, deps=tuple(re.findall(r"%[\w.\-]+", args)),
             while_target=op_while if opcode == "while" else None,
-            trip=trip, fusion_targets=tuple(op_fused)))
+            trip=trip, fusion_targets=tuple(op_fused),
+            coll_kind=base if op_wire > 0.0 else "",
+            result_bytes=result_bytes if op_wire > 0.0 else 0,
+            group=op_group))
 
     return comps, entry
 
@@ -299,8 +309,11 @@ def analyze_hlo(text: str, entry: str | None = None,
         text, exclude_result_bytes=frozenset(exclude_result_bytes))
     if entry is None:
         entry = found_entry
-    if entry is None:  # pragma: no cover
-        entry = next(iter(comps))
+    if entry is None:
+        entry = next(iter(comps), None)
+    if entry is None:   # empty / unparseable module: zero cost
+        return HloCost(flops=0.0, bytes=0.0, collective_wire_bytes=0.0,
+                       collective_by_kind={}, collective_count=0.0)
 
     memo: dict[str, tuple] = {}
 
@@ -335,6 +348,72 @@ def analyze_hlo(text: str, entry: str | None = None,
                    collective_wire_bytes=sum(coll.values()),
                    collective_by_kind=coll, collective_count=count,
                    vmem_resident_bytes=ex, collective_wire_bytes_tpu=tpu)
+
+
+# --------------------------------------------------------------------- #
+# per-collective extraction (the static auditor's raw material)
+# --------------------------------------------------------------------- #
+@dataclasses.dataclass(frozen=True)
+class Collective:
+    """One collective instruction, with its execution multiplicity.
+
+    ``trips`` is the product of enclosing ``while`` trip counts along the
+    call path from the entry — ``wire_bytes * trips`` is this
+    instruction's total contribution to the module's wire traffic, so
+    ``sum(c.wire_bytes * c.trips)`` equals
+    :attr:`HloCost.collective_wire_bytes`.
+    """
+
+    kind: str            # all-gather | all-reduce | reduce-scatter | ...
+    var: str             # SSA name, e.g. "%all-gather.3"
+    computation: str     # enclosing computation name
+    result_bytes: int
+    wire_bytes: float    # per execution, replica-group-aware
+    group_size: int
+    trips: float         # total multiplicity through while nesting
+
+
+def collect_collectives(text: str, entry: str | None = None
+                        ) -> list[Collective]:
+    """Every collective in the module, with while-trip multiplicities.
+
+    Walks the call graph from the entry computation: ``while`` calls
+    multiply the body's multiplicity by the known trip count; fusions,
+    calls, and conditional branches inherit their caller's (conditionals
+    conservatively count both branches).  Computations unreachable from
+    the entry contribute nothing.
+    """
+    comps, found_entry = _parse_computations(text)
+    if entry is None:
+        entry = found_entry
+    if entry is None:
+        entry = next(iter(comps), None)
+    if entry is None:   # empty / unparseable module: no collectives
+        return []
+
+    mult: dict[str, float] = {}
+
+    def walk(name: str, m: float, depth: int = 0) -> None:
+        c = comps.get(name)
+        if c is None or depth > 64:     # depth guard: HLO has no recursion
+            return
+        mult[name] = mult.get(name, 0.0) + m
+        for target, trip in c.calls or []:
+            walk(target, m * trip, depth + 1)
+        for target in c.fused_calls or []:
+            walk(target, m, depth + 1)
+
+    walk(entry, 1.0)
+
+    out: list[Collective] = []
+    for name, m in mult.items():
+        for op in comps[name].ops or []:
+            if op.wire > 0.0:
+                out.append(Collective(
+                    kind=op.coll_kind, var=op.var, computation=name,
+                    result_bytes=op.result_bytes, wire_bytes=op.wire,
+                    group_size=op.group, trips=m))
+    return out
 
 
 # --------------------------------------------------------------------- #
@@ -376,8 +455,12 @@ def schedule_model(text: str, *, flops_per_s: float = 100e9,
     comps, found_entry = _parse_computations(text)
     if entry is None:
         entry = found_entry
-    if entry is None:  # pragma: no cover
-        entry = next(iter(comps))
+    if entry is None:
+        entry = next(iter(comps), None)
+    if entry is None:   # empty / unparseable module: zero-length schedule
+        return ScheduleCost(makespan_s=0.0, compute_busy_s=0.0,
+                            comm_busy_s=0.0, exposed_comm_s=0.0,
+                            collective_count=0.0)
 
     flops_memo: dict[str, float] = {}
 

@@ -27,7 +27,6 @@ from __future__ import annotations
 import dataclasses
 import re
 
-import numpy as np
 
 __all__ = ["HW", "CollectiveStats", "collective_stats", "roofline_terms",
            "model_flops"]

@@ -42,7 +42,6 @@ from __future__ import annotations
 import argparse
 import time
 
-import jax
 import numpy as np
 
 from repro.configs import get_config, reduce_for_smoke

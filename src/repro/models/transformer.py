@@ -14,7 +14,6 @@ constraints (runtime/sharding.py) plus the ``ExecContext`` islands.
 
 from __future__ import annotations
 
-import functools
 from typing import Any
 
 import jax

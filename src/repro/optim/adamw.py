@@ -8,7 +8,6 @@ ZeRO-style sharded optimizer state falls out of the FSDP param sharding.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any
 
 import jax
 import jax.numpy as jnp

@@ -37,7 +37,7 @@ from collections import OrderedDict
 
 import numpy as np
 
-from repro.table_layout import FLAT_TABLE_NAMES, RECT_TABLE_NAMES
+from repro.table_layout import FLAT_TABLE_NAMES
 
 from .plan import Shard, ShardArrays, ShardingPlan
 

@@ -41,8 +41,7 @@ from typing import Sequence
 
 import numpy as np
 
-from .plan import (Shard, ShardArrays, ShardingPlan, shard_workload_array,
-                   validate_plan)
+from .plan import (Shard, ShardArrays, ShardingPlan, validate_plan)
 
 __all__ = ["flashcp_plan", "zigzag_doc_shards", "HeuristicStats",
            "_ArrayState", "_repair_equal_tokens"]

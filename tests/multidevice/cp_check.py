@@ -19,11 +19,11 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
-from repro.core.baselines import BASELINE_PLANNERS
+from repro.planner.baselines import BASELINE_PLANNERS
 from repro.compat import make_mesh, set_mesh
 from repro.core.cp_attention import make_cp_context
-from repro.core.plan_exec import encode_plan_batch
-from repro.core.plan import validate_plan
+from repro.planner.encode import encode_plan_batch
+from repro.planner.plan import validate_plan
 from repro.kernels.ref import mha_reference
 from repro.kernels.doc_attention import build_block_tables
 from repro.data.packing import doc_ids_and_positions

@@ -24,7 +24,7 @@ import functools
 import numpy as np
 import jax
 import jax.numpy as jnp
-from jax.sharding import NamedSharding, PartitionSpec as P
+from jax.sharding import PartitionSpec as P
 
 from repro.compat import make_mesh, shard_map
 from repro.core.cp_attention import finalize_partial, merge_partials_axis

@@ -1,0 +1,148 @@
+"""Static HLO audit of the lowered CP programs (DESIGN.md
+§Static-analysis, Layer 2) — nothing executes; the lowered modules are
+compiled AOT and their text diffed against the analytic comm budget.
+
+Two phases (both by default; ``attn`` / ``train`` as argv[1] selects
+one — ``scripts/flashcheck.py --hlo-*`` runs them this way):
+
+* ``attn``  — the flashcp attention island on a simulated 4-way CP
+  mesh, both overlap modes.  Acceptance: the audited per-collective
+  wire bytes agree with :func:`repro.analysis.hlo_audit.
+  kv_exchange_budget` (i.e. ``repro.core.workload.comm_bytes`` on the
+  Eq.5 bucket) within 1%.
+* ``train`` — the full smoke train step on a simulated 2x4 mesh: the
+  KV exchange budget scales per attention layer, embedding/logits
+  all-gathers and gradient all-reduces are admitted explicitly, and
+  no f64 / host transfer / lost donation may appear.
+"""
+
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "..", "src"))
+
+import numpy as np
+
+from repro.analysis import format_findings
+from repro.analysis.hlo_audit import (audit_program, collective_totals,
+                                      kv_exchange_budget)
+from repro.compat import make_mesh, set_mesh
+from repro.core.cp_attention import make_cp_context
+
+CP = 4
+DOC_LENS = np.asarray([2500, 900, 1800, 1400, 700, 892], np.int64)
+
+
+def check_attn() -> None:
+    import jax
+    import jax.numpy as jnp
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    from repro.planner import encode_plan_batch, get_planner
+
+    mesh = make_mesh((1, CP), ("data", "model"))
+    plan = get_planner("flashcp")(DOC_LENS, CP)
+    stack, encs = encode_plan_batch([plan], align=128)
+    enc = encs[0]
+    arrays = {k: jnp.asarray(v) for k, v in stack.items()}
+    C_pad = stack["doc"].shape[1]
+
+    B, HQ, HKV, D = 1, 4, 2, 64
+    sh = NamedSharding(mesh, P(None, None, "model", None))
+    rng = np.random.default_rng(0)
+    q, k, v = (jax.device_put(
+        jnp.asarray(rng.standard_normal((B, h, C_pad, D)).astype(np.float32)),
+        sh) for h in (HQ, HKV, HKV))
+
+    for overlap in ("chunked", "none"):
+        with set_mesh(mesh):
+            ctx = make_cp_context(mesh, arrays, strategy="flashcp",
+                                  impl="xla", batch_axes=(None,),
+                                  head_dim=D, q_chunk=512, overlap=overlap)
+            text = jax.jit(ctx.attn).lower(q, k, v).compile().as_text()
+        budget = kv_exchange_budget(enc.buf_len, CP, HKV, D, dtype_bytes=4,
+                                    fwd_and_bwd=False, overlap=overlap,
+                                    batch=B)
+        findings = audit_program(text, budget, donate_min_bytes=1 << 30,
+                                 context=f"attn/{overlap}")
+        assert not findings, format_findings(findings)
+
+        # acceptance: audited bytes == analytic comm model within 1%
+        kind = "collective-permute" if overlap == "chunked" else "all-gather"
+        total = collective_totals(text)[kind]
+        cap = budget.allowed[kind]
+        err = abs(total - cap) / cap
+        print(f"OK attn overlap={overlap}: {kind} {total:.0f} wire bytes "
+              f"vs analytic {cap:.0f} (err {err:.2%})")
+        assert err < 0.01, (overlap, total, cap)
+
+
+def check_train() -> None:
+    from repro.configs import get_config
+    from repro.configs.base import RunConfig, ShapeConfig, reduce_for_smoke
+    from repro.launch.steps import build_train_step, default_buf_len
+
+    shape = ShapeConfig("smoke", seq_len=1024, global_batch=2, kind="train")
+    cfg = reduce_for_smoke(get_config("starcoder2_3b"))
+    data, cp = 2, 4
+    mesh = make_mesh((data, cp), ("data", "model"))
+    dtype_bytes = np.dtype(cfg.dtype).itemsize
+    budget = kv_exchange_budget(
+        default_buf_len(shape.seq_len, cp), cp,
+        cfg.num_kv_heads, cfg.head_dim, dtype_bytes=dtype_bytes,
+        fwd_and_bwd=True, overlap="chunked",
+        batch=shape.global_batch // data, layers=cfg.num_layers,
+        # embedding/logits gathers and the gradient/loss all-reduce are
+        # model-parallel traffic outside the CP exchange; admit the
+        # kinds but still forbid full-context KV re-gathers.
+        extra={"all-gather": float("inf"), "all-reduce": float("inf")})
+    # full-KV re-gather tripwire: well above the legitimate embedding
+    # and logits gathers (<= one KV row) but below any full-context
+    # multi-layer re-materialization
+    import dataclasses
+    kv_row_bytes = (shape.seq_len * cfg.num_kv_heads * cfg.head_dim *
+                    dtype_bytes)
+    budget = dataclasses.replace(budget,
+                                 full_gather_bytes=float(4 * kv_row_bytes))
+
+    # audit both the plain step and the adaptive-dispatch step (ragged
+    # rows mask compute, not communication — the exchange is static)
+    for dispatch in ("off", "adaptive"):
+        run = RunConfig(arch=cfg.name, shape="smoke",
+                        cp_strategy="flashcp", attention_impl="xla",
+                        cp_overlap="chunked", remat=False,
+                        dispatch=dispatch)
+        with set_mesh(mesh):
+            bundle = build_train_step(cfg, mesh, run, shape)
+            text = bundle.lower().compile().as_text()
+
+        findings = audit_program(text, budget, donate_min_bytes=1 << 16,
+                                 context=f"train/dispatch={dispatch}")
+        errors = [f for f in findings if f.severity == "error"]
+        assert not errors, format_findings(errors)
+        for f in findings:
+            print("  note:", f.render().splitlines()[0])
+
+        totals = collective_totals(text)
+        cap = budget.allowed["collective-permute"]
+        err = abs(totals["collective-permute"] - cap) / cap
+        print(f"OK train step dispatch={dispatch}: collective-permute "
+              f"{totals['collective-permute']:.0f} wire bytes vs analytic "
+              f"{cap:.0f} (err {err:.2%}); kinds={sorted(totals)}")
+        assert err < 0.01, (totals, cap)
+
+
+def main() -> None:
+    which = sys.argv[1] if len(sys.argv) > 1 else "both"
+    if which in ("attn", "both"):
+        check_attn()
+    if which in ("train", "both"):
+        check_train()
+    print("HLO_AUDIT_CHECK_PASS")
+
+
+if __name__ == "__main__":
+    main()

@@ -23,7 +23,7 @@ import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.compat import make_mesh, set_mesh
-from repro.core.baselines import BASELINE_PLANNERS
+from repro.planner.baselines import BASELINE_PLANNERS
 from repro.core.cp_attention import make_cp_context
 from repro.data.packing import doc_ids_and_positions
 from repro.kernels.ref import mha_reference

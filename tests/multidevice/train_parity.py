@@ -21,11 +21,10 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from repro.configs import get_config, reduce_for_smoke, RunConfig
-from repro.configs.base import ShapeConfig
-from repro.core.heuristic import flashcp_plan
-from repro.core.baselines import contiguous_plan
-from repro.core.plan_exec import encode_plan_batch
+from repro.configs import get_config, reduce_for_smoke
+from repro.planner.heuristic import flashcp_plan
+from repro.planner.baselines import contiguous_plan
+from repro.planner.encode import encode_plan_batch
 from repro.compat import make_mesh, set_mesh
 from repro.core.cp_attention import make_cp_context
 from repro.data.packing import doc_ids_and_positions

@@ -1,0 +1,521 @@
+"""repro.analysis regression suite (DESIGN.md §Static-analysis).
+
+Two halves per layer: the checkers pass *clean* on real builder
+outputs, and every class of injected violation is caught by its
+expected rule id — the rule ids are the contract CI reports on, so a
+rename or a silently-dead check fails here.
+"""
+
+import importlib
+import warnings
+
+import numpy as np
+import pytest
+
+from repro.analysis import errors, format_findings
+from repro.analysis.findings import RULES, Finding
+from repro.analysis.hlo_audit import (CommBudget, audit_collectives,
+                                      audit_donation, audit_host_transfers,
+                                      audit_numerics, collective_totals,
+                                      kv_exchange_budget)
+from repro.analysis.lint import lint_source
+from repro.analysis.plan_check import (check_block_tables, check_encoding,
+                                       check_plan, check_serve_state,
+                                       check_work_queue)
+from repro.kernels.doc_attention import (FLAG_LAST, FLAG_VALID,
+                                         build_block_tables,
+                                         build_work_queue)
+from repro.launch.hlo_analysis import (analyze_hlo, collect_collectives,
+                                       schedule_model)
+from repro.planner import encode_plan
+from repro.planner.registry import get_planner
+
+DOC_LENS = np.asarray([300, 120, 260, 180, 164], dtype=np.int64)  # sum 1024
+N = 4
+
+
+def rule_ids(findings):
+    return {f.rule for f in findings}
+
+
+@pytest.fixture(scope="module")
+def flashcp_plan():
+    return get_planner("flashcp")(DOC_LENS, N)
+
+
+@pytest.fixture(scope="module")
+def flashcp_enc(flashcp_plan):
+    return encode_plan(flashcp_plan)
+
+
+def _rank_metadata(enc, n):
+    """Blocking flashcp layout: [local | gathered w/ self-masked]."""
+    ld = enc.doc.reshape(n, enc.t_loc)
+    lp = enc.pos.reshape(n, enc.t_loc)
+    L = enc.gath_doc.shape[-1]
+    gd = np.broadcast_to(enc.gath_doc, (n, L)).copy()
+    seg = np.arange(L) // enc.buf_len
+    gd[seg[None, :] == np.arange(n)[:, None]] = -2
+    gp = np.broadcast_to(enc.gath_pos, (n, L))
+    return (ld, lp, np.concatenate([ld, gd], -1),
+            np.concatenate([lp, gp], -1))
+
+
+# ------------------------------------------------------------------ #
+# findings plumbing
+# ------------------------------------------------------------------ #
+def test_finding_registry():
+    f = Finding("PLAN001", "error", "here", "msg", hint="do x")
+    assert "PLAN001" in f.render() and "do x" in f.render()
+    with pytest.raises(AssertionError):
+        Finding("NOPE999", "error", "here", "msg")
+    assert all(RULES[r] for r in RULES)     # every rule has an invariant
+
+
+# ------------------------------------------------------------------ #
+# Layer 1: clean on real builder outputs
+# ------------------------------------------------------------------ #
+@pytest.mark.parametrize("name", ["flashcp", "contiguous", "llama3",
+                                  "per_doc"])
+def test_clean_planner_outputs(name):
+    planner = get_planner(name)
+    plan = planner(DOC_LENS, N)
+    fs = check_plan(plan,
+                    require_equal_tokens=planner.info.needs_equal_tokens)
+    assert not fs, format_findings(fs)
+    enc = encode_plan(plan)
+    fs = check_encoding(plan, enc)
+    assert not fs, format_findings(fs)
+
+
+def test_clean_tables_and_queues(flashcp_enc):
+    ld, lp, kd, kp = _rank_metadata(flashcp_enc, N)
+    t = build_block_tables(ld, lp, kd, kp, block_q=128, block_k=128)
+    fs = check_block_tables(ld, lp, kd, kp, t.kv_idx, t.kv_nvis,
+                            block_q=128, block_k=128)
+    fs += check_work_queue(t.kv_idx, t.kv_nvis, t.fq_row, t.fq_col,
+                           t.fq_flags)
+    fs += check_work_queue(t.q_idx, t.q_nvis, t.rq_row, t.rq_col,
+                           t.rq_flags)
+    assert not fs, format_findings(fs)
+
+
+# ------------------------------------------------------------------ #
+# Layer 1: injected violations, by expected rule id
+# ------------------------------------------------------------------ #
+def test_double_covered_token_is_plan001():
+    plan = get_planner("flashcp")(DOC_LENS, N)
+    plan.arrays.length[0] += 1          # shard 0 now overlaps its neighbor
+    fs = check_plan(plan, require_equal_tokens=False)
+    assert "PLAN001" in rule_ids(fs)
+
+
+def test_coverage_gap_is_plan001():
+    plan = get_planner("flashcp")(DOC_LENS, N)
+    plan.arrays.length[0] -= 1
+    fs = check_plan(plan, require_equal_tokens=False)
+    assert "PLAN001" in rule_ids(fs)
+
+
+def test_out_of_range_shard_is_plan002():
+    plan = get_planner("flashcp")(DOC_LENS, N)
+    plan.arrays.worker[0] = N + 3
+    fs = check_plan(plan)
+    assert rule_ids(fs) == {"PLAN002"}   # range errors preempt the rest
+
+
+def test_unequal_tokens_is_plan003():
+    plan = get_planner("contiguous")(DOC_LENS, N)
+    moved = plan.arrays.worker[0]
+    plan.arrays.worker[0] = (moved + 1) % N   # coverage intact, Eq.2 broken
+    fs = check_plan(plan, require_equal_tokens=True)
+    assert "PLAN003" in rule_ids(fs)
+
+
+def test_imbalance_bound_is_plan004(flashcp_plan):
+    bad = flashcp_plan.imbalance_ratio() * 0.5
+    fs = check_plan(flashcp_plan, max_imbalance=bad)
+    assert "PLAN004" in rule_ids(fs)
+
+
+def test_corrupt_perm_is_enc001(flashcp_plan, flashcp_enc):
+    import copy
+    enc = copy.deepcopy(flashcp_enc)
+    valid = np.flatnonzero(enc.perm >= 0)
+    enc.perm[valid[0]] = enc.perm[valid[1]]    # duplicate packed position
+    fs = check_encoding(flashcp_plan, enc)
+    assert "ENC001" in rule_ids(fs)
+
+
+def test_dropped_send_is_enc005(flashcp_plan, flashcp_enc):
+    import copy
+    enc = copy.deepcopy(flashcp_enc)
+    j, s = np.unravel_index(int(np.argmax(enc.send_idx >= 0)),
+                            enc.send_idx.shape)
+    enc.send_idx[j, s:] = np.roll(enc.send_idx[j, s:], -1)
+    enc.send_idx[j, -1] = -1                  # drop one sent token
+    flat = j * enc.buf_len + s
+    enc.gath_doc[flat:(j + 1) * enc.buf_len] = np.roll(
+        enc.gath_doc[flat:(j + 1) * enc.buf_len], -1)
+    enc.gath_pos[flat:(j + 1) * enc.buf_len] = np.roll(
+        enc.gath_pos[flat:(j + 1) * enc.buf_len], -1)
+    enc.gath_doc[(j + 1) * enc.buf_len - 1] = -1
+    enc.gath_pos[(j + 1) * enc.buf_len - 1] = 0
+    fs = check_encoding(flashcp_plan, enc)
+    assert "ENC005" in rule_ids(fs)
+
+
+def test_pruned_table_block_is_tab001(flashcp_enc):
+    ld, lp, kd, kp = _rank_metadata(flashcp_enc, N)
+    t = build_block_tables(ld, lp, kd, kp, block_q=128, block_k=128)
+    # drop q-block 0's diagonal visit (kv-block 0 holds the query tokens
+    # themselves, so causal self-visibility makes it provably required)
+    idx, nvis = t.kv_idx.copy(), t.kv_nvis.copy()
+    assert idx[0, 0, 0] == 0 and nvis[0, 0] > 0
+    idx[0, 0, :-1] = idx[0, 0, 1:]
+    nvis[0, 0] -= 1
+    fs = check_block_tables(ld, lp, kd, kp, idx, nvis,
+                            block_q=128, block_k=128)
+    assert "TAB001" in rule_ids(fs)
+
+
+def test_misflagged_queue_is_wq001(flashcp_enc):
+    ld, lp, kd, kp = _rank_metadata(flashcp_enc, N)
+    t = build_block_tables(ld, lp, kd, kp, block_q=128, block_k=128)
+    flags = t.fq_flags.copy()
+    b, s = np.unravel_index(int(np.argmax((flags & FLAG_LAST) > 0)),
+                            flags.shape)
+    flags[b, s] &= ~FLAG_LAST          # output never written back
+    fs = check_work_queue(t.kv_idx, t.kv_nvis, t.fq_row, t.fq_col, flags)
+    assert "WQ001" in rule_ids(fs)
+
+
+def test_non_lpt_order_is_wq002():
+    # two rows, visit counts 2 and 1 — schedule the short row first
+    idx = np.asarray([[[0, 1], [1, 0]]], dtype=np.int32)
+    nvis = np.asarray([[2, 1]], dtype=np.int32)
+    row, col, flags = build_work_queue(idx, nvis)
+    assert not check_work_queue(idx, nvis, row, col, flags)
+    assert row[0].tolist() == [0, 0, 1]             # LPT: long row first
+    perm = np.asarray([2, 0, 1])                    # row 1's step first
+    fs = check_work_queue(idx, nvis, row[:, perm], col[:, perm],
+                          flags[:, perm])
+    assert "WQ002" in rule_ids(fs)
+
+
+def test_dropped_visit_is_wq003(flashcp_enc):
+    ld, lp, kd, kp = _rank_metadata(flashcp_enc, N)
+    t = build_block_tables(ld, lp, kd, kp, block_q=128, block_k=128)
+    col = t.fq_col.copy()
+    b, s = np.unravel_index(int(np.argmax((t.fq_flags & FLAG_VALID) > 0)),
+                            col.shape)
+    col[b, s] = (col[b, s] + 1) % t.kv_idx.shape[-1]   # visit wrong block
+    fs = check_work_queue(t.kv_idx, t.kv_nvis, t.fq_row, col, t.fq_flags)
+    assert "WQ003" in rule_ids(fs)
+
+
+# ------------------------------------------------------------------ #
+# Layer 1: serve block-table conservation
+# ------------------------------------------------------------------ #
+def _serve_scenario():
+    from repro.serve.block_pool import BlockPool
+    from repro.serve.prefix import PrefixCache
+    pool = BlockPool(num_blocks=16, block_size=4)
+    pc = PrefixCache(block_size=4)
+    tokens = list(range(50, 62))             # 3 full blocks
+    a = pool.alloc(4)
+    pc.insert(tokens, a[:3], pool)
+    shared = pc.match(tokens)
+    pool.retain(shared)
+    b = shared + pool.alloc(1)
+    return pool, pc, {"a": list(a), "b": list(b)}
+
+
+def test_serve_scenario_clean():
+    pool, pc, tables = _serve_scenario()
+    assert not check_serve_state(pool, tables, pc)
+    pool.release(tables.pop("a"))
+    assert not check_serve_state(pool, tables, pc)
+
+
+def test_leaked_reference_is_srv002():
+    pool, pc, tables = _serve_scenario()
+    pool.retain([tables["a"][0]])            # reference with no holder
+    fs = check_serve_state(pool, tables, pc)
+    assert "SRV002" in rule_ids(fs)
+
+
+def test_unregistered_sharing_is_srv001():
+    pool, pc, tables = _serve_scenario()
+    tables["c"] = [tables["a"][3]]           # alias a's unique block
+    pool.retain(tables["c"])
+    fs = check_serve_state(pool, tables, pc)
+    assert "SRV001" in rule_ids(fs)
+
+
+def test_out_of_range_block_is_srv003():
+    pool, pc, tables = _serve_scenario()
+    tables["a"][-1] = 99
+    fs = check_serve_state(pool, tables, pc)
+    assert "SRV003" in rule_ids(fs)
+
+
+# ------------------------------------------------------------------ #
+# Layer 2: HLO audit on synthetic modules
+# ------------------------------------------------------------------ #
+NESTED_WHILE_HLO = """\
+HloModule nested, input_output_alias={ {0}: (0, {}, may-alias) }
+
+%sum (a: f32[], b: f32[]) -> f32[] {
+  %a = f32[] parameter(0)
+  %b = f32[] parameter(1)
+  ROOT %add = f32[] add(%a, %b)
+}
+
+%inner_cond (ip: f32[1024]) -> pred[] {
+  %ip = f32[1024]{0} parameter(0)
+  ROOT %lt = pred[] constant(true)
+}
+
+%inner_body (p: f32[1024]) -> f32[1024] {
+  %p = f32[1024]{0} parameter(0)
+  ROOT %ar = f32[1024]{0} all-reduce(%p), replica_groups={{0,1,2,3}}, to_apply=%sum
+}
+
+%outer_cond (oq: f32[1024]) -> pred[] {
+  %oq = f32[1024]{0} parameter(0)
+  ROOT %lt2 = pred[] constant(true)
+}
+
+%outer_body (q: f32[1024]) -> f32[1024] {
+  %q = f32[1024]{0} parameter(0)
+  ROOT %w2 = f32[1024]{0} while(%q), condition=%inner_cond, body=%inner_body, backend_config={"known_trip_count":{"n":"2"}}
+}
+
+ENTRY %main (x: f32[1024]) -> f32[1024] {
+  %x = f32[1024]{0} parameter(0)
+  ROOT %w1 = f32[1024]{0} while(%x), condition=%outer_cond, body=%outer_body, backend_config={"known_trip_count":{"n":"3"}}
+}
+"""
+
+#: all-reduce of 4096B over a 4-group: wire 2*4096*3/4 = 6144 per trip
+AR_WIRE = 6144.0
+
+
+def test_collect_collectives_nested_trips():
+    colls = collect_collectives(NESTED_WHILE_HLO)
+    assert len(colls) == 1
+    c = colls[0]
+    assert c.kind == "all-reduce" and c.group_size == 4
+    assert c.trips == 6.0                          # 3 outer x 2 inner
+    assert collective_totals(NESTED_WHILE_HLO) == {
+        "all-reduce": AR_WIRE * 6}
+    assert analyze_hlo(NESTED_WHILE_HLO).collective_wire_bytes == \
+        pytest.approx(AR_WIRE * 6)
+
+
+def test_schedule_model_edge_cases():
+    # empty program
+    empty = schedule_model("")
+    assert empty.makespan_s == 0.0 and empty.collective_count == 0.0
+    assert analyze_hlo("").flops == 0.0
+    assert collect_collectives("") == []
+    # collective-only program: all comm time is exposed
+    coll_only = ("ENTRY %m (x: f32[1024]) -> f32[1024] {\n"
+                 "  %x = f32[1024]{0} parameter(0)\n"
+                 "  ROOT %ar = f32[1024]{0} all-reduce(%x), "
+                 "replica_groups={{0,1,2,3}}, to_apply=%sum\n}\n")
+    s = schedule_model(coll_only, wire_per_s=1.0)
+    assert s.collective_count == 1
+    assert s.compute_busy_s == 0.0
+    assert s.makespan_s > 0
+    assert s.exposed_comm_s == pytest.approx(s.makespan_s)
+    # nested while: both streams serialize, trips multiply through
+    s = schedule_model(NESTED_WHILE_HLO, wire_per_s=1.0)
+    assert s.collective_count == 6
+    assert s.comm_busy_s == pytest.approx(AR_WIRE * 6)
+
+
+def test_unpredicted_collective_is_hlo101():
+    budget = CommBudget(allowed={"collective-permute": 1e9})
+    fs = audit_collectives(NESTED_WHILE_HLO, budget)
+    assert rule_ids(fs) == {"HLO101"}
+    assert errors(fs)
+
+
+def test_planted_all_gather_is_hlo101(flashcp_enc):
+    """The acceptance-criteria injection: a stray all-gather planted in
+    an otherwise budget-clean program is caught as HLO101."""
+    budget = kv_exchange_budget(flashcp_enc.buf_len, N, 2, 64,
+                                dtype_bytes=4, overlap="chunked")
+    kind = next(iter(budget.allowed))
+    clean = ("ENTRY %m (x: f32[128]) -> f32[128] {\n"
+             "  %x = f32[128]{0} parameter(0)\n"
+             f"  ROOT %cp = f32[128]{{0}} {kind}(%x), "
+             "source_target_pairs={{0,1},{1,2},{2,3},{3,0}}\n}\n")
+    assert not audit_collectives(clean, budget)
+    planted = clean.replace(
+        "ENTRY %m (x: f32[128]) -> f32[128] {\n",
+        "ENTRY %m (x: f32[128]) -> f32[128] {\n"
+        "  %ag = f32[4,2,8192,64]{3,2,1,0} all-gather(%x), "
+        "replica_groups=[1,4], dimensions={1}\n")
+    fs = audit_collectives(planted, budget)
+    assert "HLO101" in rule_ids(fs)
+
+
+def test_over_budget_is_hlo102():
+    budget = CommBudget(allowed={"all-reduce": AR_WIRE * 3})  # half the real
+    fs = audit_collectives(NESTED_WHILE_HLO, budget)
+    assert rule_ids(fs) == {"HLO102"}
+
+
+def test_full_gather_is_hlo103():
+    text = ("ENTRY %m (x: f32[256]) -> f32[1024] {\n"
+            "  %x = f32[256]{0} parameter(0)\n"
+            "  ROOT %ag = f32[1024]{0} all-gather(%x), "
+            "replica_groups=[1,4], dimensions={0}\n}\n")
+    budget = CommBudget(allowed={"all-gather": 1e9},
+                        full_gather_bytes=4096)
+    fs = audit_collectives(text, budget)
+    assert "HLO103" in rule_ids(fs)
+
+
+def test_f64_is_hlo104():
+    fs = audit_numerics("  %c = f64[8]{0} convert(%b)")
+    assert rule_ids(fs) == {"HLO104"}
+    assert not audit_numerics("  %c = f32[8]{0} convert(%b)")
+
+
+def test_host_transfer_is_hlo105():
+    fs = audit_host_transfers("  %o = token[] outfeed(%a, %t)")
+    assert rule_ids(fs) == {"HLO105"}
+    fs = audit_host_transfers(
+        '  %cc = f32[2]{0} custom-call(%a), '
+        'custom_call_target="xla_python_cpu_callback"')
+    assert rule_ids(fs) == {"HLO105"}
+    assert not audit_host_transfers("  %s = f32[2]{0} add(%a, %b)")
+
+
+def test_lost_donation_is_hlo106():
+    # params 0 and 2 aliased; the step builder donated 0, 1 and 2
+    text = ("HloModule m, input_output_alias={ {0}: (0, {}, may-alias), "
+            "{1}: (2, {}, may-alias) }\n\n"
+            "ENTRY %m (a: f32[1024], b: f32[1024], c: f32[1024]) "
+            "-> f32[1024] {\n"
+            "  %a = f32[1024]{0} parameter(0)\n"
+            "  %b = f32[1024]{0} parameter(1)\n"
+            "  %c = f32[1024]{0} parameter(2)\n"
+            "  ROOT %s = f32[1024]{0} add(%a, %b)\n}\n")
+    fs = audit_donation(text, expect_params=[0, 1, 2])
+    assert [f.rule for f in fs] == ["HLO106"]
+    assert "parameter 1" in fs[0].message
+    assert not audit_donation(text, expect_params=[0, 2])
+    # advisory mode: the big non-donated param is a warning
+    fs = audit_donation(text, min_bytes=4096)
+    assert fs and all(f.severity == "warning" for f in fs)
+
+
+def test_kv_exchange_budget_matches_comm_model():
+    from repro.core.workload import comm_bytes
+    b = kv_exchange_budget(128, 4, 2, 16, dtype_bytes=4, fwd_and_bwd=True,
+                           batch=1, layers=4)
+    payload = 4 * comm_bytes(128, 4, 2, 16, dtype_bytes=4,
+                             fwd_and_bwd=True)
+    meta = comm_bytes(128, 4, 1, 1, dtype_bytes=4, fwd_and_bwd=False)
+    assert b.allowed == {"collective-permute": float(payload + meta)}
+    b = kv_exchange_budget(256, 4, 2, 16, overlap="none")
+    assert set(b.allowed) == {"all-gather"}
+
+
+# ------------------------------------------------------------------ #
+# Layer 3: source lint
+# ------------------------------------------------------------------ #
+PLANNER_PATH = "src/repro/planner/fake.py"
+
+
+def test_unseeded_shuffle_is_rng001():
+    src = "import random\n\ndef plan(xs):\n    random.shuffle(xs)\n"
+    fs = lint_source(src, PLANNER_PATH)
+    assert "RNG001" in rule_ids(fs)
+    seeded = ("import random\n\ndef plan(xs):\n"
+              "    random.Random(0).shuffle(xs)\n")
+    assert "RNG001" not in rule_ids(lint_source(seeded, PLANNER_PATH))
+    # outside planner/dispatch the rule does not fire
+    assert "RNG001" not in rule_ids(lint_source(src, "src/repro/x.py"))
+
+
+def test_unseeded_default_rng_is_rng001():
+    src = "import numpy as np\n\ndef plan():\n    return np.random.default_rng()\n"
+    assert "RNG001" in rule_ids(lint_source(src, PLANNER_PATH))
+    src = "import numpy as np\n\ndef plan():\n    return np.random.default_rng(0)\n"
+    assert "RNG001" not in rule_ids(lint_source(src, PLANNER_PATH))
+
+
+def test_set_iteration_is_rng002():
+    src = "def plan(xs):\n    for x in set(xs):\n        x\n"
+    assert "RNG002" in rule_ids(lint_source(src, PLANNER_PATH))
+    src = "def plan(xs):\n    for x in sorted(set(xs)):\n        x\n"
+    assert "RNG002" not in rule_ids(lint_source(src, PLANNER_PATH))
+
+
+def test_traced_branch_in_kernel_is_ker001():
+    src = ("def attn_kernel(q_ref, k_ref, o_ref):\n"
+           "    x = q_ref[0, 0]\n"
+           "    if x > 0:\n"
+           "        o_ref[0, 0] = x\n")
+    fs = lint_source(src, "src/repro/kernels/fake.py")
+    assert "KER001" in rule_ids(fs)
+    ok = ("def attn_kernel(q_ref, k_ref, o_ref, *, block: int):\n"
+          "    if block > 128:\n"
+          "        o_ref[0, 0] = q_ref[0, 0]\n")
+    assert "KER001" not in rule_ids(
+        lint_source(ok, "src/repro/kernels/fake.py"))
+
+
+def test_shim_import_is_dep001():
+    src = "from repro.core.plan import ShardingPlan\n\nShardingPlan\n"
+    assert "DEP001" in rule_ids(lint_source(src, "src/repro/launch/x.py"))
+    # the shims themselves may re-export
+    assert "DEP001" not in rule_ids(
+        lint_source(src, "src/repro/core/plan.py"))
+    ok = "from repro.planner.plan import ShardingPlan\n\nShardingPlan\n"
+    assert "DEP001" not in rule_ids(lint_source(ok, "src/repro/launch/x.py"))
+
+
+def test_hygiene_rules():
+    assert "HYG001" in rule_ids(lint_source("import os\n", "x.py"))
+    assert "HYG002" in rule_ids(
+        lint_source("def f(xs=[]):\n    return xs\n", "x.py"))
+    assert "HYG003" in rule_ids(
+        lint_source("def f(list):\n    return list\n", "x.py"))
+    clean = "import os\n\n\ndef f(xs=()):\n    return os.name, xs\n"
+    assert not lint_source(clean, "x.py")
+
+
+def test_noqa_suppression():
+    src = "import os  # noqa: HYG001\n"
+    assert not lint_source(src, "x.py")
+    src = "import os  # noqa\n"
+    assert not lint_source(src, "x.py")
+
+
+def test_repo_is_lint_clean():
+    from pathlib import Path
+
+    from repro.analysis.lint import default_targets, lint_paths
+    root = Path(__file__).resolve().parent.parent
+    fs = lint_paths(default_targets(root), root=root)
+    assert not fs, format_findings(fs)
+
+
+# ------------------------------------------------------------------ #
+# deprecated shims
+# ------------------------------------------------------------------ #
+@pytest.mark.parametrize("mod", ["plan", "heuristic", "baselines", "ilp",
+                                 "plan_exec"])
+def test_core_shims_warn_on_import(mod):
+    shim = importlib.import_module(f"repro.core.{mod}")
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        importlib.reload(shim)
+    assert any(issubclass(x.category, DeprecationWarning) for x in w), mod

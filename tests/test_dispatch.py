@@ -24,7 +24,7 @@ except ImportError:
     HAVE_HYPOTHESIS = False
 
 from repro.data.distributions import make_rng
-from repro.data.packing import pack_sequence, sample_doc_pool
+from repro.data.packing import pack_sequence
 from repro.data.pipeline import (PipelineConfig, make_batch,
                                  make_dispatch_batch)
 from repro.dispatch import (DispatchConfig, cp_degree_options,

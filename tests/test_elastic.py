@@ -3,7 +3,6 @@ parsing, surviving-topology replanning, speed-weighted balancing, the
 straggler monitor's host EMAs, gradient-accumulation parity, and the
 supervisor's shrink flow."""
 
-import dataclasses
 
 import numpy as np
 import pytest

@@ -9,7 +9,7 @@ import pytest
 pytest.importorskip("hypothesis", reason="property tests need the hypothesis dev dependency")
 from hypothesis import given, settings, strategies as st
 
-from repro.kernels.doc_attention import (KIND_SKIP, build_block_tables)
+from repro.kernels.doc_attention import build_block_tables
 from repro.kernels.ops import doc_attention_xla, doc_flash_attention
 from repro.kernels.ref import doc_mask, mha_reference
 

@@ -221,7 +221,7 @@ def test_block_tables_vectorized_matches_legacy_segmented():
 # planner table emitter
 # --------------------------------------------------------------------- #
 def _enc(cp, lens=(70, 23, 100, 40, 23), B=2):
-    from repro.core.baselines import BASELINE_PLANNERS
+    from repro.planner.baselines import BASELINE_PLANNERS
     from repro.planner import encode_plan_batch
     plans = [BASELINE_PLANNERS["flashcp"](np.asarray(lens, np.int64), cp)
              for _ in range(B)]

@@ -5,9 +5,9 @@ import pytest
 pytest.importorskip("hypothesis", reason="property tests need the hypothesis dev dependency")
 from hypothesis import given, settings, strategies as st
 
-from repro.core.baselines import BASELINE_PLANNERS
-from repro.core.heuristic import flashcp_plan
-from repro.core.plan_exec import (encode_plan, encode_plan_batch,
+from repro.planner.baselines import BASELINE_PLANNERS
+from repro.planner.heuristic import flashcp_plan
+from repro.planner.encode import (encode_plan, encode_plan_batch,
                                   pick_buffer_bucket, trivial_plan)
 
 

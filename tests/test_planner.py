@@ -10,11 +10,11 @@ import pytest
 pytest.importorskip("hypothesis", reason="property tests need the hypothesis dev dependency")
 from hypothesis import given, settings, strategies as st
 
-from repro.core.baselines import (contiguous_plan, llama3_plan, per_doc_plan,
+from repro.planner.baselines import (contiguous_plan, llama3_plan, per_doc_plan,
                                   ring_zigzag_plan)
-from repro.core.heuristic import flashcp_plan, zigzag_doc_shards
-from repro.core.ilp import bnb_plan
-from repro.core.plan import ShardingPlan, validate_plan
+from repro.planner.heuristic import flashcp_plan, zigzag_doc_shards
+from repro.planner.ilp import bnb_plan
+from repro.planner.plan import ShardingPlan, validate_plan
 from repro.core.workload import (comm_saving, comm_tokens_static,
                                  plan_comm_bytes, shard_workload)
 from repro.data.distributions import make_rng
@@ -107,7 +107,7 @@ def test_flashcp_beats_llama3_balance_and_static_comm(dataset):
 def test_comm_bytes_formula():
     # one doc split across 2 workers: head (s=100) is the only non-last
     # shard -> Eq.5 term = 100 tokens
-    from repro.core.plan import Shard
+    from repro.planner.plan import Shard
     plan = ShardingPlan(
         doc_lens=np.asarray([400]),
         shards=[Shard(0, 0, 100, 1), Shard(0, 100, 300, 0)],

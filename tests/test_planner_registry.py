@@ -116,7 +116,6 @@ def test_registry_aliases_and_metadata():
 
 def test_effective_strategy_uses_registry_capabilities():
     from repro.launch.steps import effective_strategy, exec_strategy_of
-    import dataclasses
 
     class Cfg:
         family = "hybrid"

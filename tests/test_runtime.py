@@ -1,8 +1,6 @@
 """Runtime tests: fault tolerance supervision, elastic mesh shrink,
 straggler monitor, sharding rules."""
 
-import numpy as np
-import jax
 import jax.numpy as jnp
 import pytest
 from jax.sharding import PartitionSpec as P

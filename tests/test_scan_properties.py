@@ -3,7 +3,6 @@ selective scan and the chunked ssm scan must equal the naive sequential
 recurrence for arbitrary shapes, chunk sizes, resets and initial states."""
 
 import numpy as np
-import jax
 import jax.numpy as jnp
 import pytest
 
@@ -82,8 +81,7 @@ def test_bnb_proven_optimal_on_tiny_instances(seed):
     """When the search exhausts the tree, the result must dominate every
     explicitly-enumerated whole-doc assignment."""
     import itertools
-    from repro.core.heuristic import _repair_equal_tokens, _Piece, _State
-    from repro.core.ilp import bnb_plan, _evaluate
+    from repro.planner.ilp import bnb_plan, _evaluate
 
     rng = np.random.default_rng(seed)
     n, N = 5, 2
