@@ -1,0 +1,121 @@
+"""Autotune suite (``autotune``, ``BENCH_autotune.json``): predicted-vs-
+measured rank quality of the config tuner on a brute-forceable space.
+
+For a CPU-scale problem (1x2 mesh, Pallas tables, 1K context) and two
+document-length profiles — ``uniform_short`` (lognormal body, no tail)
+and ``heavy_tail`` (two near-window docs over a short body) — this
+suite:
+
+* enumerates the full admissible candidate space
+  (:func:`repro.autotune.enumerate_candidates`),
+* scores every candidate with both the analytic predictor
+  (:func:`repro.autotune.predict`) and the measured trial
+  (:func:`repro.autotune.measure_candidate` — real encodings + emitted
+  visit tables), i.e. *brute-force measures the whole space*,
+* reports the full-space Spearman rank correlation between the two
+  scores (the acceptance headline: >= 0.8), and
+* runs the actual two-stage tuner (:func:`repro.autotune.tune`,
+  predict -> top-K prune -> measure) and checks its pick against the
+  exhaustive-measurement optimum.
+
+Emits ``name,us_per_call,derived`` CSV rows (run.py suite ``autotune``)
+and writes machine-readable ``BENCH_autotune.json`` at the repo root.
+``--smoke`` shrinks the space (two strategies, one dispatch target) for
+CI tier-2; the full run is the committed artifact.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import numpy as np
+
+HERE = os.path.dirname(os.path.abspath(__file__))
+ROOT = os.path.dirname(HERE)
+RESULT_JSON = os.path.join(ROOT, "BENCH_autotune.json")
+
+TOP_K = 8
+
+
+def _profiles() -> dict:
+    """Two deterministic document pools (token lengths)."""
+    uniform = np.clip(np.random.default_rng(42)
+                      .lognormal(4.0, 0.6, 40).astype(int), 16, 256)
+    tail = np.concatenate([
+        [900, 800],
+        np.clip(np.random.default_rng(7)
+                .lognormal(3.5, 0.8, 30).astype(int), 16, 256)])
+    return {"uniform_short": uniform, "heavy_tail": tail}
+
+
+def run(smoke: bool = False):
+    from repro.autotune import (DEFAULT_SPACE, ModelDims, SearchSpace,
+                                TuneProblem, brute_force,
+                                enumerate_candidates, measure_candidate,
+                                predict, spearman, tune)
+
+    problem = TuneProblem(data=1, model=2, context_len=1024, seqs=2,
+                          quantum=128, attention_impl="pallas",
+                          family="dense")
+    dims = ModelDims(num_heads=8, kv_heads=4, head_dim=64,
+                     d_model=512, d_ff=2048)
+    space = SearchSpace(strategies=("flashcp", "contiguous"),
+                        dispatch_targets=(1.1,)) if smoke else DEFAULT_SPACE
+
+    rows = []
+    results = {"problem": problem.as_dict(),
+               "dims": {"num_heads": dims.num_heads,
+                        "kv_heads": dims.kv_heads,
+                        "head_dim": dims.head_dim,
+                        "d_model": dims.d_model, "d_ff": dims.d_ff},
+               "top_k": TOP_K, "smoke": smoke, "profiles": {}}
+
+    for name, pool in _profiles().items():
+        cands = enumerate_candidates(problem, space)
+        t0 = time.time()
+        preds = [predict(c, pool, problem, dims) for c in cands]
+        predict_us = (time.time() - t0) / len(cands) * 1e6
+        t0 = time.time()
+        meas = [measure_candidate(c, pool, problem, dims) for c in cands]
+        measure_us = (time.time() - t0) / len(cands) * 1e6
+
+        rho = spearman([p.step_s for p in preds],
+                       [m.step_s for m in meas])
+        opt, opt_cost = brute_force(cands, meas)
+
+        t0 = time.time()
+        res = tune(pool, problem, dims, space=space, top_k=TOP_K)
+        tune_us = (time.time() - t0) * 1e6
+        match = res.best.key() == opt.key()
+        regret = res.best_measured["step_s"] / opt_cost.step_s - 1.0
+
+        rows.append(f"autotune_{name}_candidates,,{len(cands)}")
+        rows.append(f"autotune_{name}_predict,{predict_us:.0f},per_cand")
+        rows.append(f"autotune_{name}_measure,{measure_us:.0f},per_cand")
+        rows.append(f"autotune_{name}_spearman_full,,{rho:.4f}")
+        rows.append(f"autotune_{name}_tuner_matches_optimum,,{int(match)}")
+        rows.append(f"autotune_{name}_tuner_regret,,{regret:.4f}")
+        rows.append(f"autotune_{name}_tune_wallclock,{tune_us:.0f},")
+        rows.append(f"autotune_{name}_best,,"
+                    f"{'/'.join(str(k) for k in res.best.key())}")
+
+        results["profiles"][name] = {
+            "n_candidates": len(cands),
+            "spearman_full_space": round(rho, 4),
+            "spearman_frontier": round(res.spearman_frontier, 4),
+            "tuner_matches_optimum": bool(match),
+            "tuner_regret": round(regret, 6),
+            "optimum": opt.as_dict(),
+            "tuner_best": res.best.as_dict(),
+            "optimum_step_us": round(opt_cost.step_s * 1e6, 3),
+            "tuner_step_us": round(res.best_measured["step_s"] * 1e6, 3),
+            "signature_key": res.key,
+        }
+
+    if not smoke:
+        with open(RESULT_JSON, "w") as f:
+            json.dump(results, f, indent=1)
+        rows.append(f"autotune_json,,{os.path.basename(RESULT_JSON)}")
+    return rows

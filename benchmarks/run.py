@@ -17,6 +17,8 @@ row is a ratio/summary).  Suites:
            (BENCH_elastic.json)
   resilience  overload shedding goodput + chaos quarantine +
            kill/restore parity (BENCH_resilience.json)
+  autotune  config-tuner rank quality: full-space predicted-vs-measured
+           Spearman + tuner-vs-brute-force optimum (BENCH_autotune.json)
 
 Usage: PYTHONPATH=src python -m benchmarks.run [suite ...]
        PYTHONPATH=src python -m benchmarks.run --suite kernel [--smoke]
@@ -33,10 +35,11 @@ import time
 
 
 def main() -> None:
-    from . import (bench_breakdown, bench_context_window, bench_dispatch,
-                   bench_e2e_cp, bench_elastic, bench_ilp_vs_heuristic,
-                   bench_kernel_efficiency, bench_overlap,
-                   bench_planner_runtime, bench_resilience, bench_serve)
+    from . import (bench_autotune, bench_breakdown, bench_context_window,
+                   bench_dispatch, bench_e2e_cp, bench_elastic,
+                   bench_ilp_vs_heuristic, bench_kernel_efficiency,
+                   bench_overlap, bench_planner_runtime, bench_resilience,
+                   bench_serve)
 
     suites = {
         "fig3": bench_kernel_efficiency.run,
@@ -51,6 +54,7 @@ def main() -> None:
         "dispatch": bench_dispatch.run,
         "elastic": bench_elastic.run,
         "resilience": bench_resilience.run,
+        "autotune": bench_autotune.run,
     }
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("names", nargs="*", metavar="suite",

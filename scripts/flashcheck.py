@@ -13,14 +13,19 @@ Three layers:
    causal-closure of the Eq.5 compact exchange, block-table soundness
    against the dense causal-visibility oracle, work-queue flag/LPT
    discipline, and serve block-pool refcount conservation.
-2. **HLO audit** (``repro.analysis.hlo_audit``) — opt-in via
+2. **Autotune space checks** (``repro.autotune.space``) — the tuner's
+   candidate enumeration must be deterministic (two runs, bit-identical
+   keys, sorted, deduplicated) and every emitted candidate must pass
+   its own re-derivable admissibility predicate (registered strategy,
+   family filter, at least one dispatcher-approved CP degree).
+3. **HLO audit** (``repro.analysis.hlo_audit``) — opt-in via
    ``--hlo-attn`` / ``--hlo-train`` (subprocesses with a simulated
    device mesh): the lowered programs' collectives must match the
    analytic comm budget byte-for-byte (1% slack).
-3. **Source lint** (``repro.analysis.lint``) — unseeded RNG and
-   set-order dependence in planner/dispatch code, traced-value python
-   branches in Pallas kernel bodies, deprecated-shim imports, import
-   hygiene.
+4. **Source lint** (``repro.analysis.lint``) — unseeded RNG and
+   set-order dependence in planner/dispatch/autotune code, traced-value
+   python branches in Pallas kernel bodies, deprecated-shim imports,
+   import hygiene.
 
 Exit status 0 = no error-severity findings; 1 = at least one.
 
@@ -168,6 +173,64 @@ def check_serve_scenario() -> list:
     return out
 
 
+def check_autotune() -> list:
+    """Layer-2 sweep over small CPU-mesh search spaces: enumeration must
+    be deterministic (sorted, deduplicated, stable across calls) and
+    every emitted candidate must pass its own admissibility predicate
+    (TUNE001/TUNE002)."""
+    from repro.analysis.findings import Finding
+    from repro.autotune import (TuneProblem, candidate_admissible,
+                                candidate_degrees, enumerate_candidates)
+
+    problems = {
+        "xla-2way": TuneProblem(data=1, model=2, context_len=512, seqs=2,
+                                quantum=1, attention_impl="xla"),
+        "pallas-2way": TuneProblem(data=1, model=2, context_len=CONTEXT_LEN,
+                                   seqs=2, quantum=BLOCK,
+                                   attention_impl="pallas"),
+        "hybrid-4way": TuneProblem(data=1, model=4, context_len=2048,
+                                   seqs=2, quantum=BLOCK,
+                                   attention_impl="pallas",
+                                   family="hybrid"),
+    }
+    out: list = []
+    for name, problem in problems.items():
+        cands = enumerate_candidates(problem)
+        keys = [c.key() for c in cands]
+        if keys != sorted(set(keys)):
+            out.append(Finding(
+                "TUNE001", "error", f"autotune/{name}",
+                "enumeration is not sorted+deduplicated by Candidate.key",
+                hint="enumerate_candidates must emit sorted unique keys"))
+        rerun = [c.key() for c in enumerate_candidates(problem)]
+        if rerun != keys:
+            out.append(Finding(
+                "TUNE001", "error", f"autotune/{name}",
+                f"two enumerations disagree ({len(keys)} vs "
+                f"{len(rerun)} candidates)",
+                hint="enumeration must depend only on (problem, space)"))
+        for cand in cands:
+            if not candidate_admissible(cand, problem):
+                out.append(Finding(
+                    "TUNE002", "error", f"autotune/{name}",
+                    f"enumerated candidate fails admissibility: "
+                    f"{cand.key()}",
+                    hint="enumerate_candidates must filter through "
+                         "candidate_admissible"))
+                continue
+            degrees = candidate_degrees(cand, problem)
+            bad = [g for g in degrees
+                   if problem.model % g or problem.context_len % g]
+            if not degrees or bad:
+                out.append(Finding(
+                    "TUNE002", "error", f"autotune/{name}",
+                    f"candidate {cand.key()} has invalid degrees "
+                    f"{bad or degrees}",
+                    hint="cp_degree_options must enforce g | model and "
+                         "g | context"))
+    return out
+
+
 def run_lint() -> list:
     return lint_paths(default_targets(ROOT), root=ROOT)
 
@@ -223,6 +286,10 @@ def main(argv=None) -> int:
     print(f"[plan] {n_configs} configs "
           f"({len(archs)} archs x CP{list(cps)}), "
           f"{len(errors(findings))} total errors so far")
+
+    fs = check_autotune()
+    findings += fs
+    print(f"[autotune] 3 search spaces: {len(errors(fs))} errors")
 
     if not args.fast:
         fs = check_serve_scenario()

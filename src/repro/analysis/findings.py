@@ -65,6 +65,9 @@ RULES: dict[str, str] = {
     "SRV001": "no cross-request block aliasing without a prefix-trie entry",
     "SRV002": "block refcounts conserve against table uses + cache + free list",
     "SRV003": "block-table entries are valid pool block ids",
+    # --- Layer 1: autotune search space ----------------------------- #
+    "TUNE001": "candidate enumeration is deterministic, sorted, and deduplicated",
+    "TUNE002": "every enumerated candidate passes its own admissibility predicate",
     # --- Layer 2: HLO audit ---------------------------------------- #
     "HLO101": "no collective kind the plan's comm budget didn't predict",
     "HLO102": "per-kind collective bytes within the analytic comm budget",
@@ -73,8 +76,8 @@ RULES: dict[str, str] = {
     "HLO105": "no host transfers (infeed/outfeed/send/recv/host callbacks)",
     "HLO106": "large hot-loop buffers are donated (input_output_alias)",
     # --- Layer 3: repo lint ---------------------------------------- #
-    "RNG001": "no unseeded RNG in planner/ or dispatch/ (replay purity)",
-    "RNG002": "no set-iteration-order dependence in planner/ or dispatch/",
+    "RNG001": "no unseeded RNG in planner/, dispatch/, or autotune/ (replay purity)",
+    "RNG002": "no set-iteration-order dependence in planner/dispatch/autotune",
     "KER001": "no traced-value Python branching in Pallas kernel bodies",
     "DEP001": "no imports of deprecated repro.core.* shims outside the shims",
     "HYG001": "no unused imports",

@@ -2,10 +2,11 @@
 
 Rules for the failure modes PR review keeps catching by hand:
 
-* **RNG001 / RNG002** (scoped to ``planner/`` and ``dispatch/``): any
-  unseeded RNG call or set-iteration-order dependence breaks the
-  ``(seed, step) -> plan`` replay purity elastic recovery relies on —
-  a recovered worker must re-derive byte-identical plans.
+* **RNG001 / RNG002** (scoped to ``planner/``, ``dispatch/``, and
+  ``autotune/``): any unseeded RNG call or set-iteration-order
+  dependence breaks the ``(seed, step) -> plan`` replay purity elastic
+  recovery relies on — a recovered worker must re-derive byte-identical
+  plans, and a tuned config must be cache-stable across processes.
 * **KER001**: Python ``if``/``while`` on traced values inside a Pallas
   kernel body silently bakes one branch into the compiled kernel (or
   fails to trace); ``@pl.when`` is the sanctioned idiom.
@@ -348,7 +349,7 @@ def _hygiene_rules(tree: ast.Module, path: str,
 # --------------------------------------------------------------------- #
 def lint_source(source: str, path: str = "<string>") -> list[Finding]:
     """Lint one module's source.  ``path`` scopes the path-dependent
-    rules (RNG in planner//dispatch/, DEP outside repro/core/) and
+    rules (RNG in planner//dispatch//autotune/, DEP outside repro/core/) and
     prefixes locations."""
     try:
         tree = ast.parse(source)
@@ -358,7 +359,8 @@ def lint_source(source: str, path: str = "<string>") -> list[Finding]:
                         hint="file does not parse")]
     norm = path.replace("\\", "/")
     findings: list[Finding] = []
-    if "/planner/" in norm or "/dispatch/" in norm:
+    if "/planner/" in norm or "/dispatch/" in norm \
+            or "/autotune/" in norm:
         findings += _rng_rules(tree, path)
     findings += _kernel_rules(tree, path)
     findings += _dep_rules(tree, path)

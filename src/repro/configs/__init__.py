@@ -6,7 +6,9 @@ defines ``CONFIG: ModelConfig`` with the exact published dimensions.
 
 from __future__ import annotations
 
-from .base import ModelConfig, RunConfig, ShapeConfig, SHAPES, reduce_for_smoke
+from .base import (ModelConfig, RunConfig, ShapeConfig, SHAPES,
+                   reduce_for_smoke, run_config_from_dict,
+                   run_config_to_dict)
 
 from . import (
     dbrx_132b,
@@ -39,4 +41,5 @@ def get_config(name: str) -> ModelConfig:
 
 
 __all__ = ["ModelConfig", "RunConfig", "ShapeConfig", "SHAPES", "ARCHS",
-           "get_config", "reduce_for_smoke"]
+           "get_config", "reduce_for_smoke", "run_config_to_dict",
+           "run_config_from_dict"]

@@ -10,7 +10,8 @@ from __future__ import annotations
 import dataclasses
 from typing import Literal
 
-__all__ = ["ModelConfig", "ShapeConfig", "RunConfig", "SHAPES", "reduce_for_smoke"]
+__all__ = ["ModelConfig", "ShapeConfig", "RunConfig", "SHAPES",
+           "reduce_for_smoke", "run_config_to_dict", "run_config_from_dict"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -205,6 +206,20 @@ class RunConfig:
     checkpoint_every: int = 200
     checkpoint_dir: str = "/tmp/repro_ckpt"
     seed: int = 0
+
+
+def run_config_to_dict(run: RunConfig) -> dict:
+    """JSON-serializable field dict of a :class:`RunConfig` (every field
+    is a scalar, so ``asdict`` round-trips losslessly)."""
+    return dataclasses.asdict(run)
+
+
+def run_config_from_dict(d: dict) -> RunConfig:
+    """Inverse of :func:`run_config_to_dict`.  Unknown keys are ignored so
+    tuned configs written by a newer tuner still load (the autotuner's
+    cache stores these dicts — DESIGN.md §Autotune)."""
+    known = {f.name for f in dataclasses.fields(RunConfig)}
+    return RunConfig(**{k: v for k, v in d.items() if k in known})
 
 
 def reduce_for_smoke(cfg: ModelConfig) -> ModelConfig:

@@ -130,7 +130,8 @@ class DispatchPlan:
         return out
 
 
-def cp_degree_options(cfg: DispatchConfig, context_len: int) -> list[int]:
+def cp_degree_options(cfg: DispatchConfig, context_len: int,
+                      *, strict: bool = True) -> list[int]:
     """Admissible CP degrees, ascending.
 
     A degree ``g`` is admissible iff the mesh re-tiles cleanly and the
@@ -144,6 +145,11 @@ def cp_degree_options(cfg: DispatchConfig, context_len: int) -> list[int]:
       the per-worker slice ``C / g`` divides by the configured quantum —
       with the Pallas block size as the quantum this is exactly the
       "block-divisible rank slices" requirement of the visit tables.
+
+    ``strict=False`` returns ``[]`` instead of raising when no degree (or
+    a pinned ``fixed_cp``) is admissible — the autotuner probes whole
+    config spaces and treats an empty list as "candidate inadmissible"
+    (DESIGN.md §Autotune).
     """
     hi = cfg.max_cp or cfg.model
     q = max(cfg.quantum, 1)
@@ -161,12 +167,14 @@ def cp_degree_options(cfg: DispatchConfig, context_len: int) -> list[int]:
         opts.append(g)
     if cfg.fixed_cp:
         if cfg.fixed_cp not in opts:
+            if not strict:
+                return []
             raise ValueError(
                 f"fixed_cp={cfg.fixed_cp} inadmissible for mesh "
                 f"{cfg.data}x{cfg.model}, seqs={cfg.seqs}, "
                 f"C={context_len} (admissible: {opts})")
         return [cfg.fixed_cp]
-    if not opts:
+    if not opts and strict:
         raise ValueError(
             f"no admissible CP degree for mesh {cfg.data}x{cfg.model}, "
             f"seqs={cfg.seqs}, C={context_len}")

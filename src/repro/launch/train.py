@@ -20,6 +20,12 @@ survivors and finishes):
         --hosts 4 --batch 8 --steps 12 --ckpt-every 2 --dispatch \
         --fail-at 6:3
 
+Autotune example (search the run-config knobs with the cost-model
+tuner before training; ``--autotune-dry`` prints the pick and exits):
+
+    PYTHONPATH=src python -m repro.launch.train --smoke --mesh 1x2 \
+        --batch 2 --autotune --autotune-dry
+
 Production shapes lower through the same path (see launch/dryrun.py for
 the no-hardware variant).
 """
@@ -332,6 +338,25 @@ def train(args) -> dict:
     # resolve through the planner registry: unknown --strategy fails fast
     # with the list of registered planners.
     get_planner(run.cp_strategy)
+    if getattr(args, "autotune", False):
+        from repro.autotune import autotune_run
+        run, tuned = autotune_run(
+            run, cfg, data=d_axis, model=cp, context_len=args.seq_len,
+            seqs=args.batch, dataset=args.dataset,
+            cache_dir=getattr(args, "autotune_cache", ""),
+            top_k=getattr(args, "autotune_topk", 8))
+        dispatch = run.dispatch == "adaptive"
+        print(f"[autotune] {'cache hit' if tuned.cached else 'searched'} "
+              f"{tuned.n_candidates} candidates (top-{tuned.top_k} "
+              f"measured): {run.cp_strategy}/{run.cp_overlap}/"
+              f"{run.kernel_grid}/{run.dispatch}/{run.kv_comm_dtype} "
+              f"frontier_rho={tuned.spearman_frontier:.2f}", flush=True)
+        if getattr(args, "autotune_dry", False):
+            return {"final_step": 0, "losses": [],
+                    "autotune": {"best": tuned.best.as_dict(),
+                                 "key": tuned.key, "cached": tuned.cached,
+                                 "n_candidates": tuned.n_candidates},
+                    "run_config": tuned.run_config}
     if dispatch:
         return _train_dispatch(args, cfg, run, (d_axis, cp))
     strategy = effective_strategy(cfg, run.cp_strategy)
@@ -497,6 +522,17 @@ def main():
                     help="max cross-group token/workload imbalance before "
                          "the dispatcher escalates the CP degree")
     ap.add_argument("--dispatch-min-cp", type=int, default=1)
+    ap.add_argument("--autotune", action="store_true",
+                    help="search run-config knobs (strategy/overlap/grid/"
+                         "dispatch/kv dtype) with the cost-model autotuner "
+                         "before training (DESIGN.md §Autotune)")
+    ap.add_argument("--autotune-cache", default="",
+                    help="directory for the content-addressed tune result "
+                         "cache ('' = no persistence)")
+    ap.add_argument("--autotune-topk", type=int, default=8,
+                    help="measured-trial frontier size")
+    ap.add_argument("--autotune-dry", action="store_true",
+                    help="tune and print the selected config, skip training")
     ap.add_argument("--no-remat", action="store_true")
     ap.add_argument("--fail-at", default="", metavar="STEP[:HOSTS]",
                     help="inject a failure at STEP; ':h1,h2' marks those "
@@ -512,8 +548,12 @@ def main():
     ap.add_argument("--max-restarts", type=int, default=10)
     args = ap.parse_args()
     out = train(args)
-    print(f"[train] done at step {out['final_step']}; "
-          f"loss {out['losses'][0]:.3f} -> {out['losses'][-1]:.3f}")
+    if out["losses"]:
+        print(f"[train] done at step {out['final_step']}; "
+              f"loss {out['losses'][0]:.3f} -> {out['losses'][-1]:.3f}")
+    else:
+        print(f"[train] done at step {out['final_step']} "
+              f"(no training steps ran)")
 
 
 if __name__ == "__main__":

@@ -24,9 +24,9 @@ The legacy ``repro.core.plan`` / ``heuristic`` / ``baselines`` / ``ilp`` /
 from .plan import (Shard, ShardArrays, ShardingPlan, make_whole_doc_plan,
                    merge_adjacent_shards, shard_workload_array,
                    validate_plan)
-from .registry import (Planner, PlannerInfo, RegisteredPlanner,
-                       available_planners, get_planner, planner_info,
-                       register_planner)
+from .registry import (RECURRENT_FAMILIES, Planner, PlannerInfo,
+                       RegisteredPlanner, available_planners, get_planner,
+                       planner_info, planners_for_family, register_planner)
 from .heuristic import HeuristicStats, flashcp_plan, zigzag_doc_shards
 from .baselines import (BASELINE_PLANNERS, contiguous_plan, llama3_plan,
                         per_doc_plan, ring_zigzag_plan)
@@ -41,7 +41,8 @@ __all__ = [
     "Shard", "ShardArrays", "ShardingPlan", "make_whole_doc_plan",
     "merge_adjacent_shards", "shard_workload_array", "validate_plan",
     "Planner", "PlannerInfo", "RegisteredPlanner", "available_planners",
-    "get_planner", "planner_info", "register_planner",
+    "get_planner", "planner_info", "planners_for_family",
+    "RECURRENT_FAMILIES", "register_planner",
     "HeuristicStats", "flashcp_plan", "zigzag_doc_shards",
     "BASELINE_PLANNERS", "contiguous_plan", "llama3_plan", "per_doc_plan",
     "ring_zigzag_plan",

@@ -53,7 +53,7 @@ def _chunked_plan_arrays(doc_lens: np.ndarray, chunk_bounds: np.ndarray,
     description="Per-Seq 2N-chunk zigzag sharding (Llama3 CP); full-KV "
                 "all-gather",
     comm_style="allgather", exec_style="allgather",
-    order_invariant=False, cost_hint="vectorized")
+    order_invariant=False, cost_hint="vectorized", context_multiple=2)
 def llama3_plan(doc_lens: Sequence[int], num_workers: int,
                 *, validate: bool = True) -> ShardingPlan:
     """Per-Seq sharding: 2N uniform chunks of the packed sequence, worker i

@@ -39,7 +39,12 @@ import numpy as np
 from .plan import ShardingPlan
 
 __all__ = ["Planner", "PlannerInfo", "RegisteredPlanner", "register_planner",
-           "get_planner", "available_planners", "planner_info"]
+           "get_planner", "available_planners", "planner_info",
+           "planners_for_family", "RECURRENT_FAMILIES"]
+
+#: model families whose step builders require ``preserves_token_order``
+#: planners (SSM state flows rank i -> i+1 across the CP axis)
+RECURRENT_FAMILIES = ("hybrid", "ssm")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -55,6 +60,9 @@ class PlannerInfo:
     preserves_token_order: bool = False
     supports_target_ratio: bool = False
     cost_hint: str = "vectorized"     # "vectorized" | "search" | "exponential"
+    #: packed context must be a multiple of ``context_multiple * N``
+    #: (llama3's 2N zigzag chunking; 1 for everyone else)
+    context_multiple: int = 1
     aliases: tuple[str, ...] = ()
 
 
@@ -137,3 +145,18 @@ def available_planners(*, include_aliases: bool = False) -> list[str]:
 
 def planner_info(name: str) -> PlannerInfo:
     return get_planner(name).info
+
+
+def planners_for_family(family: str) -> list[str]:
+    """Registered planner names whose capability metadata admits a model
+    family: recurrent families (:data:`RECURRENT_FAMILIES`) require
+    ``preserves_token_order``; every other family admits any planner.
+
+    :func:`repro.launch.steps.effective_strategy` *swaps* an inadmissible
+    request for ``contiguous`` at step-build time; the autotuner uses this
+    list to never emit the inadmissible candidate in the first place
+    (DESIGN.md §Autotune).
+    """
+    return [name for name in available_planners()
+            if family not in RECURRENT_FAMILIES
+            or get_planner(name).info.preserves_token_order]

@@ -1,0 +1,391 @@
+"""Autotuner search contract (DESIGN.md §Autotune).
+
+Properties (hypothesis where available, fixed-seed fallback otherwise):
+
+* **prune preserves the optimum** — when the predictor ranks like the
+  measurement, the two-stage search returns the brute-force argmin for
+  any frontier size; with ``top_k >= |space|`` it returns the measured
+  argmin for *any* (even adversarial) predictor;
+* **admissibility** — every enumerated candidate passes the dispatcher's
+  own divisibility checks (``g | model`` axis, ``C % g == 0``, quantum
+  alignment) and the planner registry's family capability filter;
+* **monotonicity** — more modeled comm volume never predicts less comm
+  time, later-arriving payloads never reduce exposed comm, higher
+  imbalance never predicts lower step time; int8 wire never costs more
+  comm time than native end-to-end;
+* **determinism** — same inputs give byte-identical search results in
+  one process and across processes;
+* **cache round-trip** — a hit reproduces the payload without
+  re-measuring; corrupt or version-skewed entries read as misses.
+"""
+
+import json
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+from repro.autotune import (DEFAULT_SPACE, Candidate, ModelDims, ResultCache,
+                            SearchSpace, TuneProblem, brute_force,
+                            candidate_admissible, candidate_degrees,
+                            comm_seconds, enumerate_candidates,
+                            measure_candidate, pipeline_exposed, predict,
+                            prune_topk, scale_by_imbalance, signature_key,
+                            spearman, tune, tune_signature)
+from repro.dispatch import DispatchConfig, cp_degree_options
+from repro.planner import available_planners, get_planner
+
+DIMS = ModelDims(num_heads=4, kv_heads=2, head_dim=32, d_model=128, d_ff=512)
+
+#: small spaces used by the search properties (<= 64 points)
+SMALL_SPACE = SearchSpace(strategies=("flashcp", "llama3"),
+                          grids=("flat",), dispatch_targets=(1.1, 1.3))
+XLA_PROBLEM = TuneProblem(data=1, model=2, context_len=512, seqs=2,
+                          quantum=1, attention_impl="xla", family="dense")
+PALLAS_PROBLEM = TuneProblem(data=1, model=2, context_len=1024, seqs=2,
+                             quantum=128, attention_impl="pallas",
+                             family="dense")
+
+
+def _pool(seed=0, n=24, lo=16, hi=200):
+    return np.random.default_rng(seed).integers(lo, hi, n).astype(np.int64)
+
+
+# --------------------------------------------------------------------- #
+# enumeration: admissibility + determinism + canonicalization
+# --------------------------------------------------------------------- #
+@pytest.mark.parametrize("problem", [
+    XLA_PROBLEM,
+    PALLAS_PROBLEM,
+    TuneProblem(data=2, model=2, context_len=2048, seqs=4, quantum=16,
+                attention_impl="xla", family="dense"),
+    TuneProblem(data=1, model=4, context_len=1024, seqs=4, quantum=16,
+                attention_impl="xla", family="hybrid"),
+])
+def test_enumerated_candidates_are_admissible(problem):
+    cands = enumerate_candidates(problem)
+    assert cands, "space unexpectedly empty"
+    for cand in cands:
+        assert candidate_admissible(cand, problem)
+        assert cand.cp_strategy in available_planners()
+        degrees = candidate_degrees(cand, problem)
+        assert degrees
+        for g in degrees:
+            # the dispatcher's divisibility contract, re-derived
+            assert problem.model % g == 0
+            assert problem.context_len % g == 0
+            assert (problem.context_len // g) % max(problem.quantum, 1) == 0
+        # family capability: recurrent families only get order-preserving
+        # planners
+        if problem.family in ("hybrid", "ssm"):
+            assert get_planner(cand.cp_strategy).info.preserves_token_order
+
+
+def test_enumeration_is_deterministic_and_deduplicated():
+    a = enumerate_candidates(PALLAS_PROBLEM)
+    b = enumerate_candidates(PALLAS_PROBLEM)
+    assert a == b
+    keys = [c.key() for c in a]
+    assert keys == sorted(keys)
+    assert len(keys) == len(set(keys))
+
+
+def test_canonicalization_pins_inert_knobs():
+    # non-pallas run never lowers tables: the grid knob must be pinned
+    for cand in enumerate_candidates(XLA_PROBLEM):
+        assert cand.kernel_grid == "flat"
+        if cand.dispatch == "off":
+            assert cand.dispatch_target_imbalance == pytest.approx(1.1)
+    # a 1x1 mesh moves no KV: comm knobs pinned
+    solo = TuneProblem(data=1, model=1, context_len=512, seqs=1,
+                       quantum=1, attention_impl="xla", family="dense")
+    for cand in enumerate_candidates(solo):
+        assert cand.cp_overlap == "chunked"
+        assert cand.kv_comm_dtype == "native"
+
+
+def test_emitted_degrees_match_strict_dispatcher():
+    # strict=False mirrors the raising path wherever that path succeeds
+    for cand in enumerate_candidates(PALLAS_PROBLEM):
+        fixed = 0 if cand.dispatch == "adaptive" else PALLAS_PROBLEM.model
+        mult = get_planner(cand.cp_strategy).info.context_multiple
+        cfg = DispatchConfig(
+            data=PALLAS_PROBLEM.data, model=PALLAS_PROBLEM.model,
+            seqs=PALLAS_PROBLEM.seqs,
+            target_imbalance=cand.dispatch_target_imbalance,
+            min_cp=1, fixed_cp=fixed, quantum=PALLAS_PROBLEM.quantum,
+            bin_quantum=mult * PALLAS_PROBLEM.model if mult > 1 else 1)
+        assert candidate_degrees(cand, PALLAS_PROBLEM) == \
+            cp_degree_options(cfg, PALLAS_PROBLEM.context_len)
+
+
+# --------------------------------------------------------------------- #
+# prune preserves the optimum
+# --------------------------------------------------------------------- #
+def _synthetic_cost(seed):
+    """Deterministic synthetic cost model keyed by candidate identity."""
+    def fn(cand, pool, problem, dims):
+        h = abs(hash((seed,) + cand.key())) % 10_000
+        est = predict(cand, pool, problem, dims)
+        return type(est)(**{**est.as_dict(), "step_s": 1e-6 * (1 + h)})
+    return fn
+
+
+def _prune_case(seed, k):
+    pool = _pool(seed)
+    cands = enumerate_candidates(XLA_PROBLEM, SMALL_SPACE)
+    assert 1 < len(cands) <= 64
+    cost = _synthetic_cost(seed)
+    # predictor == measurement: pruning can never drop the optimum
+    res = tune(pool, XLA_PROBLEM, DIMS, space=SMALL_SPACE, top_k=k,
+               predict_fn=cost, measure_fn=cost)
+    costs = [cost(c, pool, XLA_PROBLEM, DIMS) for c in cands]
+    opt, opt_cost = brute_force(cands, costs)
+    assert res.best == opt
+    assert res.best_measured["step_s"] == pytest.approx(opt_cost.step_s)
+
+    # adversarial predictor, full-width frontier: still exact (the
+    # brute-force escape hatch)
+    adversary = _synthetic_cost(seed + 1)
+    res_full = tune(pool, XLA_PROBLEM, DIMS, space=SMALL_SPACE,
+                    top_k=len(cands), predict_fn=adversary, measure_fn=cost)
+    assert res_full.best == opt
+
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=20, deadline=None)
+    @given(seed=st.integers(0, 10_000), k=st.integers(1, 64))
+    def test_prune_preserves_optimum(seed, k):
+        _prune_case(seed, k)
+else:
+    @pytest.mark.parametrize("seed,k",
+                             [(0, 1), (1, 2), (2, 8), (3, 64), (4, 3),
+                              (5, 16)])
+    def test_prune_preserves_optimum(seed, k):
+        """Fixed-seed fallback when hypothesis is unavailable."""
+        _prune_case(seed, k)
+
+
+def test_prune_topk_deterministic_order():
+    pool = _pool(3)
+    cands = enumerate_candidates(XLA_PROBLEM, SMALL_SPACE)
+    ests = [predict(c, pool, XLA_PROBLEM, DIMS) for c in cands]
+    front = prune_topk(cands, ests, 5)
+    assert len(front) == 5
+    scored = [(e.step_s, c.key()) for c, e in front]
+    assert scored == sorted(scored)
+    # input order must not matter
+    rev = prune_topk(cands[::-1], ests[::-1], 5)
+    assert [c.key() for c, _ in rev] == [c.key() for c, _ in front]
+
+
+# --------------------------------------------------------------------- #
+# monotonicity
+# --------------------------------------------------------------------- #
+def _monotone_case(seed):
+    rng = np.random.default_rng(seed)
+    # comm_seconds: non-decreasing in wire bytes
+    a, b = sorted(rng.uniform(0, 1e9, 2))
+    assert comm_seconds(a) <= comm_seconds(b)
+
+    # pipeline_exposed: raising any hop's comm never lowers exposed;
+    # raising any hop's compute never raises it
+    hops = int(rng.integers(1, 6))
+    comm = rng.uniform(0, 1e-3, hops)
+    comp = rng.uniform(0, 1e-3, hops)
+    base = pipeline_exposed(comm, comp)
+    i = int(rng.integers(hops))
+    bump = float(rng.uniform(0, 1e-3))
+    more_comm = comm.copy()
+    more_comm[i] += bump
+    assert pipeline_exposed(more_comm, comp) >= base - 1e-18
+    more_comp = comp.copy()
+    more_comp[i] += bump
+    assert pipeline_exposed(comm, more_comp) <= base + 1e-18
+
+    # scale_by_imbalance: non-decreasing in both arguments
+    t = float(rng.uniform(0, 1e-2))
+    i1, i2 = sorted(rng.uniform(1.0, 3.0, 2))
+    assert scale_by_imbalance(t, i1) <= scale_by_imbalance(t, i2)
+    assert scale_by_imbalance(t, i1) >= t
+
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=50, deadline=None)
+    @given(seed=st.integers(0, 100_000))
+    def test_cost_primitives_monotone(seed):
+        _monotone_case(seed)
+else:
+    @pytest.mark.parametrize("seed", range(12))
+    def test_cost_primitives_monotone(seed):
+        """Fixed-seed fallback when hypothesis is unavailable."""
+        _monotone_case(seed)
+
+
+@pytest.mark.parametrize("fn", [predict, measure_candidate])
+def test_int8_wire_never_costs_more_comm(fn):
+    pool = _pool(7)
+    base = Candidate(cp_strategy="flashcp", dispatch="off",
+                     kv_comm_dtype="native")
+    quant = Candidate(cp_strategy="flashcp", dispatch="off",
+                      kv_comm_dtype="int8")
+    a = fn(base, pool, XLA_PROBLEM, DIMS)
+    b = fn(quant, pool, XLA_PROBLEM, DIMS)
+    assert b.comm_bytes <= a.comm_bytes
+    assert b.comm_s <= a.comm_s
+
+
+def test_more_comm_volume_never_predicts_less_comm_time():
+    # scale the pool's doc count up: more cross-rank KV, never less
+    # predicted comm time at a fixed config
+    cand = Candidate(cp_strategy="llama3", cp_overlap="none",
+                     dispatch="off")
+    small = predict(cand, _pool(11, n=8), XLA_PROBLEM, DIMS)
+    large = predict(cand, _pool(11, n=32), XLA_PROBLEM, DIMS)
+    assert large.comm_bytes >= small.comm_bytes
+    assert large.comm_s >= small.comm_s
+
+
+# --------------------------------------------------------------------- #
+# determinism
+# --------------------------------------------------------------------- #
+def test_search_deterministic_in_process():
+    pool = _pool(5)
+    a = tune(pool, PALLAS_PROBLEM, DIMS, top_k=4)
+    b = tune(pool, PALLAS_PROBLEM, DIMS, top_k=4)
+    assert a.to_json() == b.to_json()
+    assert a.run_config == b.run_config
+
+
+_SUBPROC_SNIPPET = """
+import numpy as np
+from repro.autotune import ModelDims, SearchSpace, TuneProblem, tune
+pool = np.random.default_rng(5).integers(16, 200, 24).astype(np.int64)
+problem = TuneProblem(data=1, model=2, context_len=512, seqs=2,
+                      quantum=1, attention_impl="xla", family="dense")
+dims = ModelDims(num_heads=4, kv_heads=2, head_dim=32, d_model=128,
+                 d_ff=512)
+space = SearchSpace(strategies=("flashcp", "llama3"), grids=("flat",),
+                    dispatch_targets=(1.1, 1.3))
+print(tune(pool, problem, dims, space=space, top_k=4).to_json())
+"""
+
+
+def test_search_deterministic_across_processes():
+    root = Path(__file__).resolve().parent.parent
+    outs = []
+    for _ in range(2):
+        proc = subprocess.run(
+            [sys.executable, "-c", _SUBPROC_SNIPPET],
+            capture_output=True, text=True, timeout=300,
+            env={**os.environ, "PYTHONPATH": str(root / "src"),
+                 "PYTHONHASHSEED": "random", "JAX_PLATFORMS": "cpu"})
+        assert proc.returncode == 0, proc.stderr
+        outs.append(proc.stdout.strip().splitlines()[-1])
+    assert outs[0] == outs[1]
+    payload = json.loads(outs[0])
+    assert payload["best"]["cp_strategy"] in available_planners()
+
+
+# --------------------------------------------------------------------- #
+# result cache
+# --------------------------------------------------------------------- #
+def test_cache_round_trip(tmp_path):
+    pool = _pool(9)
+    cache = ResultCache(tmp_path)
+    first = tune(pool, XLA_PROBLEM, DIMS, space=SMALL_SPACE, top_k=4,
+                 cache=cache)
+    assert not first.cached
+    assert cache.misses == 1
+
+    def never(*_a, **_k):
+        raise AssertionError("cache hit must not re-measure")
+
+    second = tune(pool, XLA_PROBLEM, DIMS, space=SMALL_SPACE, top_k=4,
+                  cache=cache, predict_fn=never, measure_fn=never)
+    assert second.cached
+    assert second.to_json() == first.to_json()
+    assert second.run_config == first.run_config
+
+
+def test_cache_corrupt_and_version_skew_read_as_misses(tmp_path):
+    pool = _pool(9)
+    cache = ResultCache(tmp_path)
+    first = tune(pool, XLA_PROBLEM, DIMS, space=SMALL_SPACE, top_k=4,
+                 cache=cache)
+    entry = tmp_path / f"tune_{first.key}.json"
+    assert entry.exists()
+
+    entry.write_text("{not json")
+    redone = tune(pool, XLA_PROBLEM, DIMS, space=SMALL_SPACE, top_k=4,
+                  cache=cache)
+    assert not redone.cached
+    assert redone.to_json() == first.to_json()
+
+    stale = json.loads(entry.read_text())
+    stale["version"] = -1
+    entry.write_text(json.dumps(stale))
+    redone2 = tune(pool, XLA_PROBLEM, DIMS, space=SMALL_SPACE, top_k=4,
+                   cache=cache)
+    assert not redone2.cached
+
+
+def test_signature_quantizes_lengths():
+    pool = np.array([100, 200, 300], dtype=np.int64)
+    same_bucket = np.array([97, 193, 290], dtype=np.int64)  # ceil to 64s
+    other = np.array([100, 200, 900], dtype=np.int64)
+    key = signature_key(tune_signature(XLA_PROBLEM, DIMS, pool,
+                                       DEFAULT_SPACE))
+    # identical buckets but different raw totals -> distinct keys (the
+    # total-token term); identical pools always collide
+    assert key == signature_key(tune_signature(XLA_PROBLEM, DIMS, pool,
+                                               DEFAULT_SPACE))
+    assert key != signature_key(tune_signature(XLA_PROBLEM, DIMS, other,
+                                               DEFAULT_SPACE))
+    sig_a = tune_signature(XLA_PROBLEM, DIMS, pool, DEFAULT_SPACE)
+    sig_b = tune_signature(XLA_PROBLEM, DIMS, same_bucket, DEFAULT_SPACE)
+    assert sig_a["pool"]["qlens"] == sig_b["pool"]["qlens"]
+
+
+def test_disabled_cache_never_persists(tmp_path):
+    cache = ResultCache(None)
+    res = tune(_pool(2), XLA_PROBLEM, DIMS, space=SMALL_SPACE, top_k=2,
+               cache=cache)
+    assert not res.cached
+    assert cache.hits == 0
+    assert not list(tmp_path.iterdir())
+
+
+# --------------------------------------------------------------------- #
+# end-to-end: tuned RunConfig is applicable and spearman is sane
+# --------------------------------------------------------------------- #
+def test_tuned_run_config_round_trips():
+    from repro.configs import RunConfig, run_config_from_dict
+
+    res = tune(_pool(4), XLA_PROBLEM, DIMS, space=SMALL_SPACE, top_k=4,
+               base_run=RunConfig(arch="starcoder2_3b", seed=7))
+    run = run_config_from_dict(res.run_config)
+    assert isinstance(run, RunConfig)
+    assert run.arch == "starcoder2_3b"
+    assert run.seed == 7
+    assert run.cp_strategy == res.best.cp_strategy
+    assert run.cp_overlap == res.best.cp_overlap
+    assert run.kernel_grid == res.best.kernel_grid
+    assert run.dispatch == res.best.dispatch
+    assert run.kv_comm_dtype == res.best.kv_comm_dtype
+
+
+def test_spearman_basics():
+    assert spearman([1, 2, 3], [10, 20, 30]) == pytest.approx(1.0)
+    assert spearman([1, 2, 3], [30, 20, 10]) == pytest.approx(-1.0)
+    assert spearman([1.0, 1.0], [1.0, 1.0]) == pytest.approx(1.0)
+    assert spearman([1.0, 1.0], [1.0, 2.0]) == pytest.approx(0.0)
